@@ -1,0 +1,79 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for rust.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects; the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and DESIGN.md §2.
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Writes ``<name>.hlo.txt`` per entry point plus ``manifest.txt`` listing
+the names the rust engine should compile.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.glm import F_PAD, M_TILE
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_points():
+    """(name, function, example-arg shapes) for every artifact."""
+    f32 = jnp.float32
+    mat = jax.ShapeDtypeStruct((M_TILE, F_PAD), f32)
+    vec_m = jax.ShapeDtypeStruct((M_TILE,), f32)
+    vec_f = jax.ShapeDtypeStruct((F_PAD,), f32)
+    return [
+        ("wx", model.wx, (mat, vec_f)),
+        ("exp", model.exp, (vec_m,)),
+        ("xtd", model.xtd, (mat, vec_m)),
+        ("lr_grad", model.lr_grad, (mat, vec_f, vec_m, vec_m)),
+        ("pr_grad", model.pr_grad, (mat, vec_f, vec_m, vec_m)),
+        ("lr_loss", model.lr_loss, (vec_m, vec_m, vec_m)),
+        ("pr_loss_terms", model.pr_loss_terms, (vec_m, vec_m, vec_m)),
+    ]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = []
+    for name, fn, specs in entry_points():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        names.append(name)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("# AOT entry points compiled by rust/src/runtime/engine.rs\n")
+        for name in names:
+            f.write(name + "\n")
+    print(f"wrote {manifest} ({len(names)} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Layer-1 Pallas kernels: the per-party GLM compute hot spots.
+
+Every kernel is written TPU-idiomatically (feature dimension padded to a
+lane multiple, sample dimension tiled into VMEM-sized blocks, reductions
+accumulated across the grid) but lowered with ``interpret=True`` — the CPU
+PJRT plugin cannot execute Mosaic custom-calls, so interpret mode is the
+correctness path and the BlockSpec structure documents the intended TPU
+schedule (DESIGN.md §Hardware-Adaptation).
+
+Shapes are static: ``M_TILE × F_PAD`` tiles, f32. The rust runtime pads
+and loops (rust/src/runtime/engine.rs mirrors these constants).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height per grid step. 128 rows × 32 features × 4 B = 16 KiB of
+# X per step — small against ~16 MiB VMEM, leaving room for double
+# buffering on a real TPU.
+BLOCK_M = 128
+# Tile heights the rust engine feeds (must be a multiple of BLOCK_M).
+M_TILE = 1024
+# Feature pad: one TPU lane-width worth of f32.
+F_PAD = 32
+
+
+def _wx_kernel(x_ref, w_ref, o_ref):
+    """One row-tile of the linear predictor: z = X · w."""
+    o_ref[...] = x_ref[...] @ w_ref[...]
+
+
+def wx(x, w):
+    """``z = X·w`` — the per-party ``W_p X_p`` (paper §4.1, Protocol 1's
+    input)."""
+    m, f = x.shape
+    return pl.pallas_call(
+        _wx_kernel,
+        grid=(m // BLOCK_M,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, f), lambda i: (i, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def _xtd_kernel(x_ref, d_ref, o_ref):
+    """Grid-accumulated gradient reduction: g += X_tileᵀ · d_tile."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...].T @ d_ref[...]
+
+
+def xtd(x, d):
+    """``g = Xᵀ·d`` — eq. (5)'s gradient aggregation."""
+    m, f = x.shape
+    return pl.pallas_call(
+        _xtd_kernel,
+        grid=(m // BLOCK_M,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, f), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_M,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((f,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((f,), x.dtype),
+        interpret=True,
+    )(x, d)
+
+
+def _exp_kernel(z_ref, o_ref):
+    o_ref[...] = jnp.exp(z_ref[...])
+
+
+def exp(z):
+    """Elementwise ``e^z`` — Poisson's per-party ``e^{W_p X_p}``."""
+    (m,) = z.shape
+    return pl.pallas_call(
+        _exp_kernel,
+        grid=(m // BLOCK_M,),
+        in_specs=[pl.BlockSpec((BLOCK_M,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK_M,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), z.dtype),
+        interpret=True,
+    )(z)
+
+
+def _fused_grad_kernel(x_ref, w_ref, y_ref, mask_ref, o_ref, *, kind):
+    """Fused gradient: one HBM→VMEM pass over X computes z, the
+    gradient-operator d (eq. 7/8), and the partial Xᵀd reduction.
+
+    ``mask`` zeroes padded rows so they contribute nothing to g.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    z = x @ w_ref[...]
+    if kind == "lr":
+        d = 0.25 * z - 0.5 * y_ref[...]
+    elif kind == "pr":
+        d = jnp.exp(z) - y_ref[...]
+    else:  # linear
+        d = z - y_ref[...]
+    d = d * mask_ref[...]
+    o_ref[...] += x.T @ d
+
+
+def fused_grad(x, w, y, mask, kind="lr"):
+    """``g_m = Xᵀ·(m·d)`` fused (the paper's eq. 5 with eq. 7/8 inlined).
+
+    Returns the *unnormalized* gradient (caller divides by the true batch
+    size, mirroring the rust fixed-point convention). For LR, ``y`` must
+    be ±1-encoded.
+    """
+    m, f = x.shape
+    kernel = functools.partial(_fused_grad_kernel, kind=kind)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // BLOCK_M,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, f), lambda i: (i, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_M,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_M,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((f,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((f,), x.dtype),
+        interpret=True,
+    )(x, w, y, mask)

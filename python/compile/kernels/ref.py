@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness reference.
+
+No Pallas, no tiling: straight dense math. ``python/tests/test_kernels.py``
+sweeps shapes and dtypes with hypothesis and asserts the kernels match
+these to f32 tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def wx(x, w):
+    """z = X·w."""
+    return x @ w
+
+
+def xtd(x, d):
+    """g = Xᵀ·d."""
+    return x.T @ d
+
+
+def exp(z):
+    """Elementwise exponential."""
+    return jnp.exp(z)
+
+
+def gradient_operator(z, y, kind="lr"):
+    """The paper's eq. (7)/(8) gradient-operator, unnormalized (m·d)."""
+    if kind == "lr":
+        return 0.25 * z - 0.5 * y
+    if kind == "pr":
+        return jnp.exp(z) - y
+    return z - y
+
+
+def fused_grad(x, w, y, mask, kind="lr"):
+    """Unnormalized gradient g_m = Xᵀ·(m·d) with padded rows masked."""
+    z = x @ w
+    d = gradient_operator(z, y, kind) * mask
+    return x.T @ d
+
+
+def lr_loss_taylor(z, y):
+    """Second-order MacLaurin of eq. (1), matching the rust Protocol 4."""
+    t = y * z
+    return jnp.mean(jnp.log(2.0) - 0.5 * t + 0.125 * t * t)
+
+
+def pr_loss(z, y, ln_y_factorial):
+    """Negative Poisson log-likelihood, eq. (3)."""
+    return jnp.mean(-(y * z - jnp.exp(z) - ln_y_factorial))

@@ -1,0 +1,63 @@
+"""Layer-2 JAX model: per-party GLM compute graphs over the L1 kernels.
+
+Each public function here is an AOT entry point — ``aot.py`` lowers them
+at the fixed artifact shapes (``M_TILE × F_PAD``) to HLO text that the
+rust runtime loads through PJRT. Every function returns a 1-tuple because
+the lowering uses ``return_tuple=True`` (the rust side unwraps with
+``to_tuple1``, see /opt/xla-example/load_hlo).
+
+Python runs only at build time; nothing in this package is imported on
+the request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import glm as kernels
+
+
+def wx(x, w):
+    """Per-party linear predictor ``z = W_p X_p`` (Protocol 1 input)."""
+    return (kernels.wx(x, w),)
+
+
+def exp(z):
+    """Poisson's per-party ``e^{W_p X_p}``."""
+    return (kernels.exp(z),)
+
+
+def xtd(x, d):
+    """Plaintext gradient aggregation ``g = Xᵀ·d`` (eq. 5) — the
+    baselines'/evaluation path."""
+    return (kernels.xtd(x, d),)
+
+
+def lr_grad(x, w, y, mask):
+    """Fused unnormalized LR gradient (eq. 5 + eq. 7): one pass over X.
+
+    ``y`` is ±1-encoded; ``mask`` zeroes padded rows.
+    """
+    return (kernels.fused_grad(x, w, y, mask, kind="lr"),)
+
+
+def pr_grad(x, w, y, mask):
+    """Fused unnormalized PR gradient (eq. 5 + eq. 8)."""
+    return (kernels.fused_grad(x, w, y, mask, kind="pr"),)
+
+
+def lr_loss(z, y, mask):
+    """Masked LR Taylor loss *sum* (caller divides by the true m).
+
+    Uses the same second-order MacLaurin as rust Protocol 4 so the two
+    paths are comparable to fixed-point tolerance.
+    """
+    t = y * z
+    per = (jnp.log(2.0) - 0.5 * t + 0.125 * t * t) * mask
+    return (jnp.sum(per),)
+
+
+def pr_loss_terms(z, y, mask):
+    """Masked Poisson loss aggregates ``Σ y·z − Σ e^z`` (C adds the
+    ``ln y!`` constant in plaintext, mirroring Protocol 4)."""
+    eterm = jnp.exp(z) * mask
+    yterm = y * z * mask
+    return (jnp.sum(yterm) - jnp.sum(eterm),)

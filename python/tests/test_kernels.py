@@ -1,0 +1,105 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps tile-multiple shapes and value ranges; assert_allclose
+at f32 tolerance. This is the build-time gate `make test` runs before the
+artifacts are trusted by the rust side.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import glm, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, lo=-3.0, hi=3.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape), dtype=jnp.float32)
+
+
+shapes = st.tuples(
+    st.integers(1, 8).map(lambda k: k * glm.BLOCK_M),  # m: tile multiples
+    st.sampled_from([4, 8, 16, glm.F_PAD]),  # f
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1))
+def test_wx_matches_ref(shape, seed):
+    m, f = shape
+    x, w = rand((m, f), seed), rand((f,), seed + 1)
+    np.testing.assert_allclose(glm.wx(x, w), ref.wx(x, w), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1))
+def test_xtd_matches_ref(shape, seed):
+    m, f = shape
+    x, d = rand((m, f), seed), rand((m,), seed + 2)
+    np.testing.assert_allclose(glm.xtd(x, d), ref.xtd(x, d), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 8).map(lambda k: k * glm.BLOCK_M),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_exp_matches_ref(m, seed):
+    z = rand((m,), seed, lo=-5.0, hi=3.0)
+    np.testing.assert_allclose(glm.exp(z), ref.exp(z), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    shape=shapes,
+    seed=st.integers(0, 2**31 - 1),
+    kind=st.sampled_from(["lr", "pr", "linear"]),
+)
+def test_fused_grad_matches_ref(shape, seed, kind):
+    m, f = shape
+    x = rand((m, f), seed)
+    w = rand((f,), seed + 1, lo=-0.5, hi=0.5)
+    if kind == "lr":
+        y = jnp.sign(rand((m,), seed + 2)) .astype(jnp.float32)
+    else:
+        y = rand((m,), seed + 2, lo=0.0, hi=4.0).round()
+    mask = (rand((m,), seed + 3, lo=0.0, hi=1.0) > 0.2).astype(jnp.float32)
+    got = glm.fused_grad(x, w, y, mask, kind=kind)
+    want = ref.fused_grad(x, w, y, mask, kind=kind)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_fused_grad_mask_zeroes_padding():
+    m, f = glm.M_TILE, 8
+    x = rand((m, f), 7)
+    w = rand((f,), 8, lo=-0.5, hi=0.5)
+    y = jnp.ones((m,), jnp.float32)
+    # only the first 100 rows are real
+    mask = jnp.asarray(np.arange(m) < 100, jnp.float32)
+    got = glm.fused_grad(x, w, y, mask, kind="lr")
+    want = ref.fused_grad(x[:100], w, y[:100], jnp.ones((100,), jnp.float32), kind="lr")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_gradient_operator_matches_paper_equations():
+    z = jnp.asarray([0.4, -0.2], jnp.float32)
+    y = jnp.asarray([1.0, -1.0], jnp.float32)
+    d = ref.gradient_operator(z, y, "lr")
+    np.testing.assert_allclose(d, [0.25 * 0.4 - 0.5, 0.25 * -0.2 + 0.5], rtol=1e-6)
+    yc = jnp.asarray([1.0, 3.0], jnp.float32)
+    d = ref.gradient_operator(z, yc, "pr")
+    np.testing.assert_allclose(d, np.exp([0.4, -0.2]) - [1.0, 3.0], rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lr_loss_taylor_close_to_exact_near_zero(seed):
+    z = rand((256,), seed, lo=-0.3, hi=0.3)
+    y = jnp.sign(rand((256,), seed + 1)).astype(jnp.float32)
+    taylor = ref.lr_loss_taylor(z, y)
+    exact = jnp.mean(jnp.log1p(jnp.exp(-y * z)))
+    assert abs(float(taylor) - float(exact)) < 5e-3

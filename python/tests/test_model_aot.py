@@ -1,0 +1,75 @@
+"""L2 model + AOT lowering tests: entry-point shapes, HLO text emission,
+and numerical agreement between the lowered graphs and the oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import glm, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, lo=-2.0, hi=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape), dtype=jnp.float32)
+
+
+def test_every_entry_point_lowers_to_hlo_text():
+    for name, fn, specs in aot.entry_points():
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text, f"{name}: missing entry computation"
+        # interpret-mode pallas must not leave Mosaic custom-calls behind
+        assert "mosaic" not in text.lower(), f"{name}: un-runnable custom call"
+
+
+def test_entry_point_shapes_match_engine_constants():
+    # rust/src/runtime/engine.rs hardcodes these; drift breaks the bridge
+    assert glm.M_TILE == 1024
+    assert glm.F_PAD == 32
+    names = [name for name, _, _ in aot.entry_points()]
+    assert names[:3] == ["wx", "exp", "xtd"]
+
+
+def test_model_wx_and_grad_agree_with_ref():
+    x = rand((glm.M_TILE, glm.F_PAD), 1)
+    w = rand((glm.F_PAD,), 2, lo=-0.5, hi=0.5)
+    y = jnp.sign(rand((glm.M_TILE,), 3)).astype(jnp.float32)
+    mask = jnp.ones((glm.M_TILE,), jnp.float32)
+    (z,) = model.wx(x, w)
+    np.testing.assert_allclose(z, ref.wx(x, w), rtol=1e-5, atol=1e-5)
+    (g,) = model.lr_grad(x, w, y, mask)
+    np.testing.assert_allclose(g, ref.fused_grad(x, w, y, mask, "lr"), rtol=1e-4, atol=1e-3)
+
+
+def test_loss_entry_points():
+    z = rand((glm.M_TILE,), 5, lo=-0.5, hi=0.5)
+    y = jnp.sign(rand((glm.M_TILE,), 6)).astype(jnp.float32)
+    mask = jnp.ones((glm.M_TILE,), jnp.float32)
+    (lsum,) = model.lr_loss(z, y, mask)
+    want = float(ref.lr_loss_taylor(z, y)) * glm.M_TILE
+    np.testing.assert_allclose(float(lsum), want, rtol=1e-4)
+
+    yc = rand((glm.M_TILE,), 7, lo=0.0, hi=3.0).round()
+    (terms,) = model.pr_loss_terms(z, yc, mask)
+    want = float(jnp.sum(yc * z) - jnp.sum(jnp.exp(z)))
+    np.testing.assert_allclose(float(terms), want, rtol=1e-3)
+
+
+def test_aot_writes_manifest(tmp_path):
+    import subprocess
+    import sys
+
+    out = tmp_path / "artifacts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        check=True,
+        cwd=str(__import__("pathlib").Path(__file__).resolve().parents[1]),
+    )
+    manifest = (out / "manifest.txt").read_text()
+    for name, _, _ in aot.entry_points():
+        assert name in manifest
+        assert (out / f"{name}.hlo.txt").exists()

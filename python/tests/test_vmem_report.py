@@ -1,0 +1,23 @@
+"""Structural checks on the L1 resource estimates."""
+
+from compile.vmem_report import kernel_specs, VMEM_BYTES
+
+
+def test_every_kernel_fits_vmem_with_double_buffer_headroom():
+    for name, vmem, _ in kernel_specs():
+        # require at least 8 buffers' worth of headroom
+        assert vmem * 8 < VMEM_BYTES, f"{name} too fat for double buffering"
+
+
+def test_fused_kernel_not_larger_than_parts():
+    specs = {name: vmem for name, vmem, _ in kernel_specs()}
+    # fusing must not inflate the footprint beyond wx + xtd combined
+    assert specs["fused_grad"] <= specs["wx"] + specs["xtd"]
+
+
+def test_report_runs(capsys):
+    from compile import vmem_report
+
+    vmem_report.main()
+    out = capsys.readouterr().out
+    assert "MXU" in out and "VMEM" in out

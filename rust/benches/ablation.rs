@@ -1,0 +1,102 @@
+//! Ablation studies over the design choices DESIGN.md calls out:
+//!
+//! 1. **Key size** — Paillier 256/512/1024 bits: ciphertext traffic and
+//!    HE compute scale quadratically-ish; accuracy must not move (the
+//!    protocol is exact regardless of key size).
+//! 2. **Batch size** — comm per iteration is linear in the batch; runtime
+//!    amortizes fixed per-iteration costs.
+//! 3. **CP selection** — `Fixed (C,B1)` vs `Rotate` (anti-collusion,
+//!    §4.3): rotation pushes C out of the CP pair in some iterations,
+//!    adding the non-CP double-product cost to C.
+//! 4. **Obfuscator pool** — pre-generated `rⁿ` vs fresh per encryption.
+//!
+//! Run: `cargo bench --bench ablation` (EFMVFL_BENCH_FAST=1 to shrink).
+
+use efmvfl::benchkit::print_table;
+use efmvfl::coordinator::{train, TrainConfig};
+use efmvfl::data::{split_vertical, synthetic};
+use efmvfl::metrics;
+use efmvfl::protocols::CpSelection;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("EFMVFL_BENCH_FAST").is_ok();
+    let samples = if fast { 2_000 } else { 8_000 };
+    let iters = if fast { 4 } else { 10 };
+
+    let mut data = synthetic::credit_default_like(samples, 16, 13);
+    data.standardize();
+    let mut rng = efmvfl::crypto::prng::ChaChaRng::from_seed(13);
+    let (train_set, test_set) = data.train_test_split(0.7, &mut rng);
+    let split = split_vertical(&train_set, 2);
+    let base = TrainConfig::logistic(2)
+        .with_iterations(iters)
+        .with_batch(Some(512))
+        .with_seed(13);
+
+    let auc_of = |w: &[f64]| {
+        let wx = efmvfl::linalg::gemv(&test_set.x, w);
+        metrics::auc(&test_set.y, &wx)
+    };
+
+    // --- 1. key size ---
+    println!("\n[ablation 1] Paillier key size (batch 512, {iters} iters)");
+    let mut rows = Vec::new();
+    for bits in [256usize, 512, 1024] {
+        let rep = train(&split, &base.clone().with_key_bits(bits))?;
+        rows.push(vec![
+            format!("{bits}"),
+            format!("{:.2}", rep.comm_mb),
+            format!("{:.2}", rep.runtime_secs()),
+            format!("{:.3}", auc_of(&rep.full_weights())),
+        ]);
+    }
+    print_table(&["key bits", "comm(MB)", "runtime(s)", "auc"], &rows);
+
+    // --- 2. batch size ---
+    println!("\n[ablation 2] mini-batch size (512-bit keys)");
+    let mut rows = Vec::new();
+    for batch in [128usize, 256, 512, 1024] {
+        let cfg = base.clone().with_key_bits(512).with_batch(Some(batch));
+        let rep = train(&split, &cfg)?;
+        rows.push(vec![
+            format!("{batch}"),
+            format!("{:.2}", rep.comm_mb),
+            format!("{:.2}", rep.runtime_secs()),
+            format!("{:.4}", rep.losses.last().unwrap()),
+        ]);
+    }
+    print_table(&["batch", "comm(MB)", "runtime(s)", "final loss"], &rows);
+
+    // --- 3. CP selection (3 parties so rotation matters) ---
+    println!("\n[ablation 3] computing-party selection (3 parties)");
+    let split3 = split_vertical(&train_set, 3);
+    let mut rows = Vec::new();
+    for (name, sel) in [("fixed (C,B1)", CpSelection::Fixed), ("rotate", CpSelection::Rotate)] {
+        let mut cfg = base.clone().with_key_bits(512);
+        cfg.cp_selection = sel;
+        let rep = train(&split3, &cfg)?;
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.2}", rep.comm_mb),
+            format!("{:.2}", rep.runtime_secs()),
+            format!("{:.3}", auc_of(&rep.full_weights())),
+        ]);
+    }
+    print_table(&["cp selection", "comm(MB)", "runtime(s)", "auc"], &rows);
+
+    // --- 4. obfuscator pool ---
+    println!("\n[ablation 4] obfuscator pool (512-bit keys)");
+    let mut rows = Vec::new();
+    for pool in [0usize, 8192] {
+        let mut cfg = base.clone().with_key_bits(512);
+        cfg.obfuscator_pool = pool;
+        let rep = train(&split, &cfg)?;
+        rows.push(vec![
+            if pool == 0 { "fresh".into() } else { format!("pool {pool}") },
+            format!("{:.2}", rep.wall_secs),
+            format!("{:.2}", rep.runtime_secs()),
+        ]);
+    }
+    print_table(&["obfuscators", "compute(s)", "runtime(s)"], &rows);
+    Ok(())
+}

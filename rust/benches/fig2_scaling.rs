@@ -1,0 +1,90 @@
+//! **Figure 2 reproduction** — EFMVFL-LR runtime (upper) and
+//! communication (lower) as the number of participants grows, host B1's
+//! data replicated to new parties (paper §5.1).
+//!
+//! Paper's shape targets:
+//! - comm grows **linearly** in the party count (lower panel's fitted
+//!   line) — we fit a line and report R²;
+//! - runtime **jumps** from 2 → 3 parties (non-CP parties do 2 cipher
+//!   products instead of 1 — Algorithm 1) then flattens.
+//!
+//! Emits `out/fig2_scaling.csv` (parties, comm_mb, runtime_s).
+
+use efmvfl::benchkit::{print_table, BenchScale};
+use efmvfl::coordinator::{train, TrainConfig};
+use efmvfl::data::{csv, split_vertical, synthetic};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let scale = BenchScale::from_env();
+    let samples = scale.samples.min(10_000);
+    let mut data = synthetic::credit_default_like(samples, 16, 7);
+    data.standardize();
+    let base = split_vertical(&data, 2);
+    println!(
+        "Figure 2: EFMVFL-LR scaling, {} samples, batch {}, {} iters, {}-bit keys\n",
+        samples, scale.batch, scale.iterations, scale.key_bits
+    );
+
+    let max_parties = 6usize;
+    let mut rows = Vec::new();
+    let (mut parties_col, mut comm_col, mut rt_col) = (Vec::new(), Vec::new(), Vec::new());
+    for parties in 2..=max_parties {
+        let split = base.replicate_hosts(parties - 1);
+        let cfg = TrainConfig::logistic(parties)
+            .with_key_bits(scale.key_bits)
+            .with_iterations(scale.iterations)
+            .with_batch(Some(scale.batch))
+            .with_seed(7);
+        eprintln!("{parties} parties ...");
+        let rep = train(&split, &cfg)?;
+        rows.push(vec![
+            parties.to_string(),
+            format!("{:.2}", rep.comm_mb),
+            format!("{:.2}", rep.runtime_secs()),
+        ]);
+        parties_col.push(parties as f64);
+        comm_col.push(rep.comm_mb);
+        rt_col.push(rep.runtime_secs());
+    }
+    print_table(&["parties", "comm(MB)", "runtime(s)"], &rows);
+
+    // linear fit for the comm panel (paper fits a straight line)
+    let (slope, intercept, r2) = linfit(&parties_col, &comm_col);
+    println!("\ncomm fit: {slope:.2}·k + {intercept:.2} MB,  R² = {r2:.4}  (paper: linear)");
+    let jump = rt_col[1] / rt_col[0];
+    let tail_flat = rt_col.last().unwrap() / rt_col[1];
+    println!(
+        "runtime 2→3 parties: ×{jump:.2} jump; 3→{max_parties} parties: ×{tail_flat:.2} \
+         (paper: sudden increase then flattens)"
+    );
+
+    csv::write_columns(
+        Path::new("out/fig2_scaling.csv"),
+        &["parties", "comm_mb", "runtime_s"],
+        &[parties_col, comm_col, rt_col],
+    )?;
+    println!("written to out/fig2_scaling.csv");
+    Ok(())
+}
+
+/// Least-squares line fit returning (slope, intercept, R²).
+fn linfit(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    let n = x.len() as f64;
+    let (sx, sy): (f64, f64) = (x.iter().sum(), y.iter().sum());
+    let sxx: f64 = x.iter().map(|v| v * v).sum();
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let intercept = (sy - slope * sx) / n;
+    let mean_y = sy / n;
+    let ss_tot: f64 = y.iter().map(|v| (v - mean_y) * (v - mean_y)).sum();
+    let ss_res: f64 = x
+        .iter()
+        .zip(y)
+        .map(|(a, b)| {
+            let p = slope * a + intercept;
+            (b - p) * (b - p)
+        })
+        .sum();
+    (slope, intercept, 1.0 - ss_res / ss_tot)
+}

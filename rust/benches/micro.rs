@@ -1,0 +1,127 @@
+//! Micro benchmarks over the substrates — the §Perf profiling surface.
+//!
+//! Covers every hot-path primitive: bignum modpow (with/without the
+//! fixed-base table), Paillier enc/dec/ops (pooled and unpooled), the
+//! Protocol 3 HE matvec, MPC share ops, and native-vs-PJRT dense math.
+//! Run with `cargo bench --bench micro`.
+
+use efmvfl::benchkit::{fmt_secs, print_table, time_fn};
+use efmvfl::bignum::{BigUint, Montgomery, PowTable};
+use efmvfl::crypto::he_ops;
+use efmvfl::crypto::paillier::Keypair;
+use efmvfl::crypto::prng::ChaChaRng;
+use efmvfl::linalg::{self, Matrix};
+use efmvfl::mpc::beaver::TripleDealer;
+use efmvfl::mpc::share::share_f64;
+use efmvfl::runtime::engine::XlaEngine;
+use efmvfl::runtime::Compute;
+
+fn main() {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut add = |name: &str, per_op: f64, note: &str| {
+        rows.push(vec![name.to_string(), fmt_secs(per_op), note.to_string()]);
+    };
+
+    let mut rng = ChaChaRng::from_seed(99);
+
+    // ---- bignum ----
+    for bits in [512usize, 1024, 2048] {
+        let mut ml: Vec<u64> = (0..bits / 64).map(|_| rng.next_u64()).collect();
+        ml[0] |= 1;
+        let m = BigUint::from_limbs(ml);
+        let mont = Montgomery::new(&m);
+        let base = rng.next_biguint_below(&m);
+        let exp = rng.next_biguint_exact_bits(bits);
+        let (t, _) = time_fn(0.4, 50, || {
+            std::hint::black_box(mont.pow(&base, &exp));
+        });
+        add(&format!("modpow {bits}b full-exp"), t, "Montgomery 4-bit window");
+        let table = PowTable::new(&mont, &base);
+        let (t, _) = time_fn(0.3, 200, || {
+            std::hint::black_box(table.pow_u64(0xfffff));
+        });
+        add(&format!("modpow {bits}b 20-bit exp (table)"), t, "Protocol 3 exponent size");
+    }
+
+    // ---- Paillier ----
+    for bits in [512usize, 1024] {
+        let kp = Keypair::generate(bits, &mut rng);
+        let (t, _) = time_fn(0.5, 40, || {
+            std::hint::black_box(kp.pk.encrypt_i128(123_456, &mut rng));
+        });
+        add(&format!("paillier-{bits} encrypt"), t, "fresh obfuscator");
+        kp.pk.precompute_pool(1000, &mut rng);
+        let (t, _) = time_fn(0.3, 200, || {
+            std::hint::black_box(kp.pk.encrypt_i128(123_456, &mut rng));
+        });
+        add(&format!("paillier-{bits} encrypt (pooled)"), t, "§Perf pool optimization");
+        let ct = kp.pk.encrypt_i128(7, &mut rng);
+        let (t, _) = time_fn(0.4, 40, || {
+            std::hint::black_box(kp.sk.decrypt_raw(&ct));
+        });
+        add(&format!("paillier-{bits} decrypt"), t, "CRT");
+        let ct2 = kp.pk.encrypt_i128(8, &mut rng);
+        let (t, _) = time_fn(0.2, 500, || {
+            std::hint::black_box(kp.pk.add(&ct, &ct2));
+        });
+        add(&format!("paillier-{bits} ct+ct"), t, "");
+        let (t, _) = time_fn(0.3, 100, || {
+            std::hint::black_box(kp.pk.mul_plain_i128(&ct, 0xfffff));
+        });
+        add(&format!("paillier-{bits} ct×20-bit"), t, "matvec inner op");
+    }
+
+    // ---- Protocol 3 HE matvec ----
+    {
+        let kp = Keypair::generate(512, &mut rng);
+        let m = 256;
+        let x = Matrix::random(m, 12, &mut rng);
+        let cts: Vec<_> = (0..m)
+            .map(|i| kp.pk.encrypt_i128((i as i128 - 128) << 20, &mut rng))
+            .collect();
+        let (t, _) = time_fn(2.0, 5, || {
+            std::hint::black_box(he_ops::he_matvec_t(&kp.pk, &cts, &x));
+        });
+        add("he_matvec_t 256×12 (512b)", t, &format!("{} per ct", fmt_secs(t / m as f64)));
+    }
+
+    // ---- MPC ----
+    {
+        let vals: Vec<f64> = (0..4096).map(|i| i as f64 * 0.25).collect();
+        let (t, _) = time_fn(0.2, 200, || {
+            std::hint::black_box(share_f64(&vals, &mut rng));
+        });
+        add("share 4096-vector", t, "Protocol 1 core");
+        let mut dealer = TripleDealer::new(5);
+        let (t, _) = time_fn(0.2, 200, || {
+            std::hint::black_box(dealer.deal(4096));
+        });
+        add("beaver deal 4096", t, "offline phase");
+    }
+
+    // ---- dense math: native vs PJRT ----
+    {
+        let x = Matrix::random(2048, 24, &mut rng);
+        let w: Vec<f64> = (0..24).map(|_| rng.next_gaussian()).collect();
+        let (t_native, _) = time_fn(0.3, 200, || {
+            std::hint::black_box(linalg::gemv(&x, &w));
+        });
+        add("gemv 2048×24 native", t_native, "");
+        match XlaEngine::load_default() {
+            Ok(eng) => {
+                let (t_xla, _) = time_fn(0.5, 100, || {
+                    std::hint::black_box(eng.gemv(&x, &w));
+                });
+                add(
+                    "gemv 2048×24 pjrt",
+                    t_xla,
+                    &format!("{:.1}× native", t_xla / t_native),
+                );
+            }
+            Err(_) => add("gemv 2048×24 pjrt", f64::NAN, "artifacts missing"),
+        }
+    }
+
+    println!();
+    print_table(&["operation", "median", "note"], &rows);
+}

@@ -1,0 +1,77 @@
+//! **Table 1 reproduction** — LR on credit-like data, 2 parties:
+//! `auc / ks / comm / runtime` for TP-LR, SS-LR, SS-HE-LR, EFMVFL-LR.
+//!
+//! Paper's row values (real UCI data, 3 physical servers, CKKS-based
+//! TP-LR): TP 0.712/0.371/14.20MB/34.79s · SS 0.719/0.363/181.8MB/71.05s ·
+//! SS-HE 0.702/0.367/85.30MB/37.6s · EFMVFL 0.712/0.372/26.45MB/23.29s.
+//! Reproduction target is the *shape*: EFMVFL fastest; SS comm ≫ SS-HE
+//! comm > EFMVFL comm (see EXPERIMENTS.md for the measured table and the
+//! TP-comm caveat — our TP uses Paillier, not packed CKKS).
+//!
+//! `EFMVFL_BENCH_FAST=1` shrinks the workload; `EFMVFL_PAPER=1` switches
+//! to 1024-bit keys.
+
+use efmvfl::baselines::Framework;
+use efmvfl::benchkit::{print_table, BenchScale};
+use efmvfl::coordinator::TrainConfig;
+use efmvfl::data::{csv, split_vertical, synthetic};
+use efmvfl::glm::GlmKind;
+use efmvfl::{linalg, metrics};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let scale = BenchScale::from_env();
+    let mut data = synthetic::credit_default_like(scale.samples, 23, 7);
+    data.standardize();
+    let mut rng = efmvfl::crypto::prng::ChaChaRng::from_seed(7);
+    let (train_set, test_set) = data.train_test_split(0.7, &mut rng);
+    let split = split_vertical(&train_set, 2);
+    println!(
+        "Table 1: LR on {} ({} train / {} test, 23 features, {}-bit keys, batch {}, {} iters)\n",
+        data.name, train_set.len(), test_set.len(),
+        scale.key_bits, scale.batch, scale.iterations
+    );
+
+    let cfg = TrainConfig::logistic(2)
+        .with_key_bits(scale.key_bits)
+        .with_iterations(scale.iterations)
+        .with_batch(Some(scale.batch))
+        .with_seed(7);
+
+    let frameworks = [
+        Framework::ThirdParty,
+        Framework::SecretShare,
+        Framework::SsHe,
+        Framework::Efmvfl,
+    ];
+    let mut rows = Vec::new();
+    let mut csv_cols: Vec<Vec<f64>> = vec![Vec::new(); 4];
+    for fw in frameworks {
+        let label = fw.label(GlmKind::Logistic);
+        eprintln!("running {label} ...");
+        let rep = fw.train(&split, &cfg)?;
+        let wx = linalg::gemv(&test_set.x, &rep.full_weights());
+        let auc = metrics::auc(&test_set.y, &wx);
+        let ks = metrics::ks(&test_set.y, &wx);
+        rows.push(vec![
+            label,
+            format!("{auc:.3}"),
+            format!("{ks:.3}"),
+            format!("{:.2}mb", rep.comm_mb),
+            format!("{:.2}s", rep.runtime_secs()),
+        ]);
+        csv_cols[0].push(auc);
+        csv_cols[1].push(ks);
+        csv_cols[2].push(rep.comm_mb);
+        csv_cols[3].push(rep.runtime_secs());
+    }
+
+    print_table(&["framework", "auc", "ks", "comm", "runtime"], &rows);
+    csv::write_columns(
+        Path::new("out/table1_lr.csv"),
+        &["auc", "ks", "comm_mb", "runtime_s"],
+        &csv_cols,
+    )?;
+    println!("\nwritten to out/table1_lr.csv (rows: TP, SS, SS-HE, EFMVFL)");
+    Ok(())
+}

@@ -1,0 +1,361 @@
+//! SS-HE-LR baseline — CAESAR-style (Chen et al., KDD 2021: "When
+//! homomorphic encryption marries secret sharing").
+//!
+//! Like EFMVFL it mixes secret sharing with Paillier, but it shares the
+//! **model weights** (MPC-style) instead of keeping them local: every
+//! `X·w` and `Xᵀ·d` needs an SS×plaintext *cross term* evaluated under
+//! HE in both directions. That costs ~2× EFMVFL's ciphertext traffic per
+//! iteration (4 HE vector exchanges vs 2) and is what Table 1's
+//! SS-HE-LR row reflects. It also can't keep weights local, which is why
+//! the paper argues it "is hard to extend to multiple parties".
+//!
+//! Cross-term protocol (share conversion; DESIGN.md §7):
+//! `v = X·⟨w⟩_Q` is computed under Q's key by the X-owner P, masked with
+//! a uniform 180-bit `R`; Q decrypts `v + R` and keeps `(v+R) mod 2⁶⁴`
+//! as its ring share, P keeps `(−R) mod 2⁶⁴` — integer masking commutes
+//! with the mod-2⁶⁴ reduction, so the shares reconstruct `v mod 2⁶⁴`.
+
+use crate::coordinator::party::batch_rows;
+use crate::coordinator::{TrainConfig, TrainReport};
+use crate::crypto::he_ops::{self, MASK_BITS};
+use crate::crypto::paillier::{Ciphertext, Keypair, PublicKey};
+use crate::crypto::prng::ChaChaRng;
+use crate::data::VerticalSplit;
+use crate::glm::{to_pm1, GlmKind};
+use crate::linalg::Matrix;
+use crate::mpc::beaver::TripleDealer;
+use crate::mpc::ring::{self, Elem};
+use crate::mpc::share::{share_vec, Share};
+use crate::net::{full_mesh, Endpoint, Payload};
+use crate::protocols::mpc_online::mul_over_wire;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Ring `X_enc · v` (double scale), X pre-encoded row-major.
+fn ring_gemv(x_enc: &[Elem], m: usize, f: usize, v: &[Elem]) -> Vec<Elem> {
+    let mut out = vec![0u64; m];
+    for i in 0..m {
+        let row = &x_enc[i * f..(i + 1) * f];
+        let mut acc = 0u64;
+        for j in 0..f {
+            acc = ring::add(acc, ring::mul(row[j], v[j]));
+        }
+        out[i] = acc;
+    }
+    out
+}
+
+/// Ring `X_encᵀ · v` (double scale).
+fn ring_gemv_t(x_enc: &[Elem], m: usize, f: usize, v: &[Elem]) -> Vec<Elem> {
+    let mut out = vec![0u64; f];
+    for i in 0..m {
+        let row = &x_enc[i * f..(i + 1) * f];
+        for j in 0..f {
+            out[j] = ring::add(out[j], ring::mul(row[j], v[i]));
+        }
+    }
+    out
+}
+
+/// X-owner side of the cross term: compute `[[X·s]]` (or `[[Xᵀ·s]]`)
+/// over the peer's ciphertexts, mask, send; return our `(−R) mod 2⁶⁴`
+/// ring shares.
+fn cross_request(
+    ep: &mut Endpoint,
+    peer: usize,
+    pk_peer: &PublicKey,
+    x: &Matrix,
+    cts: &[Ciphertext],
+    row_side: bool,
+    tag: &str,
+    rng: &mut ChaChaRng,
+) -> Vec<Elem> {
+    let enc_v = if row_side {
+        he_ops::he_gemv(pk_peer, cts, x)
+    } else {
+        he_ops::he_matvec_t(pk_peer, cts, x)
+    };
+    let mut masked = Vec::with_capacity(enc_v.len());
+    let mut my_shares = Vec::with_capacity(enc_v.len());
+    for ct in &enc_v {
+        let r = rng.next_biguint_exact_bits(MASK_BITS);
+        let enc_r = pk_peer.encrypt_raw(&r.rem(&pk_peer.n), rng);
+        masked.push(pk_peer.add(ct, &enc_r));
+        my_shares.push(r.low_u64().wrapping_neg());
+    }
+    ep.send(
+        peer,
+        tag,
+        &Payload::from_ciphertexts(&masked, pk_peer.ciphertext_bytes()),
+    );
+    my_shares
+}
+
+/// Share-owner side: encrypt our share under our key, send; decrypt the
+/// masked result and keep `(v+R) mod 2⁶⁴` as our ring share.
+fn cross_respond(
+    ep: &mut Endpoint,
+    peer: usize,
+    kp: &Keypair,
+    pk: &PublicKey,
+    share: &[Elem],
+    enc_tag: &str,
+    masked_tag: &str,
+    rng: &mut ChaChaRng,
+) -> Vec<Elem> {
+    let cts = he_ops::encrypt_share_vec(pk, share, rng);
+    ep.send(
+        peer,
+        enc_tag,
+        &Payload::from_ciphertexts(&cts, pk.ciphertext_bytes()),
+    );
+    let masked = ep.recv(peer, masked_tag).to_ciphertexts();
+    masked
+        .iter()
+        .map(|ct| kp.sk.decrypt_raw(ct).low_u64())
+        .collect()
+}
+
+/// Train SS-HE-LR (two-party logistic regression, as in Table 1).
+pub fn train_ss_he(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> {
+    assert_eq!(data.n_parties(), 2, "SS-HE baseline is two-party");
+    assert_eq!(cfg.kind, GlmKind::Logistic, "SS-HE baseline implements LR");
+
+    let mut keyrng = ChaChaRng::from_seed(cfg.seed.wrapping_add(88));
+    let kps: Vec<Arc<Keypair>> = (0..2)
+        .map(|_| Arc::new(Keypair::generate(cfg.key_bits, &mut keyrng)))
+        .collect();
+    let pks: Vec<Arc<PublicKey>> = kps
+        .iter()
+        .map(|kp| Arc::new(PublicKey::from_n(kp.pk.n.clone())))
+        .collect();
+
+    let (mut endpoints, stats) = full_mesh(2);
+    let pk_bytes = (cfg.key_bits + 7) / 8;
+    stats.record(0, 1, pk_bytes);
+    stats.record(1, 0, pk_bytes);
+    let b_ep = endpoints.pop().unwrap();
+    let c_ep = endpoints.pop().unwrap();
+    let f_c = data.guest.cols;
+
+    let started = std::time::Instant::now();
+    let cpu = crate::benchkit::thread_cpu_secs;
+    let (res_c, res_b) = std::thread::scope(|scope| {
+        let hc = {
+            let x = data.guest.clone();
+            let y = data.y.clone();
+            let kps = kps.clone();
+            let pks = pks.clone();
+            scope.spawn(move || {
+                let c0 = cpu();
+                let r = run_party(c_ep, 0, x, Some(y), kps, pks, cfg);
+                (r, cpu() - c0)
+            })
+        };
+        let hb = {
+            let x = data.hosts[0].clone();
+            let kps = kps.clone();
+            let pks = pks.clone();
+            scope.spawn(move || {
+                let c0 = cpu();
+                let r = run_party(b_ep, 1, x, None, kps, pks, cfg);
+                (r, cpu() - c0)
+            })
+        };
+        (hc.join().expect("C panicked"), hb.join().expect("B panicked"))
+    });
+    let wall_secs = started.elapsed().as_secs_f64();
+
+    let (w_c, w_b) = res_c.0 .0.split_at(f_c);
+    Ok(TrainReport {
+        losses: res_c.0 .1,
+        weights: vec![w_c.to_vec(), w_b.to_vec()],
+        iterations_run: res_c.0 .2,
+        comm_mb: stats.total_mb(),
+        offline_mb: stats.offline_bytes() as f64 / 1e6,
+        msgs: stats.total_msgs(),
+        wall_secs,
+        party_cpu_secs: vec![res_c.1, res_b.1],
+        net_secs: cfg.wire.transfer_secs(stats.total_bytes(), stats.total_msgs()),
+    })
+}
+
+fn run_party(
+    mut ep: Endpoint,
+    me: usize,
+    x_own: Matrix,
+    y: Option<Vec<f64>>,
+    kps: Vec<Arc<Keypair>>,
+    pks: Vec<Arc<PublicKey>>,
+    cfg: &TrainConfig,
+) -> (Vec<f64>, Vec<f64>, usize) {
+    let peer = 1 - me;
+    let first = me == 0;
+    let mut rng = ChaChaRng::from_seed(cfg.seed.wrapping_add(90 + me as u64));
+    let m_total = x_own.rows;
+    let f_own = x_own.cols;
+
+    // exchange feature-block widths
+    ep.send(peer, "sshe:f", &Payload::Ring(vec![f_own as u64]));
+    let f_peer = ep.recv(peer, "sshe:f").into_ring()[0] as usize;
+
+    // shared weights for both blocks: start at zero shares
+    let mut w_own = Share(vec![0u64; f_own]); // my share of MY block's weights
+    let mut w_peer = Share(vec![0u64; f_peer]); // my share of the PEER block's weights
+
+    // labels shared once by C
+    let y_share = if let Some(y) = &y {
+        let enc: Vec<Elem> = y.iter().map(|&v| ring::encode(to_pm1(v))).collect();
+        let (mine, theirs) = share_vec(&enc, &mut rng);
+        ep.send(peer, "sshe:y", &Payload::Ring(theirs.0));
+        mine
+    } else {
+        Share(ep.recv(peer, "sshe:y").into_ring())
+    };
+
+    let mut losses = Vec::new();
+    let mut iters = 0;
+
+    for t in 0..cfg.iterations {
+        let rows = batch_rows(m_total, cfg.batch_size, t);
+        let xb = x_own.gather_rows(&rows);
+        let mb = xb.rows;
+        let yb = Share(rows.iter().map(|&i| y_share.0[i]).collect());
+        let x_enc: Vec<Elem> = xb.data.iter().map(|&v| ring::encode(v)).collect();
+        let mut dealer = TripleDealer::new(
+            cfg.seed ^ (t as u64 + 1).wrapping_mul(0x2545_f491_4f6c_dd1d),
+        );
+
+        // --- z = X_C·w_C + X_B·w_B (all shares, double scale pieces) ---
+        let mut z_acc = vec![0u64; mb];
+        for block in [0usize, 1] {
+            if block == me {
+                // I own X for this block: local term + cross request
+                let local = ring_gemv(&x_enc, mb, f_own, &w_own.0);
+                let cts = ep
+                    .recv(peer, &format!("sshe:z{t}:{block}:enc"))
+                    .to_ciphertexts();
+                let cross = cross_request(
+                    &mut ep, peer, &pks[peer], &xb, &cts, true,
+                    &format!("sshe:z{t}:{block}:mask"), &mut rng,
+                );
+                z_acc = ring::add_vec(&z_acc, &ring::add_vec(&local, &cross));
+            } else {
+                // peer owns X; I hold a share of the block's weights
+                let mine = cross_respond(
+                    &mut ep, peer, &kps[me], &pks[me], &w_peer.0,
+                    &format!("sshe:z{t}:{block}:enc"),
+                    &format!("sshe:z{t}:{block}:mask"), &mut rng,
+                );
+                z_acc = ring::add_vec(&z_acc, &mine);
+            }
+        }
+        let z = Share(
+            z_acc
+                .iter()
+                .map(|&s| ring::truncate_share(s, first))
+                .collect(),
+        );
+
+        // --- m·d = 0.25 z − 0.5 y (local affine on shares) ---
+        let md = z.scale_public(0.25, first).sub(&yb.scale_public(0.5, first));
+
+        // --- per-block gradients g_P = X_Pᵀ·(m·d), kept shared ---
+        for block in [0usize, 1] {
+            let g_share: Vec<Elem> = if block == me {
+                let local = ring_gemv_t(&x_enc, mb, f_own, &md.0);
+                let cts = ep
+                    .recv(peer, &format!("sshe:g{t}:{block}:enc"))
+                    .to_ciphertexts();
+                let cross = cross_request(
+                    &mut ep, peer, &pks[peer], &xb, &cts, false,
+                    &format!("sshe:g{t}:{block}:mask"), &mut rng,
+                );
+                ring::add_vec(&local, &cross)
+            } else {
+                cross_respond(
+                    &mut ep, peer, &kps[me], &pks[me], &md.0,
+                    &format!("sshe:g{t}:{block}:enc"),
+                    &format!("sshe:g{t}:{block}:mask"), &mut rng,
+                )
+            };
+            let g = Share(
+                g_share
+                    .iter()
+                    .map(|&s| ring::truncate_share(s, first))
+                    .collect(),
+            );
+            let step = g.scale_public(cfg.learning_rate / mb as f64, first);
+            if block == me {
+                w_own = w_own.sub(&step);
+            } else {
+                w_peer = w_peer.sub(&step);
+            }
+        }
+
+        // --- loss (Taylor), revealed to C ---
+        let tv = mul_over_wire(&mut ep, peer, first, &mut dealer, &z, &yb, &format!("sshe:t{t}"));
+        let t2 = mul_over_wire(&mut ep, peer, first, &mut dealer, &tv, &tv, &format!("sshe:t2{t}"));
+        let scalars = vec![tv.sum(), t2.sum()];
+        iters = t + 1;
+        let stop = if me == 0 {
+            let peer_sc = ep.recv(peer, &format!("sshe:l{t}")).into_ring();
+            let s1 = ring::decode(ring::add(scalars[0], peer_sc[0]));
+            let s2 = ring::decode(ring::add(scalars[1], peer_sc[1]));
+            let loss =
+                std::f64::consts::LN_2 - 0.5 * s1 / mb as f64 + 0.125 * s2 / mb as f64;
+            losses.push(loss);
+            let flag = loss < cfg.loss_threshold || !loss.is_finite();
+            ep.send(peer, &format!("sshe:stop{t}"), &Payload::Flag(flag));
+            flag
+        } else {
+            ep.send(peer, &format!("sshe:l{t}"), &Payload::Ring(scalars));
+            ep.recv(peer, &format!("sshe:stop{t}")).into_flag()
+        };
+        if stop {
+            break;
+        }
+    }
+
+    // reveal the full model for evaluation: exchange both blocks' shares
+    ep.send(peer, "sshe:wown", &Payload::Ring(w_own.0.clone()));
+    ep.send(peer, "sshe:wpeer", &Payload::Ring(w_peer.0.clone()));
+    let peer_of_own = Share(ep.recv(peer, "sshe:wpeer").into_ring());
+    let peer_of_peer = Share(ep.recv(peer, "sshe:wown").into_ring());
+    let my_block = crate::mpc::share::reconstruct_f64(&w_own, &peer_of_own);
+    let peer_block = crate::mpc::share::reconstruct_f64(&w_peer, &peer_of_peer);
+    // full weights in (C block, B block) order
+    let full = if me == 0 {
+        my_block.iter().chain(peer_block.iter()).copied().collect()
+    } else {
+        peer_block.iter().chain(my_block.iter()).copied().collect()
+    };
+    (full, losses, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{split_vertical, synthetic};
+    use crate::glm::train_central;
+
+    #[test]
+    fn ss_he_lr_matches_central() {
+        let mut data = synthetic::blobs(200, 27);
+        data.standardize();
+        let split = split_vertical(&data, 2);
+        let cfg = TrainConfig::logistic(2)
+            .with_key_bits(256)
+            .with_iterations(5)
+            .with_batch(None)
+            .with_seed(28);
+        let rep = train_ss_he(&split, &cfg).unwrap();
+        let central = train_central(&data.x, &data.y, GlmKind::Logistic, 0.15, 5);
+        for (a, b) in rep.full_weights().iter().zip(&central.weights) {
+            assert!((a - b).abs() < 2e-2, "{a} vs {b}");
+        }
+        for (lf, lc) in rep.losses.iter().zip(&central.losses) {
+            assert!((lf - lc).abs() < 0.05, "{lf} vs {lc}");
+        }
+    }
+}

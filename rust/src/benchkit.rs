@@ -1,0 +1,151 @@
+//! Tiny benchmarking harness (criterion substitute for the offline
+//! registry): warmup + repeated timing with median/MAD reporting, and
+//! aligned table printing for the paper-style result tables.
+
+use std::time::Instant;
+
+/// CPU time consumed by the *calling thread* (utime + stime from
+/// `/proc/thread-self/stat`), in seconds.
+///
+/// The trainers run every party as a thread on this box; per-thread CPU
+/// time is what each party's own server would have spent, so
+/// `max(party cpu) + simulated wire` models the paper's multi-machine
+/// `runtime` column faithfully even on a single core (blocked-on-recv
+/// time is excluded automatically).
+pub fn thread_cpu_secs() -> f64 {
+    let stat = match std::fs::read_to_string("/proc/thread-self/stat") {
+        Ok(s) => s,
+        Err(_) => return 0.0,
+    };
+    // fields after the last ')' (comm may contain spaces)
+    let rest = match stat.rsplit_once(')') {
+        Some((_, r)) => r,
+        None => return 0.0,
+    };
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    // state is field 0 here; utime/stime are fields 11/12 (stat's 14/15)
+    let utime: f64 = fields.get(11).and_then(|v| v.parse().ok()).unwrap_or(0.0);
+    let stime: f64 = fields.get(12).and_then(|v| v.parse().ok()).unwrap_or(0.0);
+    (utime + stime) / 100.0 // USER_HZ = 100 on linux
+}
+
+/// Time `f` repeatedly: one warmup call, then up to `max_runs` timed runs
+/// or until `budget_secs` of measurement, whichever first. Returns
+/// (median, mad) in seconds.
+pub fn time_fn<F: FnMut()>(budget_secs: f64, max_runs: usize, mut f: F) -> (f64, f64) {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let started = Instant::now();
+    while samples.len() < max_runs.max(1)
+        && (samples.len() < 3 || started.elapsed().as_secs_f64() < budget_secs)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    median_mad(&mut samples)
+}
+
+/// Median and median-absolute-deviation of a sample set.
+pub fn median_mad(samples: &mut [f64]) -> (f64, f64) {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - med).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (med, devs[devs.len() / 2])
+}
+
+/// Render seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2}µs", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+/// Print an aligned table: `headers` then `rows` of equal arity.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncol, "ragged table row");
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<width$}  ", c, width = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(headers.iter().map(|s| s.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+/// Shared bench-scale configuration, overridable via env:
+/// `EFMVFL_BENCH_FAST=1` shrinks everything for smoke runs;
+/// `EFMVFL_PAPER=1` uses the paper's 1024-bit keys.
+pub struct BenchScale {
+    /// Synthetic dataset rows.
+    pub samples: usize,
+    /// Training iterations.
+    pub iterations: usize,
+    /// Mini-batch size.
+    pub batch: usize,
+    /// Paillier key size.
+    pub key_bits: usize,
+}
+
+impl BenchScale {
+    /// Resolve from the environment.
+    pub fn from_env() -> BenchScale {
+        let fast = std::env::var("EFMVFL_BENCH_FAST").is_ok();
+        let paper = std::env::var("EFMVFL_PAPER").is_ok();
+        BenchScale {
+            samples: if fast { 3_000 } else { 30_000 },
+            iterations: if fast { 6 } else { 30 },
+            batch: if fast { 256 } else { 1024 },
+            key_bits: if paper { 1024 } else { 512 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_mad_basics() {
+        let mut v = vec![3.0, 1.0, 2.0];
+        let (m, d) = median_mad(&mut v);
+        assert_eq!(m, 2.0);
+        assert_eq!(d, 1.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.50µs");
+        assert_eq!(fmt_secs(5e-9), "5ns");
+    }
+
+    #[test]
+    fn time_fn_returns_positive() {
+        let (med, _) = time_fn(0.05, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(med >= 0.0);
+    }
+}

@@ -1,0 +1,709 @@
+//! Core arbitrary-precision unsigned integer.
+//!
+//! Representation: little-endian `u64` limbs, always *normalized* (no
+//! trailing zero limbs; zero is the empty limb vector). All arithmetic is
+//! plain-vanilla multi-precision: carry-propagating add/sub, schoolbook
+//! multiplication with a Karatsuba layer above [`KARATSUBA_THRESHOLD`]
+//! limbs, and Knuth Algorithm D for division.
+
+use std::cmp::Ordering;
+use std::fmt;
+
+/// Limb count above which multiplication switches to Karatsuba.
+const KARATSUBA_THRESHOLD: usize = 24;
+
+/// Arbitrary-precision unsigned integer (little-endian `u64` limbs).
+#[derive(Clone, PartialEq, Eq, Hash, Default)]
+pub struct BigUint {
+    /// Little-endian limbs; invariant: `limbs.last() != Some(&0)`.
+    pub(crate) limbs: Vec<u64>,
+}
+
+impl BigUint {
+    /// The value 0.
+    pub fn zero() -> Self {
+        BigUint { limbs: Vec::new() }
+    }
+
+    /// The value 1.
+    pub fn one() -> Self {
+        BigUint { limbs: vec![1] }
+    }
+
+    /// Construct from a single `u64`.
+    pub fn from_u64(v: u64) -> Self {
+        if v == 0 {
+            Self::zero()
+        } else {
+            BigUint { limbs: vec![v] }
+        }
+    }
+
+    /// Construct from a `u128`.
+    pub fn from_u128(v: u128) -> Self {
+        let lo = v as u64;
+        let hi = (v >> 64) as u64;
+        if hi == 0 {
+            Self::from_u64(lo)
+        } else {
+            BigUint { limbs: vec![lo, hi] }
+        }
+    }
+
+    /// Construct from little-endian limbs (normalizes).
+    pub fn from_limbs(mut limbs: Vec<u64>) -> Self {
+        while limbs.last() == Some(&0) {
+            limbs.pop();
+        }
+        BigUint { limbs }
+    }
+
+    /// Borrow the little-endian limbs.
+    pub fn limbs(&self) -> &[u64] {
+        &self.limbs
+    }
+
+    /// Construct from big-endian bytes.
+    pub fn from_bytes_be(bytes: &[u8]) -> Self {
+        let mut limbs = Vec::with_capacity(bytes.len() / 8 + 1);
+        let mut chunk_start = bytes.len();
+        while chunk_start > 0 {
+            let lo = chunk_start.saturating_sub(8);
+            let mut limb = 0u64;
+            for &b in &bytes[lo..chunk_start] {
+                limb = (limb << 8) | b as u64;
+            }
+            limbs.push(limb);
+            chunk_start = lo;
+        }
+        Self::from_limbs(limbs)
+    }
+
+    /// Big-endian byte encoding (no leading zeros; zero encodes to `[]`).
+    pub fn to_bytes_be(&self) -> Vec<u8> {
+        if self.is_zero() {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() * 8);
+        for (i, &limb) in self.limbs.iter().enumerate().rev() {
+            let bytes = limb.to_be_bytes();
+            if i == self.limbs.len() - 1 {
+                // strip leading zeros of the most-significant limb
+                let first = bytes.iter().position(|&b| b != 0).unwrap_or(7);
+                out.extend_from_slice(&bytes[first..]);
+            } else {
+                out.extend_from_slice(&bytes);
+            }
+        }
+        out
+    }
+
+    /// Parse from a hexadecimal string (no `0x` prefix, case-insensitive).
+    pub fn from_hex(s: &str) -> Option<Self> {
+        let mut limbs: Vec<u64> = Vec::new();
+        let digits: Vec<u32> = s.chars().map(|c| c.to_digit(16)).collect::<Option<_>>()?;
+        let mut acc = BigUint::zero();
+        for d in digits {
+            acc = acc.shl_bits(4);
+            acc = acc.add(&BigUint::from_u64(d as u64));
+        }
+        limbs.clear();
+        let _ = limbs;
+        Some(acc)
+    }
+
+    /// Lowercase hexadecimal encoding (no prefix; zero is `"0"`).
+    pub fn to_hex(&self) -> String {
+        if self.is_zero() {
+            return "0".to_string();
+        }
+        let mut s = String::new();
+        for (i, &limb) in self.limbs.iter().enumerate().rev() {
+            if i == self.limbs.len() - 1 {
+                s.push_str(&format!("{limb:x}"));
+            } else {
+                s.push_str(&format!("{limb:016x}"));
+            }
+        }
+        s
+    }
+
+    /// `self == 0`.
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    /// `self == 1`.
+    pub fn is_one(&self) -> bool {
+        self.limbs.len() == 1 && self.limbs[0] == 1
+    }
+
+    /// Least-significant bit (false for zero).
+    pub fn is_odd(&self) -> bool {
+        self.limbs.first().map_or(false, |&l| l & 1 == 1)
+    }
+
+    /// Number of significant bits (0 for zero).
+    pub fn bit_len(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&hi) => (self.limbs.len() - 1) * 64 + (64 - hi.leading_zeros() as usize),
+        }
+    }
+
+    /// Value of bit `i` (counting from the least-significant bit).
+    pub fn bit(&self, i: usize) -> bool {
+        let (limb, off) = (i / 64, i % 64);
+        self.limbs.get(limb).map_or(false, |&l| (l >> off) & 1 == 1)
+    }
+
+    /// Low 64 bits.
+    pub fn low_u64(&self) -> u64 {
+        self.limbs.first().copied().unwrap_or(0)
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &BigUint) -> BigUint {
+        let (a, b) = if self.limbs.len() >= other.limbs.len() {
+            (&self.limbs, &other.limbs)
+        } else {
+            (&other.limbs, &self.limbs)
+        };
+        let mut out = Vec::with_capacity(a.len() + 1);
+        let mut carry = 0u64;
+        for i in 0..a.len() {
+            let bi = b.get(i).copied().unwrap_or(0);
+            let (s1, c1) = a[i].overflowing_add(bi);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.push(s2);
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry != 0 {
+            out.push(carry);
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// `self - other`; returns `None` on underflow.
+    pub fn checked_sub(&self, other: &BigUint) -> Option<BigUint> {
+        if self.cmp(other) == Ordering::Less {
+            return None;
+        }
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let bi = other.limbs.get(i).copied().unwrap_or(0);
+            let (d1, b1) = self.limbs[i].overflowing_sub(bi);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.push(d2);
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert_eq!(borrow, 0);
+        Some(BigUint::from_limbs(out))
+    }
+
+    /// `self - other`; panics on underflow.
+    pub fn sub(&self, other: &BigUint) -> BigUint {
+        self.checked_sub(other)
+            .expect("BigUint::sub underflow")
+    }
+
+    /// Compare magnitudes.
+    pub fn cmp(&self, other: &BigUint) -> Ordering {
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => continue,
+                ord => return ord,
+            }
+        }
+        Ordering::Equal
+    }
+
+    /// Left shift by `bits`.
+    pub fn shl_bits(&self, bits: usize) -> BigUint {
+        if self.is_zero() || bits == 0 {
+            if bits == 0 {
+                return self.clone();
+            }
+            return self.clone();
+        }
+        let (words, rem) = (bits / 64, bits % 64);
+        let mut out = vec![0u64; words];
+        if rem == 0 {
+            out.extend_from_slice(&self.limbs);
+        } else {
+            let mut carry = 0u64;
+            for &l in &self.limbs {
+                out.push((l << rem) | carry);
+                carry = l >> (64 - rem);
+            }
+            if carry != 0 {
+                out.push(carry);
+            }
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// Right shift by `bits`.
+    pub fn shr_bits(&self, bits: usize) -> BigUint {
+        let (words, rem) = (bits / 64, bits % 64);
+        if words >= self.limbs.len() {
+            return BigUint::zero();
+        }
+        let src = &self.limbs[words..];
+        if rem == 0 {
+            return BigUint::from_limbs(src.to_vec());
+        }
+        let mut out = Vec::with_capacity(src.len());
+        for i in 0..src.len() {
+            let hi = src.get(i + 1).copied().unwrap_or(0);
+            out.push((src[i] >> rem) | (hi << (64 - rem)));
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// `self * other`.
+    pub fn mul(&self, other: &BigUint) -> BigUint {
+        if self.is_zero() || other.is_zero() {
+            return BigUint::zero();
+        }
+        if self.limbs.len().min(other.limbs.len()) >= KARATSUBA_THRESHOLD {
+            return karatsuba(&self.limbs, &other.limbs);
+        }
+        schoolbook(&self.limbs, &other.limbs)
+    }
+
+    /// `self * small`.
+    pub fn mul_u64(&self, small: u64) -> BigUint {
+        if small == 0 || self.is_zero() {
+            return BigUint::zero();
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() + 1);
+        let mut carry = 0u128;
+        for &l in &self.limbs {
+            let prod = l as u128 * small as u128 + carry;
+            out.push(prod as u64);
+            carry = prod >> 64;
+        }
+        if carry != 0 {
+            out.push(carry as u64);
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// `self²` (delegates to `mul`; squaring-specific path not needed at
+    /// our sizes because Montgomery exponentiation dominates).
+    pub fn square(&self) -> BigUint {
+        self.mul(self)
+    }
+
+    /// `(quotient, remainder)` of `self / other`; panics if `other == 0`.
+    pub fn divrem(&self, other: &BigUint) -> (BigUint, BigUint) {
+        assert!(!other.is_zero(), "BigUint division by zero");
+        match self.cmp(other) {
+            Ordering::Less => return (BigUint::zero(), self.clone()),
+            Ordering::Equal => return (BigUint::one(), BigUint::zero()),
+            Ordering::Greater => {}
+        }
+        if other.limbs.len() == 1 {
+            let (q, r) = self.divrem_u64(other.limbs[0]);
+            return (q, BigUint::from_u64(r));
+        }
+        knuth_d(self, other)
+    }
+
+    /// Divide by a single limb, returning `(quotient, remainder)`.
+    pub fn divrem_u64(&self, d: u64) -> (BigUint, u64) {
+        assert!(d != 0, "BigUint division by zero");
+        let mut q = vec![0u64; self.limbs.len()];
+        let mut rem = 0u128;
+        for i in (0..self.limbs.len()).rev() {
+            let cur = (rem << 64) | self.limbs[i] as u128;
+            q[i] = (cur / d as u128) as u64;
+            rem = cur % d as u128;
+        }
+        (BigUint::from_limbs(q), rem as u64)
+    }
+
+    /// `self mod other`.
+    pub fn rem(&self, other: &BigUint) -> BigUint {
+        self.divrem(other).1
+    }
+
+    /// `self / other` (floor).
+    pub fn div(&self, other: &BigUint) -> BigUint {
+        self.divrem(other).0
+    }
+
+    /// `(self + other) mod m`, assuming both inputs are `< m`.
+    pub fn add_mod(&self, other: &BigUint, m: &BigUint) -> BigUint {
+        let s = self.add(other);
+        if s.cmp(m) == Ordering::Less {
+            s
+        } else {
+            s.sub(m)
+        }
+    }
+
+    /// `(self - other) mod m`, assuming both inputs are `< m`.
+    pub fn sub_mod(&self, other: &BigUint, m: &BigUint) -> BigUint {
+        if self.cmp(other) == Ordering::Less {
+            self.add(m).sub(other)
+        } else {
+            self.sub(other)
+        }
+    }
+
+    /// `(self * other) mod m`.
+    pub fn mul_mod(&self, other: &BigUint, m: &BigUint) -> BigUint {
+        self.mul(other).rem(m)
+    }
+
+    /// Greatest common divisor (binary gcd).
+    pub fn gcd(&self, other: &BigUint) -> BigUint {
+        let mut a = self.clone();
+        let mut b = other.clone();
+        if a.is_zero() {
+            return b;
+        }
+        if b.is_zero() {
+            return a;
+        }
+        let a_tz = trailing_zeros(&a);
+        let b_tz = trailing_zeros(&b);
+        let shift = a_tz.min(b_tz);
+        a = a.shr_bits(a_tz);
+        b = b.shr_bits(b_tz);
+        loop {
+            if a.cmp(&b) == Ordering::Greater {
+                std::mem::swap(&mut a, &mut b);
+            }
+            b = b.sub(&a);
+            if b.is_zero() {
+                return a.shl_bits(shift);
+            }
+            b = b.shr_bits(trailing_zeros(&b));
+        }
+    }
+}
+
+/// Number of trailing zero bits (undefined for zero; callers guard).
+fn trailing_zeros(v: &BigUint) -> usize {
+    for (i, &l) in v.limbs.iter().enumerate() {
+        if l != 0 {
+            return i * 64 + l.trailing_zeros() as usize;
+        }
+    }
+    0
+}
+
+/// Schoolbook O(n·m) multiplication on raw limb slices.
+fn schoolbook(a: &[u64], b: &[u64]) -> BigUint {
+    let mut out = vec![0u64; a.len() + b.len()];
+    for (i, &ai) in a.iter().enumerate() {
+        if ai == 0 {
+            continue;
+        }
+        let mut carry = 0u128;
+        for (j, &bj) in b.iter().enumerate() {
+            let cur = out[i + j] as u128 + ai as u128 * bj as u128 + carry;
+            out[i + j] = cur as u64;
+            carry = cur >> 64;
+        }
+        let mut k = i + b.len();
+        while carry != 0 {
+            let cur = out[k] as u128 + carry;
+            out[k] = cur as u64;
+            carry = cur >> 64;
+            k += 1;
+        }
+    }
+    BigUint::from_limbs(out)
+}
+
+/// Karatsuba multiplication: splits at half the shorter operand.
+fn karatsuba(a: &[u64], b: &[u64]) -> BigUint {
+    let n = a.len().min(b.len());
+    if n < KARATSUBA_THRESHOLD {
+        return schoolbook(a, b);
+    }
+    let half = (a.len().max(b.len()) + 1) / 2;
+    let (a0, a1) = split_at_limb(a, half);
+    let (b0, b1) = split_at_limb(b, half);
+
+    let z0 = karatsuba(a0.limbs(), b0.limbs());
+    let z2 = if a1.is_zero() || b1.is_zero() {
+        BigUint::zero()
+    } else {
+        karatsuba(a1.limbs(), b1.limbs())
+    };
+    let sa = a0.add(&a1);
+    let sb = b0.add(&b1);
+    let z1 = karatsuba(sa.limbs(), sb.limbs()).sub(&z0).sub(&z2);
+
+    z2.shl_bits(half * 128)
+        .add(&z1.shl_bits(half * 64))
+        .add(&z0)
+}
+
+/// Split a limb slice into (low `at` limbs, rest), each normalized.
+fn split_at_limb(v: &[u64], at: usize) -> (BigUint, BigUint) {
+    if at >= v.len() {
+        (BigUint::from_limbs(v.to_vec()), BigUint::zero())
+    } else {
+        (
+            BigUint::from_limbs(v[..at].to_vec()),
+            BigUint::from_limbs(v[at..].to_vec()),
+        )
+    }
+}
+
+/// Knuth TAOCP vol. 2 Algorithm D long division (divisor ≥ 2 limbs).
+fn knuth_d(num: &BigUint, den: &BigUint) -> (BigUint, BigUint) {
+    // D1: normalize so the divisor's top limb has its high bit set.
+    let shift = den.limbs.last().unwrap().leading_zeros() as usize;
+    let u = num.shl_bits(shift);
+    let v = den.shl_bits(shift);
+    let n = v.limbs.len();
+    let m = u.limbs.len() - n;
+
+    let mut un = u.limbs.clone();
+    un.push(0); // u has m+n+1 digits in Knuth's notation
+    let vn = &v.limbs;
+    let v_hi = vn[n - 1];
+    let v_lo = vn[n - 2];
+
+    let mut q = vec![0u64; m + 1];
+
+    for j in (0..=m).rev() {
+        // D3: estimate qhat from the top two limbs of the current window.
+        let top = ((un[j + n] as u128) << 64) | un[j + n - 1] as u128;
+        let mut qhat = top / v_hi as u128;
+        let mut rhat = top % v_hi as u128;
+        while qhat >> 64 != 0
+            || qhat * v_lo as u128 > ((rhat << 64) | un[j + n - 2] as u128)
+        {
+            qhat -= 1;
+            rhat += v_hi as u128;
+            if rhat >> 64 != 0 {
+                break;
+            }
+        }
+
+        // D4: multiply-subtract qhat * v from the window.
+        let mut borrow = 0i128;
+        let mut carry = 0u128;
+        for i in 0..n {
+            let p = qhat * vn[i] as u128 + carry;
+            carry = p >> 64;
+            let t = un[i + j] as i128 - (p as u64) as i128 + borrow;
+            un[i + j] = t as u64;
+            borrow = t >> 64; // arithmetic shift: 0 or -1
+        }
+        let t = un[j + n] as i128 - carry as i128 + borrow;
+        un[j + n] = t as u64;
+
+        q[j] = qhat as u64;
+
+        // D6: add back if we subtracted too much.
+        if t < 0 {
+            q[j] -= 1;
+            let mut carry = 0u128;
+            for i in 0..n {
+                let s = un[i + j] as u128 + vn[i] as u128 + carry;
+                un[i + j] = s as u64;
+                carry = s >> 64;
+            }
+            un[j + n] = (un[j + n] as u128 + carry) as u64;
+        }
+    }
+
+    let rem = BigUint::from_limbs(un[..n].to_vec()).shr_bits(shift);
+    (BigUint::from_limbs(q), rem)
+}
+
+impl fmt::Debug for BigUint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "BigUint(0x{})", self.to_hex())
+    }
+}
+
+impl fmt::Display for BigUint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Decimal via repeated division by 10^19 (largest power of 10 in u64).
+        if self.is_zero() {
+            return write!(f, "0");
+        }
+        const CHUNK: u64 = 10_000_000_000_000_000_000;
+        let mut parts = Vec::new();
+        let mut cur = self.clone();
+        while !cur.is_zero() {
+            let (q, r) = cur.divrem_u64(CHUNK);
+            parts.push(r);
+            cur = q;
+        }
+        write!(f, "{}", parts.pop().unwrap())?;
+        for p in parts.iter().rev() {
+            write!(f, "{p:019}")?;
+        }
+        Ok(())
+    }
+}
+
+impl PartialOrd for BigUint {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for BigUint {
+    fn cmp(&self, other: &Self) -> Ordering {
+        BigUint::cmp(self, other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::prng::ChaChaRng;
+
+    fn rand_biguint(rng: &mut ChaChaRng, bits: usize) -> BigUint {
+        let limbs = (bits + 63) / 64;
+        let mut v: Vec<u64> = (0..limbs).map(|_| rng.next_u64()).collect();
+        let extra = limbs * 64 - bits;
+        if let Some(hi) = v.last_mut() {
+            *hi >>= extra;
+        }
+        BigUint::from_limbs(v)
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let mut rng = ChaChaRng::from_seed(1);
+        for _ in 0..200 {
+            let a = rand_biguint(&mut rng, 384);
+            let b = rand_biguint(&mut rng, 290);
+            assert_eq!(a.add(&b).sub(&b), a);
+            assert_eq!(a.add(&b), b.add(&a));
+        }
+    }
+
+    #[test]
+    fn mul_matches_u128() {
+        for a in [0u64, 1, 2, u64::MAX, 0xdead_beef] {
+            for b in [0u64, 1, 3, u64::MAX, 0x1234_5678] {
+                let big = BigUint::from_u64(a).mul(&BigUint::from_u64(b));
+                assert_eq!(big, BigUint::from_u128(a as u128 * b as u128));
+            }
+        }
+    }
+
+    #[test]
+    fn mul_divrem_roundtrip() {
+        let mut rng = ChaChaRng::from_seed(2);
+        for i in 0..200 {
+            let a = rand_biguint(&mut rng, 64 + (i % 1024));
+            let b = rand_biguint(&mut rng, 64 + (i * 7 % 512));
+            if b.is_zero() {
+                continue;
+            }
+            let r = rand_biguint(&mut rng, b.bit_len().saturating_sub(1));
+            // n = a*b + r with r < b  =>  divrem(n, b) == (a, r)
+            let n = a.mul(&b).add(&r);
+            let (q, rem) = n.divrem(&b);
+            assert_eq!(q, a, "quotient mismatch at iter {i}");
+            assert_eq!(rem, r, "remainder mismatch at iter {i}");
+        }
+    }
+
+    #[test]
+    fn karatsuba_matches_schoolbook() {
+        let mut rng = ChaChaRng::from_seed(3);
+        for _ in 0..20 {
+            let a = rand_biguint(&mut rng, 3000);
+            let b = rand_biguint(&mut rng, 2800);
+            assert_eq!(a.mul(&b), super::schoolbook(a.limbs(), b.limbs()));
+        }
+    }
+
+    #[test]
+    fn shifts() {
+        let mut rng = ChaChaRng::from_seed(4);
+        for shift in [0usize, 1, 63, 64, 65, 127, 128, 300] {
+            let a = rand_biguint(&mut rng, 500);
+            assert_eq!(a.shl_bits(shift).shr_bits(shift), a);
+        }
+        assert_eq!(BigUint::from_u64(1).shl_bits(64).limbs(), &[0, 1]);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut rng = ChaChaRng::from_seed(5);
+        for bits in [8, 64, 65, 128, 1024, 2048] {
+            let a = rand_biguint(&mut rng, bits);
+            assert_eq!(BigUint::from_bytes_be(&a.to_bytes_be()), a);
+        }
+        assert_eq!(BigUint::from_bytes_be(&[]), BigUint::zero());
+        assert_eq!(BigUint::from_bytes_be(&[0, 0, 1]), BigUint::one());
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let a = BigUint::from_hex("deadbeefcafebabe0123456789abcdef00").unwrap();
+        assert_eq!(a.to_hex(), "deadbeefcafebabe0123456789abcdef00");
+        assert_eq!(BigUint::from_hex("0").unwrap(), BigUint::zero());
+    }
+
+    #[test]
+    fn display_decimal() {
+        assert_eq!(BigUint::from_u64(0).to_string(), "0");
+        assert_eq!(BigUint::from_u64(12345).to_string(), "12345");
+        // 2^64 = 18446744073709551616
+        assert_eq!(
+            BigUint::from_u64(1).shl_bits(64).to_string(),
+            "18446744073709551616"
+        );
+        // 10^19 boundary padding
+        assert_eq!(
+            BigUint::from_u128(10_000_000_000_000_000_000u128 * 3 + 7).to_string(),
+            "30000000000000000007"
+        );
+    }
+
+    #[test]
+    fn gcd_basics() {
+        let a = BigUint::from_u64(48);
+        let b = BigUint::from_u64(60);
+        assert_eq!(a.gcd(&b), BigUint::from_u64(12));
+        let p = BigUint::from_u64(1_000_003);
+        let q = BigUint::from_u64(998_244_353);
+        assert_eq!(p.gcd(&q), BigUint::one());
+        assert_eq!(p.gcd(&BigUint::zero()), p);
+    }
+
+    #[test]
+    fn mod_ops() {
+        let m = BigUint::from_u64(97);
+        let a = BigUint::from_u64(90);
+        let b = BigUint::from_u64(15);
+        assert_eq!(a.add_mod(&b, &m), BigUint::from_u64(8));
+        assert_eq!(b.sub_mod(&a, &m), BigUint::from_u64(22));
+        assert_eq!(a.mul_mod(&b, &m), BigUint::from_u64(90 * 15 % 97));
+    }
+
+    #[test]
+    fn divrem_u64_matches_divrem() {
+        let mut rng = ChaChaRng::from_seed(6);
+        for _ in 0..50 {
+            let a = rand_biguint(&mut rng, 700);
+            let d = rng.next_u64() | 1;
+            let (q1, r1) = a.divrem_u64(d);
+            let (q2, r2) = a.divrem(&BigUint::from_u64(d));
+            assert_eq!(q1, q2);
+            assert_eq!(BigUint::from_u64(r1), r2);
+        }
+    }
+}

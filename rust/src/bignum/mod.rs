@@ -1,0 +1,19 @@
+//! Arbitrary-precision unsigned integer arithmetic.
+//!
+//! The offline registry has no bignum crate, so EFMVFL carries its own:
+//! enough multi-precision arithmetic to run 1024-bit Paillier (which means
+//! 2048-bit modular arithmetic mod `n²`) at useful speed.
+//!
+//! - [`BigUint`]: little-endian `u64` limbs; schoolbook + Karatsuba
+//!   multiplication, Knuth Algorithm D division.
+//! - [`modular`]: modular exponentiation (Montgomery CIOS with 4-bit fixed
+//!   windows), modular inverse (binary extended gcd).
+//! - [`prime`]: Miller-Rabin probable-prime testing and random prime
+//!   generation for Paillier keygen.
+
+mod biguint;
+pub mod modular;
+pub mod prime;
+
+pub use biguint::BigUint;
+pub use modular::{Montgomery, PowTable};

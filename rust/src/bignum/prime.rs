@@ -1,0 +1,157 @@
+//! Probable-prime testing and random prime generation (Paillier keygen).
+
+use super::modular::Montgomery;
+use super::BigUint;
+use crate::crypto::prng::ChaChaRng;
+
+/// Trial-division primes below 2048, generated once.
+fn small_primes() -> &'static [u64] {
+    use std::sync::OnceLock;
+    static PRIMES: OnceLock<Vec<u64>> = OnceLock::new();
+    PRIMES.get_or_init(|| {
+        let limit = 2048usize;
+        let mut sieve = vec![true; limit];
+        sieve[0] = false;
+        sieve[1] = false;
+        for i in 2..limit {
+            if sieve[i] {
+                let mut j = i * i;
+                while j < limit {
+                    sieve[j] = false;
+                    j += i;
+                }
+            }
+        }
+        (0..limit as u64).filter(|&i| sieve[i as usize]).collect()
+    })
+}
+
+/// Miller-Rabin probable-prime test with `rounds` random bases.
+///
+/// Error probability ≤ 4^-rounds; 32 rounds is far beyond what Paillier
+/// key security needs.
+pub fn is_probable_prime(n: &BigUint, rounds: usize, rng: &mut ChaChaRng) -> bool {
+    if n.bit_len() < 2 {
+        return false; // 0, 1
+    }
+    // small primes / trial division
+    for &p in small_primes() {
+        let pb = BigUint::from_u64(p);
+        match n.cmp(&pb) {
+            std::cmp::Ordering::Equal => return true,
+            std::cmp::Ordering::Less => return false,
+            _ => {}
+        }
+        if n.divrem_u64(p).1 == 0 {
+            return false;
+        }
+    }
+
+    // write n-1 = d * 2^s with d odd
+    let n_minus_1 = n.sub(&BigUint::one());
+    let s = {
+        let mut s = 0usize;
+        while !n_minus_1.bit(s) {
+            s += 1;
+        }
+        s
+    };
+    let d = n_minus_1.shr_bits(s);
+
+    let mont = Montgomery::new(n);
+    let two = BigUint::from_u64(2);
+    let n_minus_2 = n.sub(&two);
+
+    'witness: for _ in 0..rounds {
+        // base in [2, n-2]
+        let a = rng.next_biguint_below(&n_minus_2.sub(&BigUint::one())).add(&two);
+        let mut x = mont.pow(&a, &d);
+        if x.is_one() || x == n_minus_1 {
+            continue 'witness;
+        }
+        for _ in 0..s - 1 {
+            x = x.mul_mod(&x, n);
+            if x == n_minus_1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Generate a random probable prime with exactly `bits` bits.
+pub fn gen_prime(bits: usize, rng: &mut ChaChaRng) -> BigUint {
+    assert!(bits >= 16, "prime size too small for keygen");
+    loop {
+        let mut cand = rng.next_biguint_exact_bits(bits);
+        // force odd
+        if !cand.is_odd() {
+            cand = cand.add(&BigUint::one());
+            if cand.bit_len() != bits {
+                continue;
+            }
+        }
+        if is_probable_prime(&cand, 24, rng) {
+            return cand;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_small_primes_and_composites() {
+        let mut rng = ChaChaRng::from_seed(20);
+        for p in [2u64, 3, 5, 7, 2039, 2053, 65537, 1_000_000_007, 998_244_353] {
+            assert!(
+                is_probable_prime(&BigUint::from_u64(p), 16, &mut rng),
+                "{p} should be prime"
+            );
+        }
+        for c in [0u64, 1, 4, 2047, 65535, 1_000_000_008, 3_215_031_751] {
+            assert!(
+                !is_probable_prime(&BigUint::from_u64(c), 16, &mut rng),
+                "{c} should be composite"
+            );
+        }
+    }
+
+    #[test]
+    fn carmichael_numbers_rejected() {
+        let mut rng = ChaChaRng::from_seed(21);
+        // Carmichael numbers fool Fermat but not Miller-Rabin.
+        for c in [561u64, 1105, 1729, 2465, 2821, 6601, 8911, 41041, 825265] {
+            assert!(
+                !is_probable_prime(&BigUint::from_u64(c), 16, &mut rng),
+                "{c} is Carmichael, must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn known_large_prime() {
+        let mut rng = ChaChaRng::from_seed(22);
+        // 2^127 - 1 is a Mersenne prime.
+        let m127 = BigUint::one().shl_bits(127).sub(&BigUint::one());
+        assert!(is_probable_prime(&m127, 16, &mut rng));
+        // 2^128 - 1 is composite.
+        let m128 = BigUint::one().shl_bits(128).sub(&BigUint::one());
+        assert!(!is_probable_prime(&m128, 16, &mut rng));
+    }
+
+    #[test]
+    fn gen_prime_has_exact_bits_and_fermat_holds() {
+        let mut rng = ChaChaRng::from_seed(23);
+        for bits in [64usize, 128, 256] {
+            let p = gen_prime(bits, &mut rng);
+            assert_eq!(p.bit_len(), bits);
+            // Fermat check with a fixed base
+            let a = BigUint::from_u64(2);
+            let e = p.sub(&BigUint::one());
+            assert!(super::super::modular::modpow(&a, &e, &p).is_one());
+        }
+    }
+}

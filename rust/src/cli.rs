@@ -1,0 +1,102 @@
+//! Minimal command-line parsing (no `clap` in the offline registry).
+//!
+//! Grammar: `efmvfl <subcommand> [--flag value]... [--switch]...`.
+//! Flags may appear in any order; unknown flags are an error so typos
+//! don't silently fall back to defaults.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+pub struct Args {
+    /// The subcommand (first positional argument).
+    pub command: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+    known: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`; `known` lists every accepted `--flag`/`--switch`
+    /// name (without dashes).
+    pub fn parse(argv: &[String], known: &[&'static str]) -> Result<Args> {
+        let mut it = argv.iter().peekable();
+        let command = it
+            .next()
+            .cloned()
+            .ok_or_else(|| anyhow!("missing subcommand; try `efmvfl help`"))?;
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument: {arg}");
+            };
+            if !known.contains(&name) {
+                bail!("unknown flag --{name}");
+            }
+            // a flag followed by a value that isn't another flag is
+            // key-value; otherwise it's a boolean switch
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    flags.insert(name.to_string(), it.next().unwrap().clone());
+                }
+                _ => switches.push(name.to_string()),
+            }
+        }
+        Ok(Args { command, flags, switches, known: known.to_vec() })
+    }
+
+    /// Value of `--name`, if present.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        debug_assert!(self.known.contains(&name), "flag {name} not declared");
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Parsed value of `--name` or a default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{name}: cannot parse {s:?}")),
+        }
+    }
+
+    /// True when the boolean `--name` switch was given.
+    pub fn has(&self, name: &str) -> bool {
+        debug_assert!(self.known.contains(&name), "switch {name} not declared");
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    const KNOWN: &[&'static str] = &["iters", "xla", "model"];
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = Args::parse(&argv("train --iters 30 --xla --model lr"), KNOWN).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("iters"), Some("30"));
+        assert_eq!(a.get_or("iters", 5usize).unwrap(), 30);
+        assert!(a.has("xla"));
+        assert_eq!(a.get("model"), Some("lr"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = Args::parse(&argv("train"), KNOWN).unwrap();
+        assert_eq!(a.get_or("iters", 7usize).unwrap(), 7);
+        assert!(!a.has("xla"));
+        assert!(Args::parse(&argv("train --bogus 1"), KNOWN).is_err());
+        assert!(Args::parse(&argv(""), KNOWN).is_err());
+        let bad = Args::parse(&argv("train --iters abc"), KNOWN).unwrap();
+        assert!(bad.get_or("iters", 1usize).is_err());
+    }
+}

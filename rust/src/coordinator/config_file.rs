@@ -1,0 +1,179 @@
+//! Config-file support: load a [`TrainConfig`] from a TOML-subset file
+//! (`key = value` lines, `#` comments, optional `[section]` headers that
+//! are ignored) — the launcher-style alternative to CLI flags.
+//!
+//! ```toml
+//! # experiment: credit risk, 3 parties
+//! model = "lr"
+//! parties = 3
+//! iterations = 30
+//! learning_rate = 0.15
+//! batch_size = 1024        # or "full"
+//! key_bits = 1024
+//! rotate_cps = true
+//! use_xla = true
+//! seed = 7
+//! ```
+
+use super::TrainConfig;
+use crate::glm::GlmKind;
+use crate::protocols::CpSelection;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parse the TOML-subset text into key/value pairs.
+pub fn parse_kv(text: &str) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        // strip comments (naive: '#' outside quotes)
+        let line = match raw.find('#') {
+            Some(i) if !raw[..i].contains('"') || raw[..i].matches('"').count() % 2 == 0 => {
+                &raw[..i]
+            }
+            _ => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim().to_string();
+        let mut value = value.trim().to_string();
+        if value.starts_with('"') && value.ends_with('"') && value.len() >= 2 {
+            value = value[1..value.len() - 1].to_string();
+        }
+        if key.is_empty() || value.is_empty() {
+            bail!("line {}: empty key or value", lineno + 1);
+        }
+        out.insert(key, value);
+    }
+    Ok(out)
+}
+
+/// The number of parties a config file requests (needed by the caller to
+/// split the data before [`super::train`]).
+pub fn parties_of(kv: &HashMap<String, String>) -> Result<usize> {
+    match kv.get("parties") {
+        None => Ok(2),
+        Some(v) => v.parse().context("parties"),
+    }
+}
+
+/// Build a [`TrainConfig`] from parsed keys (unknown keys are an error —
+/// typos must not silently train the wrong experiment).
+pub fn config_from_kv(kv: &HashMap<String, String>) -> Result<TrainConfig> {
+    let kind = match kv.get("model").map(String::as_str) {
+        None => GlmKind::Logistic,
+        Some(s) => GlmKind::parse(s).ok_or_else(|| anyhow!("unknown model {s:?}"))?,
+    };
+    let parties = parties_of(kv)?;
+    let mut cfg = match kind {
+        GlmKind::Poisson => TrainConfig::poisson(parties),
+        _ => TrainConfig::logistic(parties),
+    };
+    cfg.kind = kind;
+
+    for (key, value) in kv {
+        match key.as_str() {
+            "model" | "parties" => {}
+            "iterations" => cfg.iterations = value.parse().context("iterations")?,
+            "learning_rate" => cfg.learning_rate = value.parse().context("learning_rate")?,
+            "loss_threshold" => cfg.loss_threshold = value.parse().context("loss_threshold")?,
+            "batch_size" => {
+                cfg.batch_size = if value == "full" {
+                    None
+                } else {
+                    Some(value.parse().context("batch_size")?)
+                }
+            }
+            "key_bits" => cfg.key_bits = value.parse().context("key_bits")?,
+            "seed" => cfg.seed = value.parse().context("seed")?,
+            "rotate_cps" => {
+                cfg.cp_selection = if value.parse::<bool>().context("rotate_cps")? {
+                    CpSelection::Rotate
+                } else {
+                    CpSelection::Fixed
+                }
+            }
+            "use_xla" => cfg.use_xla = value.parse().context("use_xla")?,
+            "obfuscator_pool" => {
+                cfg.obfuscator_pool = value.parse().context("obfuscator_pool")?
+            }
+            other => bail!("unknown config key {other:?}"),
+        }
+    }
+    Ok(cfg)
+}
+
+/// Load a config file.
+pub fn load(path: &Path) -> Result<(TrainConfig, usize)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let kv = parse_kv(&text)?;
+    let parties = parties_of(&kv)?;
+    Ok((config_from_kv(&kv)?, parties))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+            # credit experiment
+            [train]
+            model = "pr"
+            parties = 3
+            iterations = 12
+            learning_rate = 0.05
+            batch_size = 256
+            key_bits = 1024
+            rotate_cps = true
+            use_xla = false
+            seed = 99
+        "#;
+        let kv = parse_kv(text).unwrap();
+        let cfg = config_from_kv(&kv).unwrap();
+        assert_eq!(cfg.kind, GlmKind::Poisson);
+        assert_eq!(cfg.iterations, 12);
+        assert_eq!(cfg.learning_rate, 0.05);
+        assert_eq!(cfg.batch_size, Some(256));
+        assert_eq!(cfg.key_bits, 1024);
+        assert_eq!(cfg.cp_selection, CpSelection::Rotate);
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(parties_of(&kv).unwrap(), 3);
+    }
+
+    #[test]
+    fn defaults_and_full_batch() {
+        let kv = parse_kv("batch_size = \"full\"\n").unwrap();
+        let cfg = config_from_kv(&kv).unwrap();
+        assert_eq!(cfg.kind, GlmKind::Logistic);
+        assert_eq!(cfg.batch_size, None);
+        assert_eq!(cfg.iterations, 30); // paper default preserved
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_lines() {
+        let kv = parse_kv("typo_key = 5\n").unwrap();
+        assert!(config_from_kv(&kv).is_err());
+        assert!(parse_kv("no equals sign here\n").is_err());
+        assert!(parse_kv("key =\n").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("efmvfl_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("exp.toml");
+        std::fs::write(&p, "model = \"gamma\"\nparties = 4\nseed = 5\n").unwrap();
+        let (cfg, parties) = load(&p).unwrap();
+        assert_eq!(cfg.kind, GlmKind::Gamma);
+        assert_eq!(parties, 4);
+        assert_eq!(cfg.seed, 5);
+    }
+}

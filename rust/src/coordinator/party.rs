@@ -1,0 +1,198 @@
+//! The per-party state machine of Algorithm 1.
+//!
+//! Every party runs the same loop; role branches (C vs B_i, CP vs
+//! bystander) mirror the paper's pseudocode lines. Weights never leave
+//! the party — only shares, ciphertexts and masked values do.
+
+use super::TrainConfig;
+use crate::glm::{ln_factorial, to_pm1, GlmKind};
+use crate::linalg::Matrix;
+use crate::mpc::ring;
+use crate::mpc::share::Share;
+use crate::net::Payload;
+use crate::protocols::grad_operator::{protocol2_grad_operator, GradOpInputs};
+use crate::protocols::secret_share::protocol1_share;
+use crate::protocols::secure_gradient::protocol3_gradients;
+use crate::protocols::secure_loss::{protocol4_loss, LossInputs};
+use crate::protocols::ProtoCtx;
+use crate::runtime::Compute;
+use std::sync::Arc;
+
+/// Linear predictors are clamped to this band before `exp`/encode so the
+/// fixed-point range can never overflow (|z| ≤ 15 ⇒ e^z < 2²² at scale
+/// 2²⁰ ⇒ products stay far below 2⁶³).
+const Z_CLAMP: f64 = 15.0;
+
+/// One party's inputs: its feature block and (for C) the labels.
+pub struct PartyInput {
+    /// Local feature block (training rows).
+    pub x: Matrix,
+    /// Labels, present on party 0 (= C) only.
+    pub y: Option<Vec<f64>>,
+}
+
+/// One party's outputs.
+pub struct PartyResult {
+    /// Final local weight block.
+    pub weights: Vec<f64>,
+    /// Loss curve (non-empty on C only).
+    pub losses: Vec<f64>,
+    /// Iterations executed.
+    pub iterations_run: usize,
+    /// CPU seconds this party spent (its "own server's" compute time).
+    pub cpu_secs: f64,
+}
+
+/// Rows of the cyclic mini-batch for iteration `t` (shared by the EFMVFL
+/// trainer and all baselines so comparisons see identical batches).
+pub fn batch_rows(m_total: usize, batch: Option<usize>, t: usize) -> Vec<usize> {
+    match batch {
+        None => (0..m_total).collect(),
+        Some(b) if b >= m_total => (0..m_total).collect(),
+        Some(b) => {
+            let start = (t * b) % m_total;
+            (0..b).map(|i| (start + i) % m_total).collect()
+        }
+    }
+}
+
+/// Run Algorithm 1 for one party until the stop flag or max iterations.
+pub fn run_party(
+    mut ctx: ProtoCtx,
+    input: PartyInput,
+    cfg: &TrainConfig,
+    compute: Arc<dyn Compute>,
+) -> PartyResult {
+    let cpu_start = crate::benchkit::thread_cpu_secs();
+    let me = ctx.ep.id;
+    let n = ctx.ep.n_parties();
+    let is_c = me == 0;
+    let m_total = input.x.rows;
+    let mut w = vec![0.0; input.x.cols]; // line 2: W_p := 0
+    let mut losses = Vec::new();
+    let mut iterations_run = 0;
+
+    // Label preprocessing on C: ±1 encoding for LR, counts otherwise.
+    let y_all: Option<Vec<f64>> = input.y.as_ref().map(|y| match cfg.kind {
+        GlmKind::Logistic => y.iter().map(|&v| to_pm1(v)).collect(),
+        _ => y.clone(),
+    });
+
+    for t in 0..cfg.iterations {
+        // line 4: select the computing parties (all parties agree by seed)
+        ctx.cp = cfg.cp_selection.pick(n, cfg.seed, t);
+        ctx.reseed_dealer(t);
+
+        let rows = batch_rows(m_total, cfg.batch_size, t);
+        let xb = input.x.gather_rows(&rows);
+        let m = xb.rows;
+
+        // line 5: local intermediates Z = W_p X_p (the L2/L1 hot path)
+        let z_raw = compute.gemv(&xb, &w);
+        let z: Vec<f64> = z_raw.iter().map(|&v| v.clamp(-Z_CLAMP, Z_CLAMP)).collect();
+
+        // Protocol 1: share z (all parties), y (C), exp(z) per party (PR)
+        let wx_share = crate::protocols::secret_share::share_and_sum(
+            &mut ctx,
+            &format!("z{t}"),
+            &ring::encode_vec(&z),
+        );
+        let y_share = {
+            let yb: Option<Vec<f64>> =
+                y_all.as_ref().map(|y| rows.iter().map(|&i| y[i]).collect());
+            let enc = yb.as_ref().map(|y| ring::encode_vec(y));
+            protocol1_share(&mut ctx, &format!("y{t}"), 0, enc.as_deref())
+        };
+        // exponential intermediates: one chain per multiplier c, each
+        // party sharing e^{c·z_p} (paper §4.2 / DESIGN §7)
+        let mut exp_shares: Vec<Vec<Share>> = Vec::new();
+        for (ci, &c) in cfg.kind.exp_multipliers().iter().enumerate() {
+            let scaled: Vec<f64> = z.iter().map(|&v| c * v).collect();
+            let e = compute.exp(&scaled);
+            let enc = ring::encode_vec(&e);
+            let shares: Vec<Share> = (0..n)
+                .filter_map(|p| {
+                    let vals = (p == me).then_some(enc.as_slice());
+                    protocol1_share(&mut ctx, &format!("e{t}:{ci}:{p}"), p, vals)
+                })
+                .collect();
+            exp_shares.push(shares);
+        }
+
+        // Protocol 2 (CPs): shares of m·d
+        let (md_share, loss_aux) = if ctx.is_cp() {
+            let inputs = GradOpInputs {
+                wx: wx_share.clone().expect("CP has wx share"),
+                y: y_share.clone().expect("CP has y share"),
+                exps: exp_shares,
+            };
+            let out = protocol2_grad_operator(&mut ctx, cfg.kind, &inputs);
+            (Some(out.md), out.loss_aux)
+        } else {
+            (None, Vec::new())
+        };
+
+        // Protocol 3: every party gets its plaintext gradient
+        let g = protocol3_gradients(&mut ctx, &xb, md_share.as_ref());
+
+        // line 23 / eq. 6: local weight update
+        for (wi, gi) in w.iter_mut().zip(&g) {
+            *wi -= cfg.learning_rate * gi;
+        }
+
+        // Protocol 4: loss revealed to C (pre-update loss of this batch)
+        let loss_inputs = if ctx.is_cp() {
+            Some(LossInputs {
+                wx: wx_share.unwrap(),
+                y: y_share.unwrap(),
+                aux: loss_aux,
+            })
+        } else {
+            None
+        };
+        let lny_sum = if is_c && cfg.kind == GlmKind::Poisson {
+            let y = y_all.as_ref().unwrap();
+            rows.iter().map(|&i| ln_factorial(y[i])).sum()
+        } else {
+            0.0
+        };
+        let loss = protocol4_loss(&mut ctx, cfg.kind, loss_inputs.as_ref(), m, lny_sum);
+
+        // lines 24-31: stop-flag decision on C, broadcast to everyone
+        iterations_run = t + 1;
+        let stop = if is_c {
+            let l = loss.expect("C learns the loss");
+            losses.push(l);
+            let flag = l < cfg.loss_threshold || !l.is_finite();
+            ctx.ep.broadcast(&format!("stop{t}"), &Payload::Flag(flag));
+            flag
+        } else {
+            ctx.ep.recv(0, &format!("stop{t}")).into_flag()
+        };
+        if stop {
+            break;
+        }
+    }
+
+    PartyResult {
+        weights: w,
+        losses,
+        iterations_run,
+        cpu_secs: crate::benchkit::thread_cpu_secs() - cpu_start,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_rows_full_and_cyclic() {
+        assert_eq!(batch_rows(4, None, 3), vec![0, 1, 2, 3]);
+        assert_eq!(batch_rows(4, Some(10), 0), vec![0, 1, 2, 3]);
+        assert_eq!(batch_rows(5, Some(2), 0), vec![0, 1]);
+        assert_eq!(batch_rows(5, Some(2), 1), vec![2, 3]);
+        assert_eq!(batch_rows(5, Some(2), 2), vec![4, 0]);
+        assert_eq!(batch_rows(5, Some(2), 3), vec![1, 2]);
+    }
+}

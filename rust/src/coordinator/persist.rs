@@ -1,0 +1,173 @@
+//! Model persistence: save/load a trained federated model.
+//!
+//! In deployment each party stores only *its own* weight block; this
+//! module writes one file per logical model with per-party sections so a
+//! single-file export (for the evaluation/demo path) and per-party
+//! splits (production) share one format.
+//!
+//! Binary layout (little-endian):
+//! `b"EFMV" | version u16 | kind u8 | n_parties u16 |
+//!  (block_len u32, f64×block_len)*`
+
+use crate::glm::GlmKind;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"EFMV";
+const VERSION: u16 = 1;
+
+/// A trained model: GLM kind + per-party weight blocks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SavedModel {
+    /// Which GLM the weights parameterize.
+    pub kind: GlmKind,
+    /// One weight block per party, in party order (C, B1, ...).
+    pub weights: Vec<Vec<f64>>,
+}
+
+impl SavedModel {
+    /// Total feature count.
+    pub fn n_features(&self) -> usize {
+        self.weights.iter().map(Vec::len).sum()
+    }
+
+    /// Write to `path` (creates parents).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&[kind_tag(self.kind)])?;
+        f.write_all(&(self.weights.len() as u16).to_le_bytes())?;
+        for block in &self.weights {
+            f.write_all(&(block.len() as u32).to_le_bytes())?;
+            for &w in block {
+                f.write_all(&w.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Read from `path`.
+    pub fn load(path: &Path) -> Result<SavedModel> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        if buf.len() < 9 || &buf[..4] != MAGIC {
+            bail!("{} is not an EFMVFL model file", path.display());
+        }
+        let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported model version {version}");
+        }
+        let kind = kind_from_tag(buf[6])?;
+        let n_parties = u16::from_le_bytes(buf[7..9].try_into().unwrap()) as usize;
+        let mut pos = 9usize;
+        let mut weights = Vec::with_capacity(n_parties);
+        for _ in 0..n_parties {
+            if pos + 4 > buf.len() {
+                bail!("truncated model file");
+            }
+            let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+            pos += 4;
+            if pos + len * 8 > buf.len() {
+                bail!("truncated weight block");
+            }
+            let block: Vec<f64> = (0..len)
+                .map(|i| f64::from_le_bytes(buf[pos + i * 8..pos + i * 8 + 8].try_into().unwrap()))
+                .collect();
+            pos += len * 8;
+            weights.push(block);
+        }
+        if pos != buf.len() {
+            bail!("trailing bytes in model file");
+        }
+        Ok(SavedModel { kind, weights })
+    }
+}
+
+fn kind_tag(kind: GlmKind) -> u8 {
+    match kind {
+        GlmKind::Logistic => 0,
+        GlmKind::Poisson => 1,
+        GlmKind::Linear => 2,
+        GlmKind::Gamma => 3,
+        GlmKind::Tweedie => 4,
+    }
+}
+
+fn kind_from_tag(tag: u8) -> Result<GlmKind> {
+    Ok(match tag {
+        0 => GlmKind::Logistic,
+        1 => GlmKind::Poisson,
+        2 => GlmKind::Linear,
+        3 => GlmKind::Gamma,
+        4 => GlmKind::Tweedie,
+        t => return Err(anyhow!("unknown GLM tag {t}")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join("efmvfl_persist_test").join(name)
+    }
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        for (i, kind) in [
+            GlmKind::Logistic,
+            GlmKind::Poisson,
+            GlmKind::Linear,
+            GlmKind::Gamma,
+            GlmKind::Tweedie,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let m = SavedModel {
+                kind,
+                weights: vec![vec![1.5, -2.25, 0.0], vec![3.0]],
+            };
+            let p = tmp(&format!("model{i}.efmv"));
+            m.save(&p).unwrap();
+            assert_eq!(SavedModel::load(&p).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn empty_and_many_blocks() {
+        let m = SavedModel {
+            kind: GlmKind::Logistic,
+            weights: vec![vec![], vec![1.0], vec![2.0, 3.0], vec![]],
+        };
+        let p = tmp("weird.efmv");
+        m.save(&p).unwrap();
+        let back = SavedModel::load(&p).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.n_features(), 3);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage.efmv");
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, b"not a model").unwrap();
+        assert!(SavedModel::load(&p).is_err());
+        // truncated file
+        let m = SavedModel { kind: GlmKind::Linear, weights: vec![vec![1.0; 8]] };
+        let good = tmp("good.efmv");
+        m.save(&good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        let cut = tmp("cut.efmv");
+        std::fs::write(&cut, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(SavedModel::load(&cut).is_err());
+    }
+}

@@ -1,0 +1,43 @@
+//! Test/bench helpers: pre-wired protocol contexts over an in-process
+//! mesh with small (fast) Paillier keys.
+
+use crate::crypto::paillier::{Keypair, PublicKey};
+use crate::crypto::prng::ChaChaRng;
+use crate::mpc::beaver::TripleDealer;
+use crate::net::full_mesh;
+use crate::protocols::ProtoCtx;
+use std::sync::Arc;
+
+/// Build `n` connected [`ProtoCtx`]s with the given CP pair and 256-bit
+/// Paillier keys (plenty for tests, fast to generate).
+pub fn mesh_ctxs(n: usize, cp: (usize, usize), seed: u64) -> Vec<ProtoCtx> {
+    mesh_ctxs_keyed(n, cp, seed, 256)
+}
+
+/// [`mesh_ctxs`] with an explicit key size.
+pub fn mesh_ctxs_keyed(n: usize, cp: (usize, usize), seed: u64, key_bits: usize) -> Vec<ProtoCtx> {
+    let keypairs: Vec<Arc<Keypair>> = (0..n)
+        .map(|p| {
+            let mut rng = ChaChaRng::from_seed(seed.wrapping_add(500 + p as u64));
+            Arc::new(Keypair::generate(key_bits, &mut rng))
+        })
+        .collect();
+    let pks: Vec<Arc<PublicKey>> = keypairs
+        .iter()
+        .map(|kp| Arc::new(PublicKey::from_n(kp.pk.n.clone())))
+        .collect();
+    let (endpoints, _stats) = full_mesh(n);
+    endpoints
+        .into_iter()
+        .enumerate()
+        .map(|(p, ep)| ProtoCtx {
+            ep,
+            rng: ChaChaRng::from_seed(seed.wrapping_add(900 + p as u64)),
+            kp: keypairs[p].clone(),
+            pks: pks.clone(),
+            cp,
+            dealer: TripleDealer::new(seed),
+            run_seed: seed,
+        })
+        .collect()
+}

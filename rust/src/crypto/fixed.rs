@@ -1,0 +1,128 @@
+//! Fixed-point codec: `f64` model values ↔ scaled integers.
+//!
+//! Both legs of the paper's hybrid need integers:
+//!
+//! - the MPC ring Z_2⁶⁴ ([`crate::mpc::ring`]) holds secret shares,
+//! - the Paillier plaintext space Z_n holds encrypted gradients.
+//!
+//! Values are scaled by `2^FRAC_BITS` and rounded to nearest. A product of
+//! two encoded values carries `2·FRAC_BITS` fractional bits and must be
+//! rescaled once (see [`rescale_i128`] / `mpc::ring::truncate`).
+
+/// Fractional bits of the fixed-point representation.
+///
+/// 2⁻²⁰ ≈ 1e-6 resolution; a product of two encodings uses 40 bits of
+/// fraction + the integer part, comfortably inside i128 and inside a
+/// ≥128-bit Paillier plaintext space.
+pub const FRAC_BITS: u32 = 20;
+
+/// `2^FRAC_BITS` as f64.
+pub const SCALE: f64 = (1u64 << FRAC_BITS) as f64;
+
+/// Encode an `f64` into a scaled `i128` (round to nearest).
+#[inline]
+pub fn encode(v: f64) -> i128 {
+    (v * SCALE).round() as i128
+}
+
+/// Decode a single-scaled `i128` back to `f64`.
+#[inline]
+pub fn decode(v: i128) -> f64 {
+    v as f64 / SCALE
+}
+
+/// Decode a double-scaled value (product of two encodings).
+#[inline]
+pub fn decode2(v: i128) -> f64 {
+    v as f64 / (SCALE * SCALE)
+}
+
+/// Encode directly at double scale (for plaintext operands that must be
+/// added to a product of two encodings, e.g. the TP baselines' `−0.5·Y`).
+#[inline]
+pub fn encode2(v: f64) -> i128 {
+    (v * SCALE * SCALE).round() as i128
+}
+
+/// Decode a triple-scaled value (product of three encodings — the TP
+/// baselines' `Xᵀ·(c·WX)` chains).
+#[inline]
+pub fn decode3(v: i128) -> f64 {
+    (v as f64 / SCALE) / (SCALE * SCALE)
+}
+
+/// Encode at triple scale.
+#[inline]
+pub fn encode3(v: f64) -> i128 {
+    (v * SCALE * SCALE * SCALE).round() as i128
+}
+
+/// Rescale a double-scaled product back to single scale
+/// (arithmetic shift, rounds toward −∞; the 1-ulp bias is irrelevant at
+/// learning-rate magnitudes — validated by `federated_vs_central` tests).
+#[inline]
+pub fn rescale_i128(v: i128) -> i128 {
+    v >> FRAC_BITS
+}
+
+/// Encode a slice.
+pub fn encode_vec(vs: &[f64]) -> Vec<i128> {
+    vs.iter().map(|&v| encode(v)).collect()
+}
+
+/// Decode a slice.
+pub fn decode_vec(vs: &[i128]) -> Vec<f64> {
+    vs.iter().map(|&v| decode(v)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_accuracy() {
+        for v in [0.0, 1.0, -1.0, 3.14159, -2.71828, 1e-5, -1e-5, 12345.678] {
+            let e = encode(v);
+            assert!((decode(e) - v).abs() < 1.0 / SCALE, "v={v}");
+        }
+    }
+
+    #[test]
+    fn product_scale() {
+        let a = 1.5f64;
+        let b = -2.25f64;
+        let prod = encode(a) * encode(b);
+        assert!((decode2(prod) - a * b).abs() < 4.0 / SCALE);
+        assert!((decode(rescale_i128(prod)) - a * b).abs() < 4.0 / SCALE);
+    }
+
+    #[test]
+    fn vec_roundtrip() {
+        let vs = vec![0.5, -0.25, 100.0, -1e-4];
+        let back = decode_vec(&encode_vec(&vs));
+        for (a, b) in vs.iter().zip(&back) {
+            assert!((a - b).abs() < 1.0 / SCALE);
+        }
+    }
+
+    #[test]
+    fn multi_scale_encodings() {
+        let v = -3.75f64;
+        assert!((decode2(encode2(v)) - v).abs() < 4.0 / (SCALE * SCALE));
+        assert!((decode3(encode3(v)) - v).abs() < 1e-9);
+        // product chains: single × single + encode2 stays consistent
+        let prod = encode(1.5) * encode(2.0) + encode2(-3.0);
+        assert!((decode2(prod) - 0.0).abs() < 1e-5);
+        let triple = encode(2.0) * encode(3.0) * encode(0.5);
+        assert!((decode3(triple) - 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rescale_near_integers() {
+        // rescale floors; decode after rescale must stay within 1 ulp
+        for v in [-3.0f64, -0.999, 0.001, 7.5] {
+            let double = encode(v) << FRAC_BITS;
+            assert!((decode(rescale_i128(double)) - v).abs() < 2.0 / SCALE);
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Homomorphic vector/matrix operations — the compute core of Protocol 3.
+//!
+//! The single hot operation is `[[g]] = Xᵀ · [[d]]`: for every feature
+//! `j`, `[[g_j]] = Σᵢ X[i,j] ⊗ [[dᵢ]] = Πᵢ [[dᵢ]]^enc(X[i,j]) mod n²`.
+//!
+//! Optimizations (measured in EXPERIMENTS.md §Perf):
+//!
+//! - one 4-bit [`crate::bignum::PowTable`] per ciphertext, shared by the
+//!   whole feature row (f exponentiations amortize one table build);
+//! - negative exponents via **one** ciphertext inversion per sample
+//!   (`[[d]]^(−k) = ([[d]]⁻¹)^k`), instead of per-entry 2048-bit
+//!   exponents (`n − k` is astronomically large as an exponent);
+//! - statistically-hiding additive masks: a uniform `MASK_BITS`-bit `R`
+//!   added homomorphically before the ciphertext leaves the party, so the
+//!   decrypting peer sees `v + R` only.
+
+use crate::bignum::BigUint;
+use crate::crypto::fixed;
+use crate::crypto::paillier::{Ciphertext, PublicKey};
+use crate::crypto::prng::ChaChaRng;
+use crate::linalg::Matrix;
+
+/// Mask width: covers the value magnitude (< 2⁹⁹ for our shapes, see
+/// DESIGN.md §7) plus ≥ 80 bits of statistical hiding.
+pub const MASK_BITS: usize = 180;
+
+/// Encrypt a vector of ring shares (interpreted as signed i64, single
+/// fixed-point scale) under `pk`.
+pub fn encrypt_share_vec(pk: &PublicKey, share: &[u64], rng: &mut ChaChaRng) -> Vec<Ciphertext> {
+    share
+        .iter()
+        .map(|&s| pk.encrypt_i128(s as i64 as i128, rng))
+        .collect()
+}
+
+/// Homomorphic `Xᵀ · [[d]]`: returns `f` ciphertexts, where entry `j`
+/// encrypts the *exact integer* `Σᵢ enc(X[i,j]) · dᵢ` (double fixed-point
+/// scale; no modular wraparound because `n ≫` value magnitudes).
+///
+/// The result ciphertexts are NOT re-randomized — callers must mask
+/// ([`mask_ct`]) before sending them anywhere.
+pub fn he_matvec_t(pk: &PublicKey, cts: &[Ciphertext], x: &Matrix) -> Vec<Ciphertext> {
+    assert_eq!(cts.len(), x.rows, "ciphertext count != sample count");
+    // encode once; outputs indexed by column
+    let exps: Vec<i64> = x.data.iter().map(|&v| fixed::encode(v) as i64).collect();
+    multi_exp(pk, cts, &exps, x.rows, x.cols, /*outputs_are_cols=*/ true)
+}
+
+/// Shared-squaring simultaneous exponentiation (Straus/Shamir-style):
+/// computes, for each output `o`, `Π_b table_b ^ |e(b,o)|` split into
+/// positive/negative accumulators, squaring each accumulator only **once
+/// per 4-bit window per output** instead of once per entry.
+///
+/// §Perf: this turns the ~26 Montgomery multiplications a 21-bit
+/// exponent costs on its own into ~5 (the nonzero windows), because the
+/// 20 squarings are shared by every base contributing to that output.
+/// Base tables are built once and reused across all outputs.
+///
+/// `exps` is row-major `rows×cols`; `outputs_are_cols` selects `Xᵀ·v`
+/// (bases = rows, outputs = cols) vs `X·v` (bases = cols, outputs = rows).
+fn multi_exp(
+    pk: &PublicKey,
+    cts: &[Ciphertext],
+    exps: &[i64],
+    rows: usize,
+    cols: usize,
+    outputs_are_cols: bool,
+) -> Vec<Ciphertext> {
+    let mont = pk.mont();
+    let (n_bases, n_out) = if outputs_are_cols { (rows, cols) } else { (cols, rows) };
+    assert_eq!(cts.len(), n_bases);
+    // exponent of base b for output o
+    let exp_at = |b: usize, o: usize| -> i64 {
+        if outputs_are_cols {
+            exps[b * cols + o]
+        } else {
+            exps[o * cols + b]
+        }
+    };
+
+    // 16-entry Montgomery window tables, one per base
+    let tables: Vec<Vec<Vec<u64>>> = cts
+        .iter()
+        .map(|ct| pk.pow_table(ct).into_raw_table())
+        .collect();
+
+    // widest exponent drives the window count
+    let max_bits = exps
+        .iter()
+        .map(|&e| 64 - e.unsigned_abs().leading_zeros() as usize)
+        .max()
+        .unwrap_or(0);
+    let nwin = (max_bits + 3) / 4;
+
+    let one = mont.one_mont();
+    let mut out = Vec::with_capacity(n_out);
+    for o in 0..n_out {
+        let mut acc_pos = one.clone();
+        let mut acc_neg = one.clone();
+        let mut pos_used = false;
+        let mut neg_used = false;
+        for w in (0..nwin).rev() {
+            if w != nwin - 1 {
+                for _ in 0..4 {
+                    if pos_used {
+                        acc_pos = mont.mul_mont(&acc_pos, &acc_pos);
+                    }
+                    if neg_used {
+                        acc_neg = mont.mul_mont(&acc_neg, &acc_neg);
+                    }
+                }
+            }
+            for b in 0..n_bases {
+                let e = exp_at(b, o);
+                if e == 0 {
+                    continue;
+                }
+                let idx = ((e.unsigned_abs() >> (4 * w)) & 15) as usize;
+                if idx == 0 {
+                    continue;
+                }
+                if e > 0 {
+                    acc_pos = mont.mul_mont(&acc_pos, &tables[b][idx]);
+                    pos_used = true;
+                } else {
+                    acc_neg = mont.mul_mont(&acc_neg, &tables[b][idx]);
+                    neg_used = true;
+                }
+            }
+        }
+        // pos · neg⁻¹, one inversion per output
+        let pos = mont.leave_mont(&acc_pos);
+        if !neg_used {
+            out.push(Ciphertext(pos));
+            continue;
+        }
+        let neg = mont.leave_mont(&acc_neg);
+        let inv = crate::bignum::modular::modinv(&neg, &pk.n2)
+            .expect("ciphertext accumulator not a unit");
+        out.push(Ciphertext(pos.mul_mod(&inv, &pk.n2)));
+    }
+    out
+}
+
+/// Homomorphic `X · [[v]]` (row side): returns `m` ciphertexts, entry `i`
+/// encrypting `Σⱼ enc(X[i,j]) · vⱼ`. One power table per *column*
+/// ciphertext, reused across all rows — the CAESAR baseline's
+/// `X·[[⟨w⟩]]` cross term.
+pub fn he_gemv(pk: &PublicKey, cts: &[Ciphertext], x: &Matrix) -> Vec<Ciphertext> {
+    assert_eq!(cts.len(), x.cols, "ciphertext count != feature count");
+    let exps: Vec<i64> = x.data.iter().map(|&v| fixed::encode(v) as i64).collect();
+    multi_exp(pk, cts, &exps, x.rows, x.cols, /*outputs_are_cols=*/ false)
+}
+
+/// Additively mask a ciphertext with a fresh uniform `MASK_BITS`-bit `R`
+/// (also re-randomizes it, since `Enc(R)` is fresh). Returns the masked
+/// ciphertext and `R`.
+pub fn mask_ct(pk: &PublicKey, ct: &Ciphertext, rng: &mut ChaChaRng) -> (Ciphertext, BigUint) {
+    let r = rng.next_biguint_exact_bits(MASK_BITS);
+    let enc_r = pk.encrypt_raw(&r.rem(&pk.n), rng);
+    (pk.add(ct, &enc_r), r)
+}
+
+/// Remove a mask from a *decrypted* raw plaintext and decode the signed
+/// value: `v = centered((raw − R) mod n)`.
+pub fn unmask_decode(pk: &PublicKey, raw: &BigUint, r: &BigUint) -> i128 {
+    let r_mod = r.rem(&pk.n);
+    let v = raw.add(&pk.n).sub(&r_mod).rem(&pk.n);
+    pk.decode_i128(&v)
+}
+
+/// Decode an unmasked double-scale matvec output into an f64 gradient
+/// entry, dividing by the sample count (the `1/m` of eq. 7/8 applied in
+/// plaintext, where fixed-point underflow can't bite).
+pub fn decode_gradient(v: i128, m_samples: usize) -> f64 {
+    fixed::decode2(v) / m_samples as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::paillier::Keypair;
+
+    #[test]
+    fn he_matvec_matches_plain() {
+        let mut rng = ChaChaRng::from_seed(100);
+        let kp = Keypair::generate(256, &mut rng);
+        let x = Matrix::from_rows(&[
+            &[1.0, -2.0, 0.0],
+            &[0.5, 3.0, -1.5],
+            &[-0.25, 0.0, 2.0],
+            &[1.5, 1.0, 1.0],
+        ]);
+        let d = vec![0.5f64, -1.0, 2.0, -0.125];
+        let d_enc: Vec<i128> = d.iter().map(|&v| fixed::encode(v)).collect();
+        let cts: Vec<Ciphertext> =
+            d_enc.iter().map(|&v| kp.pk.encrypt_i128(v, &mut rng)).collect();
+        let g = he_matvec_t(&kp.pk, &cts, &x);
+        for j in 0..x.cols {
+            let got = kp.sk.decrypt_i128(&g[j], &kp.pk);
+            let expect: i128 = (0..x.rows)
+                .map(|i| fixed::encode(x.get(i, j)) * d_enc[i])
+                .sum();
+            assert_eq!(got, expect, "feature {j}");
+            // f64 check
+            let plain: f64 = (0..x.rows).map(|i| x.get(i, j) * d[i]).sum();
+            assert!((fixed::decode2(got) - plain).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn mask_unmask_roundtrip() {
+        let mut rng = ChaChaRng::from_seed(101);
+        let kp = Keypair::generate(256, &mut rng);
+        for v in [0i128, 12345, -98765, 1 << 90, -(1 << 90)] {
+            let ct = kp.pk.encrypt_i128(v, &mut rng);
+            let (masked, r) = mask_ct(&kp.pk, &ct, &mut rng);
+            // the decryptor sees only v + R
+            let seen = kp.sk.decrypt_raw(&masked);
+            let back = unmask_decode(&kp.pk, &seen, &r);
+            assert_eq!(back, v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn mask_hides_value() {
+        // two different values, same mask distribution: the decrypted
+        // masked outputs must differ from the raw values by the mask
+        let mut rng = ChaChaRng::from_seed(102);
+        let kp = Keypair::generate(256, &mut rng);
+        let ct = kp.pk.encrypt_i128(7, &mut rng);
+        let (masked, r) = mask_ct(&kp.pk, &ct, &mut rng);
+        assert!(r.bit_len() >= MASK_BITS - 8, "mask too narrow");
+        let seen = kp.sk.decrypt_raw(&masked);
+        // the seen value is dominated by R, not by the payload
+        assert!(seen.bit_len() >= MASK_BITS - 8);
+    }
+
+    #[test]
+    fn encrypt_share_vec_roundtrip() {
+        let mut rng = ChaChaRng::from_seed(103);
+        let kp = Keypair::generate(192, &mut rng);
+        let shares: Vec<u64> = vec![0, 1, u64::MAX, 1 << 63, 42];
+        let cts = encrypt_share_vec(&kp.pk, &shares, &mut rng);
+        for (ct, &s) in cts.iter().zip(&shares) {
+            assert_eq!(kp.sk.decrypt_i128(ct, &kp.pk), s as i64 as i128);
+        }
+    }
+
+    #[test]
+    fn decode_gradient_scaling() {
+        let g = fixed::encode(2.0) * fixed::encode(3.0); // 6.0 double-scale
+        assert!((decode_gradient(g, 4) - 1.5).abs() < 1e-6);
+    }
+}

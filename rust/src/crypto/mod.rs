@@ -1,0 +1,12 @@
+//! Cryptographic substrate: CSPRNG, Paillier PHE, fixed-point codec.
+//!
+//! Everything is implemented from scratch on top of [`crate::bignum`]
+//! because the offline registry has no crypto/bignum crates. The Paillier
+//! scheme here is the PHE leg of the paper's Protocol 3 (secure gradient
+//! computing); the fixed-point codec bridges f64 model values into the
+//! Paillier plaintext space and the MPC ring.
+
+pub mod fixed;
+pub mod he_ops;
+pub mod paillier;
+pub mod prng;

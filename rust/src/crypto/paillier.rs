@@ -1,0 +1,464 @@
+//! Paillier partially homomorphic encryption (Paillier, EUROCRYPT '99).
+//!
+//! The scheme used by the paper's Protocol 3 (secure gradient computing):
+//! additively homomorphic, with plaintext-by-ciphertext multiplication.
+//! The paper sets the key length to 1024 bits; tests use smaller keys for
+//! speed, benches use 1024.
+//!
+//! Implementation notes (all standard, all exercised by tests):
+//!
+//! - generator `g = n + 1`, so encryption is
+//!   `Enc(m, r) = (1 + m·n) · rⁿ  mod n²` — one modpow instead of two.
+//! - decryption via CRT over `p²`, `q²` (≈3.5× faster than working mod `n²`).
+//! - [`PublicKey::precompute_pool`] pre-generates `rⁿ mod n²` obfuscators
+//!   so the training hot loop pays one bigint multiplication per
+//!   encryption instead of one modpow (see EXPERIMENTS.md §Perf).
+
+use crate::bignum::modular::{modinv, Montgomery};
+use crate::bignum::{prime, BigUint};
+use crate::crypto::prng::ChaChaRng;
+use std::sync::Mutex;
+
+/// Paillier public key (`n`, derived constants, optional obfuscator pool).
+pub struct PublicKey {
+    /// Modulus `n = p·q`.
+    pub n: BigUint,
+    /// `n²`.
+    pub n2: BigUint,
+    /// `n/2`, the signed-encoding threshold (values above are negative).
+    pub half_n: BigUint,
+    /// Montgomery context for `n²` (shared by enc/ops).
+    mont_n2: Montgomery,
+    /// Pool of precomputed obfuscators `rⁿ mod n²`.
+    pool: Mutex<Vec<BigUint>>,
+    /// Precomputed window table of `hⁿ mod n²` for a fixed random unit
+    /// `h` — fresh obfuscators are `(hⁿ)ˢ` with a short (256-bit) `s`,
+    /// the standard shortened-randomness speedup (≈3–6× over full
+    /// `rⁿ`; security rests on the DCR subgroup assumption, see
+    /// DESIGN.md §Perf).
+    hn_table: Vec<Vec<u64>>,
+}
+
+/// Paillier secret key (CRT form).
+pub struct SecretKey {
+    /// Prime factor `p`.
+    p: BigUint,
+    /// Prime factor `q`.
+    q: BigUint,
+    /// `p²`.
+    p2: BigUint,
+    /// `q²`.
+    q2: BigUint,
+    /// `λ_p = p−1`.
+    p_minus_1: BigUint,
+    /// `λ_q = q−1`.
+    q_minus_1: BigUint,
+    /// `h_p = L_p(g^{p−1} mod p²)⁻¹ mod p`.
+    hp: BigUint,
+    /// `h_q = L_q(g^{q−1} mod q²)⁻¹ mod q`.
+    hq: BigUint,
+    /// `q⁻¹ mod p` for CRT recombination.
+    q_inv_p: BigUint,
+    /// Montgomery context for `p²`.
+    mont_p2: Montgomery,
+    /// Montgomery context for `q²`.
+    mont_q2: Montgomery,
+    /// Copy of the modulus for range checks.
+    n: BigUint,
+}
+
+/// A Paillier key pair.
+pub struct Keypair {
+    /// Public half.
+    pub pk: PublicKey,
+    /// Secret half.
+    pub sk: SecretKey,
+}
+
+/// A Paillier ciphertext (value in `[0, n²)`).
+#[derive(Clone, PartialEq, Eq)]
+pub struct Ciphertext(pub BigUint);
+
+impl Keypair {
+    /// Generate a key pair with a `bits`-bit modulus `n`.
+    pub fn generate(bits: usize, rng: &mut ChaChaRng) -> Keypair {
+        assert!(bits >= 64, "Paillier modulus too small");
+        loop {
+            let p = prime::gen_prime(bits / 2, rng);
+            let q = prime::gen_prime(bits - bits / 2, rng);
+            if p == q {
+                continue;
+            }
+            let n = p.mul(&q);
+            if n.bit_len() != bits {
+                continue;
+            }
+            // gcd(n, (p-1)(q-1)) must be 1 — guaranteed when p, q are
+            // distinct primes of equal size, but check anyway.
+            let p1 = p.sub(&BigUint::one());
+            let q1 = q.sub(&BigUint::one());
+            if !n.gcd(&p1.mul(&q1)).is_one() {
+                continue;
+            }
+            let pk = PublicKey::from_n(n.clone());
+
+            let p2 = p.square();
+            let q2 = q.square();
+            // With g = n+1: g^{p-1} mod p² = 1 + n(p−1) mod p², and
+            // h_p = L_p(g^{p-1} mod p²)⁻¹ mod p where L_p(u) = (u−1)/p.
+            let gp = BigUint::one().add(&n.mul_mod(&p1, &p2));
+            let lp = gp.sub(&BigUint::one()).div(&p);
+            let hp = match modinv(&lp.rem(&p), &p) {
+                Some(v) => v,
+                None => continue,
+            };
+            let gq = BigUint::one().add(&n.mul_mod(&q1, &q2));
+            let lq = gq.sub(&BigUint::one()).div(&q);
+            let hq = match modinv(&lq.rem(&q), &q) {
+                Some(v) => v,
+                None => continue,
+            };
+            let q_inv_p = match modinv(&q.rem(&p), &p) {
+                Some(v) => v,
+                None => continue,
+            };
+            let mont_p2 = Montgomery::new(&p2);
+            let mont_q2 = Montgomery::new(&q2);
+            let sk = SecretKey {
+                p,
+                q,
+                p2,
+                q2,
+                p_minus_1: p1,
+                q_minus_1: q1,
+                hp,
+                hq,
+                q_inv_p,
+                mont_p2,
+                mont_q2,
+                n,
+            };
+            return Keypair { pk, sk };
+        }
+    }
+}
+
+impl PublicKey {
+    /// Build a public key from the modulus.
+    pub fn from_n(n: BigUint) -> PublicKey {
+        let n2 = n.square();
+        let half_n = n.shr_bits(1);
+        let mont_n2 = Montgomery::new(&n2);
+        // h: deterministic pseudo-random unit derived from n (the secret
+        // randomness of each obfuscator is the exponent s, not h)
+        let mut hrng = ChaChaRng::from_seed(
+            n.limbs().first().copied().unwrap_or(3) ^ 0x9e37_79b9_7f4a_7c15,
+        );
+        let h = loop {
+            let cand = hrng.next_biguint_below(&n);
+            if !cand.is_zero() && cand.gcd(&n).is_one() {
+                break cand;
+            }
+        };
+        let hn = Montgomery::new(&n2).pow(&h, &n);
+        // window table of hn in Montgomery form (PowTable layout)
+        let hn_table = {
+            let t = crate::bignum::PowTable::new(&mont_n2, &hn);
+            t.into_raw_table()
+        };
+        PublicKey { n, n2, half_n, mont_n2, pool: Mutex::new(Vec::new()), hn_table }
+    }
+
+    /// Serialized size of one ciphertext in bytes (2·|n|).
+    pub fn ciphertext_bytes(&self) -> usize {
+        (self.n2.bit_len() + 7) / 8
+    }
+
+    /// Draw a fresh obfuscator `rⁿ mod n²` (from the pool if available).
+    fn obfuscator(&self, rng: &mut ChaChaRng) -> BigUint {
+        if let Some(v) = self.pool.lock().unwrap().pop() {
+            return v;
+        }
+        self.gen_obfuscator(rng)
+    }
+
+    /// Compute one fresh obfuscator: `(hⁿ)ˢ mod n²` with a 256-bit
+    /// exponent over the precomputed window table (§Perf: ~3–6× faster
+    /// than a full `rⁿ` modpow; see the field docs on `hn_table`).
+    fn gen_obfuscator(&self, rng: &mut ChaChaRng) -> BigUint {
+        // exponent width: 2× the statistical security target, scaled with
+        // the key (160 bits ≈ 80-bit statistical hiding for bench keys,
+        // 256 for 1024-bit+ production keys)
+        let s_bits = (self.n.bit_len() / 4).clamp(160, 256);
+        let s = rng.next_biguint_exact_bits(s_bits);
+        let t = crate::bignum::PowTable::from_raw_table(&self.mont_n2, &self.hn_table);
+        t.pow(&s)
+    }
+
+    /// The classic full-width obfuscator `rⁿ mod n²` (kept for the §Perf
+    /// before/after comparison and for callers wanting textbook Paillier).
+    pub fn gen_obfuscator_full(&self, rng: &mut ChaChaRng) -> BigUint {
+        let r = loop {
+            let r = rng.next_biguint_below(&self.n);
+            if !r.is_zero() {
+                break r;
+            }
+        };
+        self.mont_n2.pow(&r, &self.n)
+    }
+
+    /// Pre-generate `count` obfuscators into the pool (perf-optimized
+    /// setup path; see EXPERIMENTS.md §Perf).
+    pub fn precompute_pool(&self, count: usize, rng: &mut ChaChaRng) {
+        let mut fresh = Vec::with_capacity(count);
+        for _ in 0..count {
+            fresh.push(self.gen_obfuscator(rng));
+        }
+        self.pool.lock().unwrap().extend(fresh);
+    }
+
+    /// Number of pooled obfuscators remaining.
+    pub fn pool_len(&self) -> usize {
+        self.pool.lock().unwrap().len()
+    }
+
+    /// Encrypt a non-negative plaintext `m < n`.
+    pub fn encrypt_raw(&self, m: &BigUint, rng: &mut ChaChaRng) -> Ciphertext {
+        debug_assert!(m < &self.n, "plaintext out of range");
+        // (1 + m n) * r^n  mod n²
+        let gm = BigUint::one().add(&m.mul(&self.n)).rem(&self.n2);
+        let rn = self.obfuscator(rng);
+        Ciphertext(self.mont_n2.mul(&gm, &rn))
+    }
+
+    /// Encrypt a signed integer (fixed-point encoded) using the centered
+    /// embedding: negatives map to `n − |v|`.
+    pub fn encrypt_i128(&self, v: i128, rng: &mut ChaChaRng) -> Ciphertext {
+        self.encrypt_raw(&self.encode_i128(v), rng)
+    }
+
+    /// Centered embedding of a signed integer into `Z_n`.
+    pub fn encode_i128(&self, v: i128) -> BigUint {
+        if v >= 0 {
+            BigUint::from_u128(v as u128)
+        } else {
+            self.n.sub(&BigUint::from_u128(v.unsigned_abs()))
+        }
+    }
+
+    /// Inverse of [`Self::encode_i128`] (requires `|v| < n/2`).
+    pub fn decode_i128(&self, m: &BigUint) -> i128 {
+        if m > &self.half_n {
+            let mag = self.n.sub(m);
+            let limbs = mag.limbs();
+            let lo = limbs.first().copied().unwrap_or(0) as u128;
+            let hi = limbs.get(1).copied().unwrap_or(0) as u128;
+            -(((hi << 64) | lo) as i128)
+        } else {
+            let limbs = m.limbs();
+            let lo = limbs.first().copied().unwrap_or(0) as u128;
+            let hi = limbs.get(1).copied().unwrap_or(0) as u128;
+            ((hi << 64) | lo) as i128
+        }
+    }
+
+    /// Homomorphic addition: `Enc(a) ⊕ Enc(b) = Enc(a + b)`.
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        Ciphertext(self.mont_n2.mul(&a.0, &b.0))
+    }
+
+    /// Homomorphic plaintext addition: `Enc(a) ⊕ b = Enc(a + b)`.
+    pub fn add_plain(&self, a: &Ciphertext, b: &BigUint) -> Ciphertext {
+        let gm = BigUint::one().add(&b.mul(&self.n)).rem(&self.n2);
+        Ciphertext(self.mont_n2.mul(&a.0, &gm))
+    }
+
+    /// Homomorphic scalar multiplication: `Enc(a) ⊗ k = Enc(a·k)` for a
+    /// non-negative scalar.
+    pub fn mul_plain(&self, a: &Ciphertext, k: &BigUint) -> Ciphertext {
+        Ciphertext(self.mont_n2.pow(&a.0, k))
+    }
+
+    /// Homomorphic signed scalar multiplication via the centered encoding.
+    pub fn mul_plain_i128(&self, a: &Ciphertext, k: i128) -> Ciphertext {
+        self.mul_plain(a, &self.encode_i128(k))
+    }
+
+    /// Homomorphic negation.
+    pub fn neg(&self, a: &Ciphertext) -> Ciphertext {
+        self.mul_plain(a, &self.n.sub(&BigUint::one()))
+    }
+
+    /// Homomorphic subtraction `Enc(a) ⊖ Enc(b)`.
+    pub fn sub(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        self.add(a, &self.neg(b))
+    }
+
+    /// A fresh encryption of zero (used as accumulator seed).
+    pub fn encrypt_zero(&self, rng: &mut ChaChaRng) -> Ciphertext {
+        self.encrypt_raw(&BigUint::zero(), rng)
+    }
+
+    /// The multiplicative identity ciphertext `Enc(0; r=1)` —
+    /// deterministic, only safe as an accumulator seed for values that
+    /// get re-randomized (masked) before leaving the party.
+    pub fn one_raw(&self) -> Ciphertext {
+        Ciphertext(BigUint::one())
+    }
+
+    /// Multiplicative inverse of a ciphertext mod `n²`
+    /// (= `Enc(−m)` with inverted randomness). Always exists for honest
+    /// ciphertexts (they are units mod `n²`).
+    pub fn inv_ct(&self, a: &Ciphertext) -> Ciphertext {
+        Ciphertext(
+            crate::bignum::modular::modinv(&a.0, &self.n2)
+                .expect("ciphertext not a unit mod n² (malformed)"),
+        )
+    }
+
+    /// Fixed-base power table over `n²` for repeated `ct^k` with the same
+    /// ciphertext — the Protocol 3 hot path.
+    pub fn pow_table<'a>(&'a self, ct: &Ciphertext) -> crate::bignum::PowTable<'a> {
+        crate::bignum::PowTable::new(&self.mont_n2, &ct.0)
+    }
+
+    /// The `n²` Montgomery context (Montgomery-domain accumulation in
+    /// [`crate::crypto::he_ops`]).
+    pub fn mont(&self) -> &Montgomery {
+        &self.mont_n2
+    }
+
+    /// Raw ciphertext product mod `n²` (homomorphic addition without the
+    /// convenience wrapper; used by accumulator loops).
+    pub fn mul_raw(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        Ciphertext(self.mont_n2.mul(&a.0, &b.0))
+    }
+}
+
+impl SecretKey {
+    /// Decrypt to the raw plaintext in `[0, n)`.
+    pub fn decrypt_raw(&self, c: &Ciphertext) -> BigUint {
+        // CRT: m_p = L_p(c^{p−1} mod p²)·h_p mod p, likewise mod q,
+        // then Garner recombination.
+        let cp = self.mont_p2.pow(&c.0.rem(&self.p2), &self.p_minus_1);
+        let cq = self.mont_q2.pow(&c.0.rem(&self.q2), &self.q_minus_1);
+        let lp = cp.sub(&BigUint::one()).div(&self.p);
+        let lq = cq.sub(&BigUint::one()).div(&self.q);
+        let mp = lp.rem(&self.p).mul_mod(&self.hp, &self.p);
+        let mq = lq.rem(&self.q).mul_mod(&self.hq, &self.q);
+        // m = mq + q · ((mp − mq) · q⁻¹ mod p)
+        let diff = mp.sub_mod(&mq.rem(&self.p), &self.p);
+        let t = diff.mul_mod(&self.q_inv_p, &self.p);
+        mq.add(&self.q.mul(&t))
+    }
+
+    /// Decrypt to a signed integer (centered decoding; `|v| < n/2`).
+    pub fn decrypt_i128(&self, c: &Ciphertext, pk: &PublicKey) -> i128 {
+        pk.decode_i128(&self.decrypt_raw(c))
+    }
+
+    /// The modulus this key decrypts for.
+    pub fn n(&self) -> &BigUint {
+        &self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_keypair(seed: u64) -> (Keypair, ChaChaRng) {
+        let mut rng = ChaChaRng::from_seed(seed);
+        let kp = Keypair::generate(256, &mut rng);
+        (kp, rng)
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (kp, mut rng) = small_keypair(30);
+        for v in [0i128, 1, -1, 42, -42, 1 << 40, -(1 << 40), i64::MAX as i128] {
+            let c = kp.pk.encrypt_i128(v, &mut rng);
+            assert_eq!(kp.sk.decrypt_i128(&c, &kp.pk), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn probabilistic_encryption() {
+        let (kp, mut rng) = small_keypair(31);
+        let a = kp.pk.encrypt_i128(7, &mut rng);
+        let b = kp.pk.encrypt_i128(7, &mut rng);
+        assert_ne!(a.0, b.0, "two encryptions of the same value must differ");
+    }
+
+    #[test]
+    fn homomorphic_add() {
+        let (kp, mut rng) = small_keypair(32);
+        for (x, y) in [(3i128, 4i128), (-100, 40), (1 << 30, -(1 << 31)), (0, 0)] {
+            let cx = kp.pk.encrypt_i128(x, &mut rng);
+            let cy = kp.pk.encrypt_i128(y, &mut rng);
+            let sum = kp.pk.add(&cx, &cy);
+            assert_eq!(kp.sk.decrypt_i128(&sum, &kp.pk), x + y);
+        }
+    }
+
+    #[test]
+    fn homomorphic_sub_and_neg() {
+        let (kp, mut rng) = small_keypair(33);
+        let cx = kp.pk.encrypt_i128(1000, &mut rng);
+        let cy = kp.pk.encrypt_i128(1, &mut rng);
+        assert_eq!(kp.sk.decrypt_i128(&kp.pk.sub(&cx, &cy), &kp.pk), 999);
+        assert_eq!(kp.sk.decrypt_i128(&kp.pk.neg(&cx), &kp.pk), -1000);
+    }
+
+    #[test]
+    fn homomorphic_scalar_mul() {
+        let (kp, mut rng) = small_keypair(34);
+        for (x, k) in [(5i128, 7i128), (-5, 7), (5, -7), (-5, -7), (1 << 20, 1 << 20)] {
+            let cx = kp.pk.encrypt_i128(x, &mut rng);
+            let prod = kp.pk.mul_plain_i128(&cx, k);
+            assert_eq!(kp.sk.decrypt_i128(&prod, &kp.pk), x * k, "x={x} k={k}");
+        }
+    }
+
+    #[test]
+    fn add_plain() {
+        let (kp, mut rng) = small_keypair(35);
+        let cx = kp.pk.encrypt_i128(10, &mut rng);
+        let c = kp.pk.add_plain(&cx, &kp.pk.encode_i128(-3));
+        assert_eq!(kp.sk.decrypt_i128(&c, &kp.pk), 7);
+    }
+
+    #[test]
+    fn obfuscator_pool_used_and_correct() {
+        let (kp, mut rng) = small_keypair(36);
+        kp.pk.precompute_pool(4, &mut rng);
+        assert_eq!(kp.pk.pool_len(), 4);
+        let c = kp.pk.encrypt_i128(123, &mut rng);
+        assert_eq!(kp.pk.pool_len(), 3);
+        assert_eq!(kp.sk.decrypt_i128(&c, &kp.pk), 123);
+    }
+
+    #[test]
+    fn linear_combination_matches_plaintext() {
+        // The exact shape of Protocol 3's hot op: Xᵀ · [[d]].
+        let (kp, mut rng) = small_keypair(37);
+        let d: Vec<i128> = vec![3, -1, 4, -1, 5];
+        let x: Vec<i128> = vec![2, 7, 1, -8, 2];
+        let cts: Vec<Ciphertext> =
+            d.iter().map(|&v| kp.pk.encrypt_i128(v, &mut rng)).collect();
+        let mut acc = kp.pk.encrypt_zero(&mut rng);
+        for (ct, &xi) in cts.iter().zip(&x) {
+            acc = kp.pk.add(&acc, &kp.pk.mul_plain_i128(ct, xi));
+        }
+        let expect: i128 = d.iter().zip(&x).map(|(&a, &b)| a * b).sum();
+        assert_eq!(kp.sk.decrypt_i128(&acc, &kp.pk), expect);
+    }
+
+    #[test]
+    fn keygen_distinct_keys() {
+        let mut rng = ChaChaRng::from_seed(38);
+        let a = Keypair::generate(128, &mut rng);
+        let b = Keypair::generate(128, &mut rng);
+        assert_ne!(a.pk.n, b.pk.n);
+    }
+}

@@ -1,0 +1,288 @@
+//! ChaCha20-based cryptographically secure PRNG.
+//!
+//! Implemented from the RFC 8439 quarter-round; the offline registry has
+//! `rand_core` but no `rand`/`rand_chacha`, so the generator is
+//! self-contained. Deterministic seeding (`from_seed`) powers reproducible
+//! tests and experiments; `from_entropy` seeds from `/dev/urandom` for
+//! key generation.
+
+/// ChaCha20 stream-cipher PRNG.
+///
+/// Produces the ChaCha20 keystream of a 256-bit key (the seed), a zero
+/// nonce, and an incrementing 64-bit block counter.
+pub struct ChaChaRng {
+    /// 16-word ChaCha state template (constants, key, counter, nonce).
+    state: [u32; 16],
+    /// Buffered keystream block.
+    buf: [u32; 16],
+    /// Next unread word index in `buf` (16 = empty).
+    idx: usize,
+}
+
+const CHACHA_CONST: [u32; 4] = [0x6170_7865, 0x3320_646e, 0x7962_2d32, 0x6b20_6574];
+
+#[inline(always)]
+fn quarter_round(s: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(16);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(12);
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(8);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(7);
+}
+
+impl ChaChaRng {
+    /// Deterministic generator from a 64-bit seed (test/reproducibility
+    /// path). The seed is expanded into the 256-bit key by repetition
+    /// with distinct word tweaks.
+    pub fn from_seed(seed: u64) -> Self {
+        let mut key = [0u32; 8];
+        let lo = seed as u32;
+        let hi = (seed >> 32) as u32;
+        for (i, k) in key.iter_mut().enumerate() {
+            *k = lo ^ hi.rotate_left(i as u32 * 7) ^ (0x9e37_79b9u32.wrapping_mul(i as u32 + 1));
+        }
+        Self::from_key(key)
+    }
+
+    /// Generator keyed from 32 bytes.
+    pub fn from_key_bytes(bytes: &[u8; 32]) -> Self {
+        let mut key = [0u32; 8];
+        for (i, k) in key.iter_mut().enumerate() {
+            *k = u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        Self::from_key(key)
+    }
+
+    /// Seed from `/dev/urandom` (key-generation path).
+    pub fn from_entropy() -> Self {
+        use std::io::Read;
+        let mut bytes = [0u8; 32];
+        let mut f = std::fs::File::open("/dev/urandom").expect("open /dev/urandom");
+        f.read_exact(&mut bytes).expect("read /dev/urandom");
+        Self::from_key_bytes(&bytes)
+    }
+
+    fn from_key(key: [u32; 8]) -> Self {
+        let mut state = [0u32; 16];
+        state[..4].copy_from_slice(&CHACHA_CONST);
+        state[4..12].copy_from_slice(&key);
+        // words 12..13: 64-bit block counter; 14..15: nonce (zero)
+        ChaChaRng { state, buf: [0; 16], idx: 16 }
+    }
+
+    /// Generate the next keystream block into `buf`.
+    fn refill(&mut self) {
+        let mut working = self.state;
+        for _ in 0..10 {
+            // column rounds
+            quarter_round(&mut working, 0, 4, 8, 12);
+            quarter_round(&mut working, 1, 5, 9, 13);
+            quarter_round(&mut working, 2, 6, 10, 14);
+            quarter_round(&mut working, 3, 7, 11, 15);
+            // diagonal rounds
+            quarter_round(&mut working, 0, 5, 10, 15);
+            quarter_round(&mut working, 1, 6, 11, 12);
+            quarter_round(&mut working, 2, 7, 8, 13);
+            quarter_round(&mut working, 3, 4, 9, 14);
+        }
+        for i in 0..16 {
+            self.buf[i] = working[i].wrapping_add(self.state[i]);
+        }
+        // increment 64-bit counter
+        let counter = (self.state[12] as u64 | ((self.state[13] as u64) << 32)).wrapping_add(1);
+        self.state[12] = counter as u32;
+        self.state[13] = (counter >> 32) as u32;
+        self.idx = 0;
+    }
+
+    /// Next 32 random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        if self.idx >= 16 {
+            self.refill();
+        }
+        let w = self.buf[self.idx];
+        self.idx += 1;
+        w
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let lo = self.next_u32() as u64;
+        let hi = self.next_u32() as u64;
+        lo | (hi << 32)
+    }
+
+    /// Uniform in `[0, bound)` by rejection sampling (`bound > 0`).
+    pub fn next_u64_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        // rejection zone to remove modulo bias
+        let zone = u64::MAX - u64::MAX % bound;
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % bound;
+            }
+        }
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fill a byte slice with random bytes.
+    pub fn fill_bytes(&mut self, out: &mut [u8]) {
+        let mut i = 0;
+        while i < out.len() {
+            let w = self.next_u32().to_le_bytes();
+            let n = (out.len() - i).min(4);
+            out[i..i + n].copy_from_slice(&w[..n]);
+            i += n;
+        }
+    }
+
+    /// Random [`crate::bignum::BigUint`] with exactly `bits` bits
+    /// (top bit set) — prime-generation helper.
+    pub fn next_biguint_exact_bits(&mut self, bits: usize) -> crate::bignum::BigUint {
+        assert!(bits > 0);
+        let limbs = (bits + 63) / 64;
+        let mut v: Vec<u64> = (0..limbs).map(|_| self.next_u64()).collect();
+        let top_bits = bits - (limbs - 1) * 64;
+        let hi = &mut v[limbs - 1];
+        if top_bits == 64 {
+            *hi |= 1 << 63;
+        } else {
+            *hi &= (1u64 << top_bits) - 1;
+            *hi |= 1 << (top_bits - 1);
+        }
+        crate::bignum::BigUint::from_limbs(v)
+    }
+
+    /// Uniform [`crate::bignum::BigUint`] in `[0, bound)` by rejection.
+    pub fn next_biguint_below(&mut self, bound: &crate::bignum::BigUint) -> crate::bignum::BigUint {
+        assert!(!bound.is_zero());
+        let bits = bound.bit_len();
+        let limbs = (bits + 63) / 64;
+        let extra = limbs * 64 - bits;
+        loop {
+            let mut v: Vec<u64> = (0..limbs).map(|_| self.next_u64()).collect();
+            if let Some(hi) = v.last_mut() {
+                *hi >>= extra;
+            }
+            let x = crate::bignum::BigUint::from_limbs(v);
+            if x < *bound {
+                return x;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc8439_keystream_vector() {
+        // RFC 8439 §2.3.2 test vector: key 00 01 02 .. 1f, nonce
+        // 000000090000004a00000000, counter 1. Our generator uses a zero
+        // nonce, so instead verify the all-zero key/nonce/counter-0 block,
+        // a widely published ChaCha20 vector.
+        let mut rng = ChaChaRng::from_key_bytes(&[0u8; 32]);
+        let mut block = [0u8; 64];
+        rng.fill_bytes(&mut block);
+        let expected: [u8; 16] = [
+            0x76, 0xb8, 0xe0, 0xad, 0xa0, 0xf1, 0x3d, 0x90, 0x40, 0x5d, 0x6a, 0xe5, 0x53, 0x86,
+            0xbd, 0x28,
+        ];
+        assert_eq!(&block[..16], &expected);
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = ChaChaRng::from_seed(42);
+        let mut b = ChaChaRng::from_seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = ChaChaRng::from_seed(43);
+        let same: Vec<u64> = (0..8).map(|_| ChaChaRng::from_seed(42).next_u64()).collect();
+        assert!(same.iter().all(|&v| v == same[0]));
+        assert_ne!(ChaChaRng::from_seed(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn below_bound_uniform_ish() {
+        let mut rng = ChaChaRng::from_seed(7);
+        let mut counts = [0usize; 10];
+        for _ in 0..10_000 {
+            counts[rng.next_u64_below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((800..1200).contains(&c), "bucket count {c} out of range");
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = ChaChaRng::from_seed(8);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = rng.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = ChaChaRng::from_seed(9);
+        let n = 20_000;
+        let (mut mean, mut var) = (0.0, 0.0);
+        let vals: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        for &v in &vals {
+            mean += v;
+        }
+        mean /= n as f64;
+        for &v in &vals {
+            var += (v - mean) * (v - mean);
+        }
+        var /= n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn biguint_exact_bits() {
+        let mut rng = ChaChaRng::from_seed(10);
+        for bits in [1usize, 7, 63, 64, 65, 512, 1024] {
+            let v = rng.next_biguint_exact_bits(bits);
+            assert_eq!(v.bit_len(), bits, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn biguint_below() {
+        let mut rng = ChaChaRng::from_seed(11);
+        let bound = rng.next_biguint_exact_bits(200);
+        for _ in 0..50 {
+            assert!(rng.next_biguint_below(&bound) < bound);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Minimal CSV reader/writer (numeric data only).
+//!
+//! Used to load the real UCI/dvisits files when present (drop them under
+//! `data/` and pass `--csv`) and to dump loss curves / bench series for
+//! EXPERIMENTS.md.
+
+use super::Dataset;
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Parse a numeric CSV. `label_col` selects the response column; a header
+/// row is auto-detected (first row with any non-numeric cell is skipped).
+pub fn read_dataset(path: &Path, label_col: usize) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        let parsed: Option<Vec<f64>> = cells.iter().map(|c| c.parse().ok()).collect();
+        match parsed {
+            Some(v) => {
+                if let Some(first) = rows.first() {
+                    if v.len() != first.len() {
+                        bail!("ragged CSV at line {}", lineno + 1);
+                    }
+                }
+                rows.push(v);
+            }
+            None if rows.is_empty() => continue, // header
+            None => bail!("non-numeric cell at line {}", lineno + 1),
+        }
+    }
+    if rows.is_empty() {
+        bail!("no data rows in {}", path.display());
+    }
+    let width = rows[0].len();
+    if label_col >= width {
+        bail!("label column {label_col} out of range (width {width})");
+    }
+    let mut y = Vec::with_capacity(rows.len());
+    let mut data = Vec::with_capacity(rows.len() * (width - 1));
+    for row in &rows {
+        y.push(row[label_col]);
+        for (j, &v) in row.iter().enumerate() {
+            if j != label_col {
+                data.push(v);
+            }
+        }
+    }
+    Ok(Dataset {
+        x: Matrix::from_vec(rows.len(), width - 1, data),
+        y,
+        name: path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "csv".into()),
+    })
+}
+
+/// Write a table of named columns as CSV (bench output helper).
+pub fn write_columns(path: &Path, headers: &[&str], cols: &[Vec<f64>]) -> Result<()> {
+    assert_eq!(headers.len(), cols.len());
+    let rows = cols.first().map_or(0, |c| c.len());
+    assert!(cols.iter().all(|c| c.len() == rows), "ragged columns");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", headers.join(","))?;
+    for i in 0..rows {
+        let row: Vec<String> = cols.iter().map(|c| format!("{}", c[i])).collect();
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_with_header() {
+        let dir = std::env::temp_dir().join("efmvfl_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        std::fs::write(&p, "a,b,label\n1.5,2.0,1\n-0.5,3.25,0\n").unwrap();
+        let d = read_dataset(&p, 2).unwrap();
+        assert_eq!(d.x.rows, 2);
+        assert_eq!(d.x.cols, 2);
+        assert_eq!(d.y, vec![1.0, 0.0]);
+        assert_eq!(d.x.row(1), &[-0.5, 3.25]);
+    }
+
+    #[test]
+    fn label_col_in_middle() {
+        let dir = std::env::temp_dir().join("efmvfl_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.csv");
+        std::fs::write(&p, "1,9,2\n3,8,4\n").unwrap();
+        let d = read_dataset(&p, 1).unwrap();
+        assert_eq!(d.y, vec![9.0, 8.0]);
+        assert_eq!(d.x.row(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let dir = std::env::temp_dir().join("efmvfl_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("r.csv");
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        assert!(read_dataset(&p, 0).is_err());
+    }
+
+    #[test]
+    fn write_columns_emits_csv() {
+        let dir = std::env::temp_dir().join("efmvfl_csv_test");
+        let p = dir.join("w.csv");
+        write_columns(&p, &["iter", "loss"], &[vec![1.0, 2.0], vec![0.5, 0.25]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "iter,loss\n1,0.5\n2,0.25\n");
+    }
+}

@@ -1,0 +1,134 @@
+//! Datasets: containers, synthetic generators, vertical partitioning,
+//! and CSV I/O.
+//!
+//! The paper evaluates on the UCI *default-of-credit-card* dataset (LR)
+//! and the R *dvisits* survey (PR). This environment is offline, so
+//! [`synthetic`] generates statistical stand-ins with the same sample
+//! counts, dimensionalities, and response structure (see DESIGN.md §3 for
+//! the substitution rationale); [`csv`] can load the real files when they
+//! are present.
+
+pub mod csv;
+pub mod synthetic;
+mod vertical;
+
+pub use vertical::{split_vertical, VerticalSplit};
+
+use crate::crypto::prng::ChaChaRng;
+use crate::linalg::Matrix;
+
+/// A labelled dataset (dense features + response vector).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Feature matrix (rows = samples).
+    pub x: Matrix,
+    /// Response: {0,1} for classification, counts for Poisson.
+    pub y: Vec<f64>,
+    /// Dataset name for reports.
+    pub name: String,
+}
+
+impl Dataset {
+    /// Sample count.
+    pub fn len(&self) -> usize {
+        self.x.rows
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.x.rows == 0
+    }
+
+    /// Z-score standardization, column-wise, in place (FATE's default
+    /// preprocessing for hetero-LR). Constant columns are left **as is**
+    /// so an intercept/bias column survives preprocessing.
+    pub fn standardize(&mut self) {
+        let (m, n) = (self.x.rows, self.x.cols);
+        for j in 0..n {
+            let mut mean = 0.0;
+            for i in 0..m {
+                mean += self.x.get(i, j);
+            }
+            mean /= m as f64;
+            let mut var = 0.0;
+            for i in 0..m {
+                let d = self.x.get(i, j) - mean;
+                var += d * d;
+            }
+            var /= m as f64;
+            let sd = var.sqrt();
+            if sd <= 1e-12 {
+                continue; // constant column (e.g. bias) — keep it
+            }
+            for i in 0..m {
+                let v = (self.x.get(i, j) - mean) / sd;
+                self.x.set(i, j, v);
+            }
+        }
+    }
+
+    /// Shuffle rows and split into (train, test) with `train_frac` in the
+    /// train set (paper: 7:3).
+    pub fn train_test_split(&self, train_frac: f64, rng: &mut ChaChaRng) -> (Dataset, Dataset) {
+        let m = self.len();
+        let mut idx: Vec<usize> = (0..m).collect();
+        // Fisher-Yates
+        for i in (1..m).rev() {
+            let j = rng.next_u64_below(i as u64 + 1) as usize;
+            idx.swap(i, j);
+        }
+        let cut = ((m as f64) * train_frac).round() as usize;
+        let (tr_idx, te_idx) = idx.split_at(cut);
+        let make = |ids: &[usize], tag: &str| Dataset {
+            x: self.x.gather_rows(ids),
+            y: ids.iter().map(|&i| self.y[i]).collect(),
+            name: format!("{}-{tag}", self.name),
+        };
+        (make(tr_idx, "train"), make(te_idx, "test"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset {
+            x: Matrix::from_rows(&[&[1.0, 10.0], &[2.0, 20.0], &[3.0, 30.0], &[4.0, 40.0]]),
+            y: vec![0.0, 1.0, 0.0, 1.0],
+            name: "toy".into(),
+        }
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut d = toy();
+        d.standardize();
+        for j in 0..2 {
+            let col = d.x.col(j);
+            let mean: f64 = col.iter().sum::<f64>() / col.len() as f64;
+            let var: f64 =
+                col.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / col.len() as f64;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn split_preserves_rows_and_pairs() {
+        let d = toy();
+        let mut rng = ChaChaRng::from_seed(80);
+        let (tr, te) = d.train_test_split(0.75, &mut rng);
+        assert_eq!(tr.len() + te.len(), d.len());
+        assert_eq!(tr.len(), 3);
+        // every (x-row, y) pair in the splits exists in the original
+        for split in [&tr, &te] {
+            for i in 0..split.len() {
+                let row = split.x.row(i);
+                let found = (0..d.len())
+                    .any(|k| d.x.row(k) == row && d.y[k] == split.y[i]);
+                assert!(found, "row {i} lost its label pairing");
+            }
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Synthetic stand-ins for the paper's evaluation datasets.
+//!
+//! Offline substitution (DESIGN.md §3): same sample counts, feature
+//! dimensionalities, and response structure as the originals, generated
+//! from a seeded PRNG so every experiment is reproducible.
+//!
+//! - [`credit_default_like`] ↔ UCI *default of credit card clients*
+//!   (30 000 × 23 features + binary label, ~22 % positive rate).
+//! - [`dvisits_like`] ↔ R *dvisits* (Australian Health Survey; 5 190 × 18
+//!   features + doctor-visit counts, mean ≈ 0.3, heavily zero-inflated).
+
+use super::Dataset;
+use crate::crypto::prng::ChaChaRng;
+use crate::glm::sigmoid;
+use crate::linalg::Matrix;
+
+/// Sample a Poisson variate by CDF inversion (rates are O(1) here).
+fn poisson_sample(rate: f64, rng: &mut ChaChaRng) -> f64 {
+    let mut k = 0u32;
+    let mut p = (-rate).exp();
+    let mut cdf = p;
+    let u = rng.next_f64();
+    while u > cdf && k < 1000 {
+        k += 1;
+        p *= rate / k as f64;
+        cdf += p;
+    }
+    k as f64
+}
+
+/// Credit-default-style binary classification data.
+///
+/// Feature blocks mimic the UCI schema: one credit-limit log-normal,
+/// demographic ordinals, six payment-status ordinals (the strongest
+/// predictors in the real data), six bill-amount log-normals with strong
+/// serial correlation, and five payment-amount log-normals. The label is
+/// Bernoulli of a logistic score over a sparse true weight vector plus
+/// intercept tuned for ≈22 % positives; signal strength is calibrated so
+/// centralized LR lands near the paper's AUC ≈ 0.71–0.72.
+pub fn credit_default_like(n_samples: usize, n_features: usize, seed: u64) -> Dataset {
+    let mut rng = ChaChaRng::from_seed(seed);
+    let mut x = Matrix::zeros(n_samples, n_features);
+
+    // true weights: payment-status block is strongly predictive; the rest weak
+    let mut w_true = vec![0.0; n_features];
+    for (j, w) in w_true.iter_mut().enumerate() {
+        *w = match j {
+            0 => -0.25,          // credit limit: higher limit, lower risk
+            1..=3 => 0.05,       // demographics: weak
+            4..=9 => 0.55,       // payment-status ordinals: strong
+            10..=15 => 0.10,     // bill amounts: mild
+            _ => -0.15,          // payment amounts: protective
+        };
+        if j >= n_features.min(21) {
+            *w = 0.08 * rng.next_gaussian(); // tail features if wider
+        }
+    }
+
+    let mut y = Vec::with_capacity(n_samples);
+    for i in 0..n_samples {
+        // shared latent "distress" factor drives correlated features
+        let distress = rng.next_gaussian();
+        let mut z = 0.0;
+        for j in 0..n_features {
+            let v = match j {
+                0 => (rng.next_gaussian() * 0.8 + 11.5).exp() / 1e5, // limit
+                1..=3 => (rng.next_u64_below(4) as f64) - 1.5,       // ordinal demo
+                4..=9 => {
+                    // payment status -1..8, correlated with distress
+                    let raw = 0.9 * distress + 0.6 * rng.next_gaussian();
+                    (raw * 2.0).round().clamp(-1.0, 8.0)
+                }
+                10..=15 => (rng.next_gaussian() * 0.7 + 9.0 + 0.3 * distress).exp() / 1e4,
+                _ => (rng.next_gaussian() * 0.9 + 7.5 - 0.2 * distress).exp() / 1e4,
+            };
+            x.set(i, j, v);
+            z += w_true[j] * standardize_approx(j, v);
+        }
+        // intercept for ~22% positive rate; noise calibrated so 30-iter
+        // LR lands near the paper's AUC ≈ 0.71 (real UCI data is noisy)
+        let p = sigmoid(0.33 * z - 1.62 + 1.25 * rng.next_gaussian());
+        y.push((rng.next_f64() < p) as u8 as f64);
+    }
+    Dataset { x, y, name: format!("credit-like-{n_samples}x{n_features}") }
+}
+
+/// Rough per-block standardization used only while *generating* labels
+/// (the model pipeline re-standardizes properly afterwards).
+fn standardize_approx(j: usize, v: f64) -> f64 {
+    match j {
+        0 => (v - 1.4) / 1.3,
+        1..=3 => v / 1.1,
+        4..=9 => v / 1.6,
+        10..=15 => (v - 1.0) / 0.9,
+        _ => (v - 0.25) / 0.35,
+    }
+}
+
+/// Doctor-visits-style count regression data (Poisson with log link).
+///
+/// Features mirror dvisits' mix: sex/age/income demographics, chronic
+/// condition indicators, and insurance dummies. Counts are Poisson with
+/// rate `exp(x·w + b₀)`, `b₀` tuned for mean ≈ 0.30 visits (zero-
+/// inflated look matching the survey).
+pub fn dvisits_like(n_samples: usize, n_features: usize, seed: u64) -> Dataset {
+    let mut rng = ChaChaRng::from_seed(seed);
+    let mut x = Matrix::zeros(n_samples, n_features);
+
+    let mut w_true = vec![0.0; n_features];
+    for (j, w) in w_true.iter_mut().enumerate() {
+        *w = match j {
+            0 => 0.12,      // sex
+            1 => 0.28,      // age
+            2 => -0.14,     // income
+            3..=6 => 0.22,  // illness / chronic indicators
+            7..=9 => 0.16,  // health-service usage
+            _ => 0.04 * rng.next_gaussian(),
+        };
+    }
+
+    let mut y = Vec::with_capacity(n_samples);
+    for i in 0..n_samples {
+        let frail = rng.next_gaussian(); // latent frailty
+        let mut eta = -1.55; // intercept for mean ≈ 0.30
+        for j in 0..n_features {
+            let v = match j {
+                0 => (rng.next_u64_below(2)) as f64,                   // sex
+                1 => rng.next_f64() * 0.7 + 0.2,                        // age (scaled)
+                2 => rng.next_f64() * 1.5,                              // income
+                3..=6 => ((0.8 * frail + rng.next_gaussian()) > 0.8) as u8 as f64,
+                7..=9 => (0.5 * frail + 0.5 * rng.next_gaussian()).max(0.0),
+                j if j == n_features - 1 => 1.0, // bias column (dvisits
+                // regressions carry an intercept; GD learns it here)
+                _ => rng.next_gaussian() * 0.5,
+            };
+            x.set(i, j, v);
+            eta += w_true[j] * v;
+        }
+        let rate = (eta + 0.10 * rng.next_gaussian()).exp().min(50.0);
+        y.push(poisson_sample(rate, &mut rng));
+    }
+    Dataset { x, y, name: format!("dvisits-like-{n_samples}x{n_features}") }
+}
+
+/// Insurance-claim-severity-style data for the Gamma/Tweedie GLMs (the
+/// paper's "other GLMs" of §4.2): positive continuous responses with a
+/// log-link mean structure, Gamma(shape 2) noise, and a bias column.
+pub fn claims_severity_like(n_samples: usize, n_features: usize, seed: u64) -> Dataset {
+    let mut rng = ChaChaRng::from_seed(seed);
+    let mut x = Matrix::zeros(n_samples, n_features);
+    let mut w_true = vec![0.0; n_features];
+    for (j, w) in w_true.iter_mut().enumerate() {
+        *w = match j {
+            0 => 0.30,  // vehicle value / sum insured
+            1 => -0.20, // driver experience
+            2..=4 => 0.15,
+            _ => 0.05 * rng.next_gaussian(),
+        };
+    }
+    let mut y = Vec::with_capacity(n_samples);
+    for i in 0..n_samples {
+        let mut eta = 0.4; // baseline severity scale
+        for j in 0..n_features {
+            let v = if j == n_features - 1 {
+                1.0 // bias column
+            } else {
+                rng.next_gaussian() * 0.6
+            };
+            x.set(i, j, v);
+            eta += w_true[j] * v;
+        }
+        let mean = eta.clamp(-4.0, 4.0).exp();
+        // Gamma(shape=2, mean=mean): −(ln u₁ + ln u₂)·mean/2
+        let g = -(rng.next_f64().max(1e-12).ln() + rng.next_f64().max(1e-12).ln());
+        y.push((g * mean / 2.0).max(1e-3));
+    }
+    Dataset { x, y, name: format!("claims-like-{n_samples}x{n_features}") }
+}
+
+/// Tiny linearly-separable 2-feature set for quickstarts and smoke tests.
+pub fn blobs(n_samples: usize, seed: u64) -> Dataset {
+    let mut rng = ChaChaRng::from_seed(seed);
+    let mut x = Matrix::zeros(n_samples, 2);
+    let mut y = Vec::with_capacity(n_samples);
+    for i in 0..n_samples {
+        let label = rng.next_f64() < 0.5;
+        let s = if label { 1.2 } else { -1.2 };
+        x.set(i, 0, rng.next_gaussian() * 0.6 + s);
+        x.set(i, 1, rng.next_gaussian() * 0.6 - s);
+        y.push(label as u8 as f64);
+    }
+    Dataset { x, y, name: format!("blobs-{n_samples}") }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glm::{train_central, GlmKind};
+    use crate::linalg;
+    use crate::metrics;
+
+    #[test]
+    fn credit_like_shape_and_rate() {
+        let d = credit_default_like(5000, 23, 1);
+        assert_eq!(d.x.rows, 5000);
+        assert_eq!(d.x.cols, 23);
+        let pos_rate = d.y.iter().sum::<f64>() / d.y.len() as f64;
+        assert!((0.12..0.35).contains(&pos_rate), "positive rate {pos_rate}");
+    }
+
+    #[test]
+    fn credit_like_auc_in_paper_ballpark() {
+        let mut d = credit_default_like(8000, 23, 2);
+        d.standardize();
+        let mut rng = ChaChaRng::from_seed(3);
+        let (tr, te) = d.train_test_split(0.7, &mut rng);
+        let rep = train_central(&tr.x, &tr.y, GlmKind::Logistic, 0.15, 30);
+        let wx = linalg::gemv(&te.x, &rep.weights);
+        let auc = metrics::auc(&te.y, &wx);
+        // paper reports 0.702-0.719 on the real data; calibrated generator
+        // should land in a similar band
+        assert!((0.62..0.82).contains(&auc), "auc = {auc}");
+    }
+
+    #[test]
+    fn dvisits_like_shape_and_mean() {
+        let d = dvisits_like(5190, 18, 4);
+        assert_eq!(d.x.rows, 5190);
+        assert_eq!(d.x.cols, 18);
+        let mean = d.y.iter().sum::<f64>() / d.y.len() as f64;
+        assert!((0.15..0.6).contains(&mean), "mean count {mean}");
+        let zeros = d.y.iter().filter(|&&v| v == 0.0).count() as f64 / d.y.len() as f64;
+        assert!(zeros > 0.6, "should be zero-inflated, zeros = {zeros}");
+    }
+
+    #[test]
+    fn dvisits_like_poisson_learnable() {
+        let mut d = dvisits_like(4000, 18, 5);
+        d.standardize();
+        let mut rng = ChaChaRng::from_seed(6);
+        let (tr, te) = d.train_test_split(0.7, &mut rng);
+        let rep = train_central(&tr.x, &tr.y, GlmKind::Poisson, 0.1, 30);
+        let wx = linalg::gemv(&te.x, &rep.weights);
+        let pred: Vec<f64> = wx.iter().map(|&z| z.exp()).collect();
+        let mae = metrics::mae(&te.y, &pred);
+        // paper: 0.571 on the real dvisits; same order expected here
+        assert!(mae < 0.9, "mae = {mae}");
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = credit_default_like(100, 23, 9);
+        let b = credit_default_like(100, 23, 9);
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.y, b.y);
+    }
+}

@@ -1,0 +1,150 @@
+//! Vertical (feature-wise) partitioning across parties.
+//!
+//! The VFL setting of the paper: all parties share the sample ID space;
+//! party `C` (the guest / data demander) holds the label and a feature
+//! block, parties `B_1..B_k` (hosts / data providers) hold the remaining
+//! blocks. We split contiguously like FATE's hetero examples; the paper's
+//! multi-party runs replicate `B_1`'s block to each additional party,
+//! which [`VerticalSplit::replicate_hosts`] reproduces.
+
+use super::Dataset;
+use crate::linalg::Matrix;
+
+/// A dataset split vertically across `1 + hosts.len()` parties.
+#[derive(Clone, Debug)]
+pub struct VerticalSplit {
+    /// Guest party C's feature block.
+    pub guest: Matrix,
+    /// Host parties B_i's feature blocks.
+    pub hosts: Vec<Matrix>,
+    /// The label vector (held only by C).
+    pub y: Vec<f64>,
+    /// Name carried over from the source dataset.
+    pub name: String,
+}
+
+impl VerticalSplit {
+    /// Number of parties (guest + hosts).
+    pub fn n_parties(&self) -> usize {
+        1 + self.hosts.len()
+    }
+
+    /// Sample count.
+    pub fn n_samples(&self) -> usize {
+        self.guest.rows
+    }
+
+    /// Total feature count across parties.
+    pub fn n_features(&self) -> usize {
+        self.guest.cols + self.hosts.iter().map(|h| h.cols).sum::<usize>()
+    }
+
+    /// Feature block of party `p` (0 = guest C, 1.. = hosts B_i).
+    pub fn party_block(&self, p: usize) -> &Matrix {
+        if p == 0 {
+            &self.guest
+        } else {
+            &self.hosts[p - 1]
+        }
+    }
+
+    /// Paper §5.1: "in the multi-party case, we easily copy the data of
+    /// party B1 to the new party". Extends to `k` hosts by replication.
+    pub fn replicate_hosts(&self, k: usize) -> VerticalSplit {
+        assert!(!self.hosts.is_empty(), "need at least one host to replicate");
+        let mut hosts = Vec::with_capacity(k);
+        for i in 0..k {
+            hosts.push(self.hosts[i % self.hosts.len()].clone());
+        }
+        VerticalSplit {
+            guest: self.guest.clone(),
+            hosts,
+            y: self.y.clone(),
+            name: format!("{}-{}party", self.name, k + 1),
+        }
+    }
+
+    /// Reassemble the full feature matrix (test/eval convenience — in the
+    /// protocol no single party ever does this with *data*; evaluation
+    /// pools only the final predictions).
+    pub fn concat_features(&self) -> Matrix {
+        let rows = self.n_samples();
+        let cols = self.n_features();
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            let mut off = 0;
+            for p in 0..self.n_parties() {
+                let block = self.party_block(p);
+                m.row_mut(i)[off..off + block.cols].copy_from_slice(block.row(i));
+                off += block.cols;
+            }
+        }
+        m
+    }
+}
+
+/// Split a dataset vertically into `n_parties` contiguous feature blocks
+/// (guest gets the first block; blocks differ by at most one column).
+pub fn split_vertical(data: &Dataset, n_parties: usize) -> VerticalSplit {
+    assert!(n_parties >= 2, "vertical FL needs at least two parties");
+    assert!(
+        data.x.cols >= n_parties,
+        "fewer features than parties ({} < {n_parties})",
+        data.x.cols
+    );
+    let base = data.x.cols / n_parties;
+    let extra = data.x.cols % n_parties;
+    let mut blocks = Vec::with_capacity(n_parties);
+    let mut start = 0;
+    for p in 0..n_parties {
+        let width = base + (p < extra) as usize;
+        blocks.push(data.x.slice_cols(start, start + width));
+        start += width;
+    }
+    let guest = blocks.remove(0);
+    VerticalSplit { guest, hosts: blocks, y: data.y.clone(), name: data.name.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset {
+            x: Matrix::from_rows(&[
+                &[1.0, 2.0, 3.0, 4.0, 5.0],
+                &[6.0, 7.0, 8.0, 9.0, 10.0],
+            ]),
+            y: vec![1.0, 0.0],
+            name: "toy".into(),
+        }
+    }
+
+    #[test]
+    fn split_widths_and_content() {
+        let s = split_vertical(&toy(), 2);
+        assert_eq!(s.guest.cols, 3); // 5 = 3 + 2
+        assert_eq!(s.hosts[0].cols, 2);
+        assert_eq!(s.guest.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(s.hosts[0].row(1), &[9.0, 10.0]);
+        assert_eq!(s.n_features(), 5);
+    }
+
+    #[test]
+    fn concat_restores_original() {
+        let d = toy();
+        for parties in [2usize, 3, 4] {
+            let s = split_vertical(&d, parties);
+            assert_eq!(s.concat_features().data, d.x.data, "parties={parties}");
+        }
+    }
+
+    #[test]
+    fn replicate_matches_paper_setup() {
+        let s = split_vertical(&toy(), 2);
+        let s4 = s.replicate_hosts(3); // guest + 3 hosts
+        assert_eq!(s4.n_parties(), 4);
+        assert_eq!(s4.hosts[0].data, s4.hosts[1].data);
+        assert_eq!(s4.hosts[0].data, s4.hosts[2].data);
+    }
+}

@@ -1,0 +1,45 @@
+//! # EFMVFL — Efficient and Flexible Multi-party Vertical Federated Learning
+//!
+//! Reproduction of *EFMVFL: An Efficient and Flexible Multi-party Vertical
+//! Federated Learning without a Third Party* (Huang et al., 2022).
+//!
+//! The crate is the **Layer-3 rust coordinator** of a three-layer stack:
+//!
+//! - **L3 (this crate)**: the paper's coordination contribution — the four
+//!   secure protocols, Algorithm 1's multi-party trainer, the MPC + Paillier
+//!   substrates, a byte-accounting transport, baselines, datasets, metrics.
+//! - **L2 (`python/compile/model.py`)**: JAX compute graphs for the per-party
+//!   dense linear algebra (`WX`, `Xᵀd`, gradient-operators, losses), AOT
+//!   lowered to HLO text under `artifacts/`.
+//! - **L1 (`python/compile/kernels/`)**: Pallas kernels for the fused
+//!   gradient-operator / matvec hot spot, validated against a jnp oracle.
+//!
+//! At runtime Python is never on the path: [`runtime`] loads the AOT
+//! artifacts through PJRT (`xla` crate) and the coordinator calls them like
+//! local functions, falling back to [`linalg`] when artifacts are absent.
+
+pub mod baselines;
+pub mod benchkit;
+pub mod bignum;
+pub mod cli;
+pub mod coordinator;
+pub mod crypto;
+pub mod data;
+pub mod glm;
+pub mod linalg;
+pub mod metrics;
+pub mod mpc;
+pub mod net;
+pub mod protocols;
+pub mod runtime;
+pub mod testkit;
+
+/// Commonly used types, re-exported for `use efmvfl::prelude::*`.
+pub mod prelude {
+    pub use crate::coordinator::{train, TrainConfig, TrainReport};
+    pub use crate::crypto::paillier::{Keypair, PublicKey};
+    pub use crate::data::{split_vertical, Dataset, VerticalSplit};
+    pub use crate::glm::{GlmKind, Model};
+    pub use crate::mpc::share::Share;
+    pub use crate::protocols::CpSelection;
+}

@@ -1,0 +1,130 @@
+//! Row-major dense f64 matrix.
+
+use crate::crypto::prng::ChaChaRng;
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    /// Number of rows (samples).
+    pub rows: usize,
+    /// Number of columns (features).
+    pub cols: usize,
+    /// Row-major storage, `rows * cols` elements.
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from row slices (all must share a length).
+    pub fn from_rows(rows: &[&[f64]]) -> Matrix {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    /// Build from a flat row-major vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Standard-normal random matrix (tests/synthetic data).
+    pub fn random(rows: usize, cols: usize, rng: &mut ChaChaRng) -> Matrix {
+        let data = (0..rows * cols).map(|_| rng.next_gaussian()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Sub-matrix of the given column range (vertical split helper).
+    pub fn slice_cols(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.cols);
+        let cols = end - start;
+        let mut data = Vec::with_capacity(self.rows * cols);
+        for i in 0..self.rows {
+            data.extend_from_slice(&self.row(i)[start..end]);
+        }
+        Matrix { rows: self.rows, cols, data }
+    }
+
+    /// Sub-matrix of the given row range (train/test split helper).
+    pub fn slice_rows(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.rows);
+        Matrix {
+            rows: end - start,
+            cols: self.cols,
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+        }
+    }
+
+    /// Rows gathered by index (shuffling helper).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut data = Vec::with_capacity(idx.len() * self.cols);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        Matrix { rows: idx.len(), cols: self.cols, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slicing() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let left = m.slice_cols(0, 2);
+        assert_eq!(left, Matrix::from_rows(&[&[1.0, 2.0], &[4.0, 5.0]]));
+        let right = m.slice_cols(2, 3);
+        assert_eq!(right, Matrix::from_rows(&[&[3.0], &[6.0]]));
+        let top = m.slice_rows(0, 1);
+        assert_eq!(top, Matrix::from_rows(&[&[1.0, 2.0, 3.0]]));
+        assert_eq!(m.col(1), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn gather() {
+        let m = Matrix::from_rows(&[&[1.0], &[2.0], &[3.0]]);
+        assert_eq!(
+            m.gather_rows(&[2, 0]),
+            Matrix::from_rows(&[&[3.0], &[1.0]])
+        );
+    }
+}

@@ -1,0 +1,117 @@
+//! Native dense linear algebra (f64).
+//!
+//! This is the CPU fallback for the per-party local computations and the
+//! workhorse of the plaintext baselines. The optimized path routes the
+//! same operations through the AOT-compiled XLA artifacts
+//! ([`crate::runtime`]); both implementations satisfy the same trait so
+//! the coordinator is oblivious to which one is active.
+
+mod matrix;
+
+pub use matrix::Matrix;
+
+/// `y = X · w` (row-major X: m×n, w: n) — the per-party `W_p X_p`.
+pub fn gemv(x: &Matrix, w: &[f64]) -> Vec<f64> {
+    assert_eq!(x.cols, w.len(), "gemv shape mismatch");
+    let mut out = vec![0.0; x.rows];
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let mut acc = 0.0;
+        for j in 0..x.cols {
+            acc += row[j] * w[j];
+        }
+        out[i] = acc;
+    }
+    out
+}
+
+/// `g = Xᵀ · d` (X: m×n, d: m) — the gradient aggregation of eq. (5).
+pub fn gemv_t(x: &Matrix, d: &[f64]) -> Vec<f64> {
+    assert_eq!(x.rows, d.len(), "gemv_t shape mismatch");
+    let mut out = vec![0.0; x.cols];
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let di = d[i];
+        if di == 0.0 {
+            continue;
+        }
+        for j in 0..x.cols {
+            out[j] += row[j] * di;
+        }
+    }
+    out
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Elementwise sum of two vectors.
+pub fn add(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// Elementwise difference.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Scale a vector.
+pub fn scale(a: &[f64], k: f64) -> Vec<f64> {
+    a.iter().map(|x| x * k).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemv_known() {
+        // [[1,2],[3,4],[5,6]] * [1, -1] = [-1, -1, -1]
+        let x = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        assert_eq!(gemv(&x, &[1.0, -1.0]), vec![-1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn gemv_t_known() {
+        let x = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        // X^T [1,1,1] = [9, 12]
+        assert_eq!(gemv_t(&x, &[1.0, 1.0, 1.0]), vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn gemv_t_is_transpose_of_gemv() {
+        use crate::testkit;
+        testkit::check("d·(Xw) == (Xᵀd)·w", 100, |g| {
+            let (m, n) = (g.usize_in(1..20), g.usize_in(1..10));
+            let x = Matrix::random(m, n, g.rng());
+            let w: Vec<f64> = (0..n).map(|_| g.f64_in(-2.0, 2.0)).collect();
+            let d: Vec<f64> = (0..m).map(|_| g.f64_in(-2.0, 2.0)).collect();
+            let lhs = dot(&d, &gemv(&x, &w));
+            let rhs = dot(&gemv_t(&x, &d), &w);
+            (lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs())
+        });
+    }
+
+    #[test]
+    fn axpy_and_helpers() {
+        let mut y = vec![1.0, 2.0];
+        axpy(0.5, &[2.0, -4.0], &mut y);
+        assert_eq!(y, vec![2.0, 0.0]);
+        assert_eq!(add(&[1.0, 2.0], &[3.0, 4.0]), vec![4.0, 6.0]);
+        assert_eq!(sub(&[1.0, 2.0], &[3.0, 4.0]), vec![-2.0, -2.0]);
+        assert_eq!(scale(&[1.0, -2.0], 3.0), vec![3.0, -6.0]);
+    }
+}

@@ -1,0 +1,165 @@
+//! Evaluation metrics for the paper's tables: AUC + KS (Table 1, LR) and
+//! MAE + RMSE (Table 2, PR).
+
+/// Area under the ROC curve via the rank statistic
+/// (equivalent to the Mann-Whitney U estimator; ties get midranks).
+///
+/// `labels` are {0,1} (or {-1,1}, anything > 0.5 counts as positive);
+/// `scores` are arbitrary monotone risk scores.
+pub fn auc(labels: &[f64], scores: &[f64]) -> f64 {
+    assert_eq!(labels.len(), scores.len());
+    let n = labels.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+
+    // midranks over tied scores
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = mid;
+        }
+        i = j + 1;
+    }
+
+    let pos: f64 = labels.iter().filter(|&&y| y > 0.5).count() as f64;
+    let neg = n as f64 - pos;
+    if pos == 0.0 || neg == 0.0 {
+        return 0.5;
+    }
+    let rank_sum: f64 = labels
+        .iter()
+        .zip(&ranks)
+        .filter(|(&y, _)| y > 0.5)
+        .map(|(_, &r)| r)
+        .sum();
+    (rank_sum - pos * (pos + 1.0) / 2.0) / (pos * neg)
+}
+
+/// Kolmogorov–Smirnov statistic: max separation between the positive and
+/// negative score CDFs (standard risk-model metric, Table 1's `ks`).
+pub fn ks(labels: &[f64], scores: &[f64]) -> f64 {
+    assert_eq!(labels.len(), scores.len());
+    let n = labels.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let pos: f64 = labels.iter().filter(|&&y| y > 0.5).count() as f64;
+    let neg = n as f64 - pos;
+    if pos == 0.0 || neg == 0.0 {
+        return 0.0;
+    }
+    let (mut cum_pos, mut cum_neg, mut best) = (0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i < n {
+        // advance through ties together so the CDFs move atomically
+        let mut j = i;
+        loop {
+            if labels[idx[j]] > 0.5 {
+                cum_pos += 1.0;
+            } else {
+                cum_neg += 1.0;
+            }
+            if j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+                j += 1;
+            } else {
+                break;
+            }
+        }
+        best = best.max((cum_pos / pos - cum_neg / neg).abs());
+        i = j + 1;
+    }
+    best
+}
+
+/// Mean absolute error.
+pub fn mae(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f64>()
+        / y_true.len() as f64
+}
+
+/// Root mean squared error.
+pub fn rmse(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    (y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        / y_true.len() as f64)
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let labels = vec![0.0, 0.0, 1.0, 1.0];
+        assert!((auc(&labels, &[0.1, 0.2, 0.8, 0.9]) - 1.0).abs() < 1e-12);
+        assert!((auc(&labels, &[0.9, 0.8, 0.2, 0.1]) - 0.0).abs() < 1e-12);
+        // all-same scores -> 0.5
+        assert!((auc(&labels, &[0.5; 4]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_known_value() {
+        // labels 1,0,1,0 scores .9,.8,.7,.6: pairs (pos>neg): (.9>.8),(.9>.6),(.7>.6) = 3/4
+        let a = auc(&[1.0, 0.0, 1.0, 0.0], &[0.9, 0.8, 0.7, 0.6]);
+        assert!((a - 0.75).abs() < 1e-12, "{a}");
+    }
+
+    #[test]
+    fn auc_handles_ties() {
+        // one tied pos/neg pair contributes 0.5
+        let a = auc(&[1.0, 0.0], &[0.5, 0.5]);
+        assert!((a - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ks_perfect_separation() {
+        let labels = vec![0.0, 0.0, 1.0, 1.0];
+        let k = ks(&labels, &[0.1, 0.2, 0.8, 0.9]);
+        assert!((k - 1.0).abs() < 1e-12);
+        assert!(ks(&labels, &[0.5; 4]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ks_midpoint() {
+        let labels = vec![0.0, 1.0, 0.0, 1.0];
+        let k = ks(&labels, &[0.1, 0.2, 0.3, 0.4]);
+        assert!((k - 0.5).abs() < 1e-12, "{k}");
+    }
+
+    #[test]
+    fn regression_metrics() {
+        let t = vec![1.0, 2.0, 3.0];
+        let p = vec![1.5, 2.0, 2.0];
+        assert!((mae(&t, &p) - 0.5).abs() < 1e-12);
+        assert!((rmse(&t, &p) - (1.25f64 / 3.0 * 3.0 / 3.0).sqrt()).abs() < 1e-9
+            || (rmse(&t, &p) - ((0.25 + 0.0 + 1.0) / 3.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_invariant_under_monotone_transform() {
+        use crate::testkit;
+        testkit::check("auc monotone-invariant", 50, |g| {
+            let n = g.usize_in(4..64);
+            let labels: Vec<f64> = (0..n).map(|_| g.bool() as u8 as f64).collect();
+            let scores: Vec<f64> = (0..n).map(|_| g.f64_in(-3.0, 3.0)).collect();
+            let transformed: Vec<f64> =
+                scores.iter().map(|&s| (s * 0.7).exp()).collect();
+            (auc(&labels, &scores) - auc(&labels, &transformed)).abs() < 1e-9
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Secret-sharing MPC substrate: the ring, 2-of-2 additive shares, and
+//! Beaver-triple multiplication.
+//!
+//! EFMVFL's Protocols 1/2/4 run on this substrate. Shares live in the ring
+//! Z_2⁶⁴ with fixed-point encoding ([`crate::crypto::fixed`]); products are
+//! computed with Beaver triples dealt in an offline phase ([`beaver`]),
+//! matching the SecureML/SPDZ-style preprocessing model the paper cites.
+
+pub mod beaver;
+pub mod ring;
+pub mod share;
+
+pub use beaver::{Triple, TripleDealer};
+pub use ring::Elem;
+pub use share::Share;

@@ -1,0 +1,166 @@
+//! The secret-sharing ring Z_2⁶⁴ with fixed-point semantics.
+//!
+//! Ring elements are `u64` with wrapping arithmetic; signed values use the
+//! two's-complement embedding (so reconstruction of a negative value wraps
+//! around 2⁶⁴, which is exactly what additive sharing needs). Fixed-point
+//! scale is [`crate::crypto::fixed::FRAC_BITS`].
+
+use crate::crypto::fixed::{FRAC_BITS, SCALE};
+
+/// A ring element of Z_2⁶⁴.
+pub type Elem = u64;
+
+/// Ring addition.
+#[inline]
+pub fn add(a: Elem, b: Elem) -> Elem {
+    a.wrapping_add(b)
+}
+
+/// Ring subtraction.
+#[inline]
+pub fn sub(a: Elem, b: Elem) -> Elem {
+    a.wrapping_sub(b)
+}
+
+/// Ring negation.
+#[inline]
+pub fn neg(a: Elem) -> Elem {
+    a.wrapping_neg()
+}
+
+/// Ring multiplication.
+#[inline]
+pub fn mul(a: Elem, b: Elem) -> Elem {
+    a.wrapping_mul(b)
+}
+
+/// Interpret as signed (two's complement).
+#[inline]
+pub fn to_signed(a: Elem) -> i64 {
+    a as i64
+}
+
+/// Embed a signed value.
+#[inline]
+pub fn from_signed(v: i64) -> Elem {
+    v as u64
+}
+
+/// Encode an f64 at single fixed-point scale.
+#[inline]
+pub fn encode(v: f64) -> Elem {
+    from_signed((v * SCALE).round() as i64)
+}
+
+/// Decode a single-scale element to f64.
+#[inline]
+pub fn decode(e: Elem) -> f64 {
+    to_signed(e) as f64 / SCALE
+}
+
+/// Decode a double-scale element (product of two single-scale values).
+#[inline]
+pub fn decode2(e: Elem) -> f64 {
+    to_signed(e) as f64 / (SCALE * SCALE)
+}
+
+/// Local share truncation after a fixed-point multiply (SecureML §4.1).
+///
+/// Party 0 arithmetic-shifts its share; party 1 negates, shifts, negates.
+/// The reconstructed value is off by at most 1 ulp with overwhelming
+/// probability when |value| ≪ 2⁶³⁻ᶠ — our values are O(10³) at scale 2²⁰,
+/// leaving >20 bits of headroom.
+#[inline]
+pub fn truncate_share(share: Elem, party_is_first: bool) -> Elem {
+    if party_is_first {
+        from_signed(to_signed(share) >> FRAC_BITS)
+    } else {
+        from_signed(-((-to_signed(share)) >> FRAC_BITS))
+    }
+}
+
+/// Encode a slice of f64s.
+pub fn encode_vec(vs: &[f64]) -> Vec<Elem> {
+    vs.iter().map(|&v| encode(v)).collect()
+}
+
+/// Decode a slice of single-scale elements.
+pub fn decode_vec(es: &[Elem]) -> Vec<f64> {
+    es.iter().map(|&e| decode(e)).collect()
+}
+
+/// Elementwise vector addition.
+pub fn add_vec(a: &[Elem], b: &[Elem]) -> Vec<Elem> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| add(x, y)).collect()
+}
+
+/// Elementwise vector subtraction.
+pub fn sub_vec(a: &[Elem], b: &[Elem]) -> Vec<Elem> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| sub(x, y)).collect()
+}
+
+/// Scale every element by a plaintext ring constant.
+pub fn scale_vec(a: &[Elem], k: Elem) -> Vec<Elem> {
+    a.iter().map(|&x| mul(x, k)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signed_embedding_roundtrip() {
+        for v in [0i64, 1, -1, i64::MAX, i64::MIN, 42, -12345] {
+            assert_eq!(to_signed(from_signed(v)), v);
+        }
+    }
+
+    #[test]
+    fn encode_decode() {
+        for v in [0.0, 1.5, -1.5, 3.14159, -1000.25] {
+            assert!((decode(encode(v)) - v).abs() < 2e-6, "v={v}");
+        }
+    }
+
+    #[test]
+    fn wrapping_reconstruction_of_negative() {
+        // share -5 as two u64s that wrap
+        let x = encode(-5.0);
+        let s0 = 0xdead_beef_dead_beefu64;
+        let s1 = sub(x, s0);
+        assert_eq!(add(s0, s1), x);
+        assert!((decode(add(s0, s1)) + 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn truncation_error_bounded() {
+        use crate::crypto::prng::ChaChaRng;
+        let mut rng = ChaChaRng::from_seed(40);
+        for _ in 0..2000 {
+            let a = (rng.next_f64() - 0.5) * 2000.0;
+            let b = (rng.next_f64() - 0.5) * 2.0;
+            let prod_double = mul(encode(a), encode(b)); // double scale
+            let s0 = rng.next_u64();
+            let s1 = sub(prod_double, s0);
+            let t = add(truncate_share(s0, true), truncate_share(s1, false));
+            let got = decode(t);
+            assert!(
+                (got - a * b).abs() < 0.01,
+                "truncation error too large: {got} vs {}",
+                a * b
+            );
+        }
+    }
+
+    #[test]
+    fn vec_helpers() {
+        let a = encode_vec(&[1.0, 2.0]);
+        let b = encode_vec(&[0.5, -1.0]);
+        let s = decode_vec(&add_vec(&a, &b));
+        assert!((s[0] - 1.5).abs() < 1e-6 && (s[1] - 1.0).abs() < 1e-6);
+        let d = decode_vec(&sub_vec(&a, &b));
+        assert!((d[0] - 0.5).abs() < 1e-6 && (d[1] - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,179 @@
+//! 2-of-2 additive secret sharing — the paper's **Protocol 1**.
+//!
+//! The data owner samples a uniform share locally and sends `Z − ⟨Z⟩₀` to
+//! the other computing party; uniformity of the PRNG makes each share
+//! individually independent of `Z` (paper Theorem 2).
+
+use super::ring::{self, Elem};
+use crate::crypto::prng::ChaChaRng;
+
+/// One party's additive share of a vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Share(pub Vec<Elem>);
+
+impl Share {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    /// True if the share holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Share-wise addition (shares of `x + y`).
+    pub fn add(&self, other: &Share) -> Share {
+        Share(ring::add_vec(&self.0, &other.0))
+    }
+
+    /// Share-wise subtraction (shares of `x − y`).
+    pub fn sub(&self, other: &Share) -> Share {
+        Share(ring::sub_vec(&self.0, &other.0))
+    }
+
+    /// Multiply by a public single-scale fixed-point constant, then
+    /// truncate locally (valid because the constant is public).
+    pub fn scale_public(&self, c: f64, party_is_first: bool) -> Share {
+        let ce = ring::encode(c);
+        Share(
+            self.0
+                .iter()
+                .map(|&s| ring::truncate_share(ring::mul(s, ce), party_is_first))
+                .collect(),
+        )
+    }
+
+    /// Add a public single-scale constant vector (only the first party
+    /// adds — otherwise it would be added twice).
+    pub fn add_public(&self, v: &[f64], party_is_first: bool) -> Share {
+        if !party_is_first {
+            return self.clone();
+        }
+        debug_assert_eq!(self.0.len(), v.len());
+        Share(
+            self.0
+                .iter()
+                .zip(v)
+                .map(|(&s, &p)| ring::add(s, ring::encode(p)))
+                .collect(),
+        )
+    }
+
+    /// Share-wise negation (shares of `−x`).
+    pub fn neg(&self) -> Share {
+        Share(self.0.iter().map(|&s| ring::neg(s)).collect())
+    }
+
+    /// Sum of all elements (share of the sum).
+    pub fn sum(&self) -> Elem {
+        self.0.iter().fold(0u64, |acc, &x| ring::add(acc, x))
+    }
+}
+
+/// Split a fixed-point-encoded vector into two uniform additive shares
+/// (Protocol 1, run by the data owner).
+pub fn share_vec(values: &[Elem], rng: &mut ChaChaRng) -> (Share, Share) {
+    let s0: Vec<Elem> = values.iter().map(|_| rng.next_u64()).collect();
+    let s1: Vec<Elem> = values
+        .iter()
+        .zip(&s0)
+        .map(|(&v, &a)| ring::sub(v, a))
+        .collect();
+    (Share(s0), Share(s1))
+}
+
+/// Share a plain f64 vector (encodes, then shares).
+pub fn share_f64(values: &[f64], rng: &mut ChaChaRng) -> (Share, Share) {
+    share_vec(&ring::encode_vec(values), rng)
+}
+
+/// Reconstruct the ring vector from both shares.
+pub fn reconstruct(a: &Share, b: &Share) -> Vec<Elem> {
+    ring::add_vec(&a.0, &b.0)
+}
+
+/// Reconstruct and decode to f64 at single scale.
+pub fn reconstruct_f64(a: &Share, b: &Share) -> Vec<f64> {
+    ring::decode_vec(&reconstruct(a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn share_reconstruct_roundtrip() {
+        let mut rng = ChaChaRng::from_seed(50);
+        let vals = vec![1.25, -3.5, 0.0, 1e3, -1e-3];
+        let (a, b) = share_f64(&vals, &mut rng);
+        let back = reconstruct_f64(&a, &b);
+        for (x, y) in vals.iter().zip(&back) {
+            assert!((x - y).abs() < 2e-6);
+        }
+    }
+
+    #[test]
+    fn prop_share_reconstruct() {
+        testkit::check("share/reconstruct identity", 200, |g| {
+            let n = g.usize_in(1..64);
+            let vals: Vec<f64> = (0..n).map(|_| g.f64_in(-1e4, 1e4)).collect();
+            let (a, b) = share_f64(&vals, g.rng());
+            let back = reconstruct_f64(&a, &b);
+            vals.iter().zip(&back).all(|(x, y)| (x - y).abs() < 2e-6)
+        });
+    }
+
+    #[test]
+    fn prop_linearity_of_shares() {
+        testkit::check("share addition is homomorphic", 200, |g| {
+            let n = g.usize_in(1..32);
+            let x: Vec<f64> = (0..n).map(|_| g.f64_in(-100.0, 100.0)).collect();
+            let y: Vec<f64> = (0..n).map(|_| g.f64_in(-100.0, 100.0)).collect();
+            let (x0, x1) = share_f64(&x, g.rng());
+            let (y0, y1) = share_f64(&y, g.rng());
+            let sum = reconstruct_f64(&x0.add(&y0), &x1.add(&y1));
+            let diff = reconstruct_f64(&x0.sub(&y0), &x1.sub(&y1));
+            x.iter().zip(&y).zip(&sum).all(|((a, b), s)| (a + b - s).abs() < 4e-6)
+                && x.iter().zip(&y).zip(&diff).all(|((a, b), d)| (a - b - d).abs() < 4e-6)
+        });
+    }
+
+    #[test]
+    fn prop_scale_public() {
+        testkit::check("public scaling of shares", 200, |g| {
+            let n = g.usize_in(1..32);
+            let x: Vec<f64> = (0..n).map(|_| g.f64_in(-50.0, 50.0)).collect();
+            let c = g.f64_in(-4.0, 4.0);
+            let (x0, x1) = share_f64(&x, g.rng());
+            let scaled =
+                reconstruct_f64(&x0.scale_public(c, true), &x1.scale_public(c, false));
+            x.iter().zip(&scaled).all(|(a, s)| (a * c - s).abs() < 1e-3)
+        });
+    }
+
+    #[test]
+    fn individual_share_is_uniformish() {
+        // Crude leakage check: the first share of a constant vector should
+        // span the ring (high byte diversity), i.e. reveal nothing of Z.
+        let mut rng = ChaChaRng::from_seed(51);
+        let vals = vec![7.0f64; 4096];
+        let (a, _) = share_f64(&vals, &mut rng);
+        let mut seen = [false; 256];
+        for &e in &a.0 {
+            seen[(e >> 56) as usize] = true;
+        }
+        let count = seen.iter().filter(|&&s| s).count();
+        assert!(count > 240, "top-byte diversity too low: {count}");
+    }
+
+    #[test]
+    fn sum_share() {
+        let mut rng = ChaChaRng::from_seed(52);
+        let vals = vec![1.0, 2.0, 3.5, -0.5];
+        let (a, b) = share_f64(&vals, &mut rng);
+        let total = ring::decode(ring::add(a.sum(), b.sum()));
+        assert!((total - 6.0).abs() < 1e-5);
+    }
+}

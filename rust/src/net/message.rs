@@ -1,0 +1,222 @@
+//! Message payloads and their binary encoding.
+//!
+//! Hand-rolled serialization (no serde offline): 1 tag byte + 8-byte
+//! lengths + raw little-endian data. The encoded length is what the byte
+//! counters record, so the comm numbers in the tables are wire-accurate.
+
+use crate::bignum::BigUint;
+use crate::crypto::paillier::Ciphertext;
+
+/// A transportable value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Vector of ring elements (secret shares, openings).
+    Ring(Vec<u64>),
+    /// Two ring vectors (Beaver openings `(e, f)` travel together).
+    RingPair(Vec<u64>, Vec<u64>),
+    /// Paillier ciphertext vector, fixed-width big-endian per element.
+    Cipher {
+        /// Bytes per ciphertext (2·|n|/8, fixed by the key).
+        width: usize,
+        /// Concatenated fixed-width ciphertexts.
+        data: Vec<u8>,
+    },
+    /// A scalar (loss values, thresholds).
+    Scalar(f64),
+    /// Control flag (Algorithm 1's stop flag).
+    Flag(bool),
+    /// Raw bytes (public keys, misc).
+    Bytes(Vec<u8>),
+}
+
+impl Payload {
+    /// Pack a ciphertext vector (big-endian, zero-padded to `width`).
+    pub fn from_ciphertexts(cts: &[Ciphertext], width: usize) -> Payload {
+        let mut data = Vec::with_capacity(cts.len() * width);
+        for ct in cts {
+            let bytes = ct.0.to_bytes_be();
+            assert!(bytes.len() <= width, "ciphertext wider than key width");
+            data.extend(std::iter::repeat(0u8).take(width - bytes.len()));
+            data.extend_from_slice(&bytes);
+        }
+        Payload::Cipher { width, data }
+    }
+
+    /// Unpack a ciphertext vector.
+    pub fn to_ciphertexts(&self) -> Vec<Ciphertext> {
+        match self {
+            Payload::Cipher { width, data } => data
+                .chunks(*width)
+                .map(|c| Ciphertext(BigUint::from_bytes_be(c)))
+                .collect(),
+            other => panic!("expected Cipher payload, got {other:?}"),
+        }
+    }
+
+    /// Expect a ring vector.
+    pub fn into_ring(self) -> Vec<u64> {
+        match self {
+            Payload::Ring(v) => v,
+            other => panic!("expected Ring payload, got {other:?}"),
+        }
+    }
+
+    /// Expect a ring pair.
+    pub fn into_ring_pair(self) -> (Vec<u64>, Vec<u64>) {
+        match self {
+            Payload::RingPair(a, b) => (a, b),
+            other => panic!("expected RingPair payload, got {other:?}"),
+        }
+    }
+
+    /// Expect a scalar.
+    pub fn into_scalar(self) -> f64 {
+        match self {
+            Payload::Scalar(v) => v,
+            other => panic!("expected Scalar payload, got {other:?}"),
+        }
+    }
+
+    /// Expect a flag.
+    pub fn into_flag(self) -> bool {
+        match self {
+            Payload::Flag(v) => v,
+            other => panic!("expected Flag payload, got {other:?}"),
+        }
+    }
+
+    /// Serialize to wire bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Payload::Ring(v) => {
+                out.push(0);
+                out.extend((v.len() as u64).to_le_bytes());
+                for &x in v {
+                    out.extend(x.to_le_bytes());
+                }
+            }
+            Payload::RingPair(a, b) => {
+                out.push(1);
+                out.extend((a.len() as u64).to_le_bytes());
+                for &x in a {
+                    out.extend(x.to_le_bytes());
+                }
+                out.extend((b.len() as u64).to_le_bytes());
+                for &x in b {
+                    out.extend(x.to_le_bytes());
+                }
+            }
+            Payload::Cipher { width, data } => {
+                out.push(2);
+                out.extend((*width as u64).to_le_bytes());
+                out.extend((data.len() as u64).to_le_bytes());
+                out.extend_from_slice(data);
+            }
+            Payload::Scalar(v) => {
+                out.push(3);
+                out.extend(v.to_le_bytes());
+            }
+            Payload::Flag(v) => {
+                out.push(4);
+                out.push(*v as u8);
+            }
+            Payload::Bytes(b) => {
+                out.push(5);
+                out.extend((b.len() as u64).to_le_bytes());
+                out.extend_from_slice(b);
+            }
+        }
+        out
+    }
+
+    /// Deserialize from wire bytes (panics on malformed input — the
+    /// transport is in-process, corruption means a bug, not an attack).
+    pub fn decode(bytes: &[u8]) -> Payload {
+        let tag = bytes[0];
+        let mut pos = 1usize;
+        let read_u64 = |pos: &mut usize| {
+            let v = u64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
+            *pos += 8;
+            v
+        };
+        match tag {
+            0 => {
+                let n = read_u64(&mut pos) as usize;
+                let v = (0..n).map(|_| read_u64(&mut pos)).collect();
+                Payload::Ring(v)
+            }
+            1 => {
+                let n = read_u64(&mut pos) as usize;
+                let a = (0..n).map(|_| read_u64(&mut pos)).collect();
+                let m = read_u64(&mut pos) as usize;
+                let b = (0..m).map(|_| read_u64(&mut pos)).collect();
+                Payload::RingPair(a, b)
+            }
+            2 => {
+                let width = read_u64(&mut pos) as usize;
+                let len = read_u64(&mut pos) as usize;
+                let data = bytes[pos..pos + len].to_vec();
+                Payload::Cipher { width, data }
+            }
+            3 => Payload::Scalar(f64::from_le_bytes(bytes[1..9].try_into().unwrap())),
+            4 => Payload::Flag(bytes[1] != 0),
+            5 => {
+                let n = read_u64(&mut pos) as usize;
+                Payload::Bytes(bytes[pos..pos + n].to_vec())
+            }
+            t => panic!("unknown payload tag {t}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::paillier::Keypair;
+    use crate::crypto::prng::ChaChaRng;
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let cases = vec![
+            Payload::Ring(vec![0, 1, u64::MAX]),
+            Payload::RingPair(vec![5, 6], vec![7]),
+            Payload::Scalar(-3.25),
+            Payload::Flag(true),
+            Payload::Flag(false),
+            Payload::Bytes(vec![1, 2, 3]),
+            Payload::Ring(vec![]),
+        ];
+        for p in cases {
+            assert_eq!(Payload::decode(&p.encode()), p);
+        }
+    }
+
+    #[test]
+    fn ciphertext_roundtrip() {
+        let mut rng = ChaChaRng::from_seed(90);
+        let kp = Keypair::generate(128, &mut rng);
+        let cts: Vec<_> = [1i128, -5, 1 << 30]
+            .iter()
+            .map(|&v| kp.pk.encrypt_i128(v, &mut rng))
+            .collect();
+        let w = kp.pk.ciphertext_bytes();
+        let p = Payload::from_ciphertexts(&cts, w);
+        let encoded = p.encode();
+        let back = Payload::decode(&encoded).to_ciphertexts();
+        assert_eq!(back.len(), 3);
+        for (orig, got) in cts.iter().zip(&back) {
+            assert_eq!(orig.0, got.0);
+        }
+        // decrypts still work after the wire trip
+        assert_eq!(kp.sk.decrypt_i128(&back[1], &kp.pk), -5);
+    }
+
+    #[test]
+    fn encoded_size_is_exact() {
+        let p = Payload::Ring(vec![0; 100]);
+        assert_eq!(p.encode().len(), 1 + 8 + 800);
+        let c = Payload::Cipher { width: 32, data: vec![0; 64] };
+        assert_eq!(c.encode().len(), 1 + 8 + 8 + 64);
+    }
+}

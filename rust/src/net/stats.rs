@@ -1,0 +1,129 @@
+//! Per-link byte/message counters and the simulated wire model.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Testbed network model. The paper's setting: 1000 Mbps bandwidth limit
+/// per server, LAN latency. Used to convert exact byte counts into the
+/// simulated network component of `runtime`.
+#[derive(Clone, Copy, Debug)]
+pub struct WireModel {
+    /// Link bandwidth in bits per second.
+    pub bandwidth_bps: f64,
+    /// One-way message latency in seconds.
+    pub latency_s: f64,
+}
+
+impl Default for WireModel {
+    fn default() -> Self {
+        // Paper §5.2: 1000 Mbps; 0.25 ms one-way is a typical LAN figure.
+        WireModel { bandwidth_bps: 1e9, latency_s: 0.25e-3 }
+    }
+}
+
+impl WireModel {
+    /// Simulated seconds to move `bytes` in `msgs` messages over the wire.
+    ///
+    /// Serial model: each message pays latency, all bytes share the pipe.
+    /// This matches how the frameworks here communicate — protocol rounds
+    /// are blocking request/response exchanges, not pipelined streams.
+    pub fn transfer_secs(&self, bytes: u64, msgs: u64) -> f64 {
+        bytes as f64 * 8.0 / self.bandwidth_bps + msgs as f64 * self.latency_s
+    }
+}
+
+/// Shared counters for an `n`-party network.
+pub struct NetStats {
+    n: usize,
+    /// bytes[from * n + to]
+    bytes: Vec<AtomicU64>,
+    /// msgs[from * n + to]
+    msgs: Vec<AtomicU64>,
+    /// Offline-phase bytes (Beaver dealing), counted separately.
+    offline_bytes: AtomicU64,
+}
+
+impl NetStats {
+    /// Fresh counters for `n` parties.
+    pub fn new(n: usize) -> Self {
+        NetStats {
+            n,
+            bytes: (0..n * n).map(|_| AtomicU64::new(0)).collect(),
+            msgs: (0..n * n).map(|_| AtomicU64::new(0)).collect(),
+            offline_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one message of `len` bytes.
+    pub fn record(&self, from: usize, to: usize, len: usize) {
+        self.bytes[from * self.n + to].fetch_add(len as u64, Ordering::Relaxed);
+        self.msgs[from * self.n + to].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record offline-phase (preprocessing) traffic.
+    pub fn record_offline(&self, len: usize) {
+        self.offline_bytes.fetch_add(len as u64, Ordering::Relaxed);
+    }
+
+    /// Total online bytes over all links.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total online messages over all links.
+    pub fn total_msgs(&self) -> u64 {
+        self.msgs.iter().map(|m| m.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Offline-phase bytes.
+    pub fn offline_bytes(&self) -> u64 {
+        self.offline_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Bytes sent from `from` to `to`.
+    pub fn link_bytes(&self, from: usize, to: usize) -> u64 {
+        self.bytes[from * self.n + to].load(Ordering::Relaxed)
+    }
+
+    /// Total online megabytes (the tables' `comm` column).
+    pub fn total_mb(&self) -> f64 {
+        self.total_bytes() as f64 / 1e6
+    }
+
+    /// Reset all counters (between bench repetitions).
+    pub fn reset(&self) {
+        for c in self.bytes.iter().chain(self.msgs.iter()) {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.offline_bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let s = NetStats::new(3);
+        s.record(0, 1, 100);
+        s.record(0, 1, 50);
+        s.record(2, 0, 7);
+        assert_eq!(s.link_bytes(0, 1), 150);
+        assert_eq!(s.link_bytes(1, 0), 0);
+        assert_eq!(s.total_bytes(), 157);
+        assert_eq!(s.total_msgs(), 3);
+        s.record_offline(1000);
+        assert_eq!(s.offline_bytes(), 1000);
+        s.reset();
+        assert_eq!(s.total_bytes(), 0);
+        assert_eq!(s.offline_bytes(), 0);
+    }
+
+    #[test]
+    fn wire_model_math() {
+        let w = WireModel { bandwidth_bps: 1e9, latency_s: 1e-3 };
+        // 1 MB in 8 messages: 8e6 bits / 1e9 bps = 8 ms, + 8 ms latency
+        let t = w.transfer_secs(1_000_000, 8);
+        assert!((t - 0.016).abs() < 1e-9, "{t}");
+    }
+}

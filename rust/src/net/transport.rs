@@ -1,0 +1,202 @@
+//! In-process full-mesh transport between party threads.
+//!
+//! Every party owns an [`Endpoint`]: one inbox (mpsc receiver) plus
+//! senders to every peer. Messages carry `(from, tag, encoded payload)`;
+//! `recv` matches on `(from, tag)` and buffers out-of-order arrivals, so
+//! protocol code can be written as straight-line request/response logic.
+
+use super::message::Payload;
+use super::stats::NetStats;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// A framed message on the wire.
+struct Frame {
+    from: usize,
+    tag: String,
+    bytes: Vec<u8>,
+}
+
+/// One party's connection to the mesh.
+pub struct Endpoint {
+    /// This party's id (0 = guest C, 1.. = hosts B_i).
+    pub id: usize,
+    senders: Vec<Option<Sender<Frame>>>,
+    inbox: Receiver<Frame>,
+    /// Arrived-but-not-yet-requested frames.
+    pending: VecDeque<Frame>,
+    stats: Arc<NetStats>,
+}
+
+/// Build a fully connected mesh of `n` endpoints sharing one stats sink.
+pub fn full_mesh(n: usize) -> (Vec<Endpoint>, Arc<NetStats>) {
+    let stats = Arc::new(NetStats::new(n));
+    let mut txs: Vec<Sender<Frame>> = Vec::with_capacity(n);
+    let mut rxs: Vec<Receiver<Frame>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let mut endpoints = Vec::with_capacity(n);
+    for (id, inbox) in rxs.into_iter().enumerate() {
+        let senders = txs
+            .iter()
+            .enumerate()
+            .map(|(j, tx)| if j == id { None } else { Some(tx.clone()) })
+            .collect();
+        endpoints.push(Endpoint {
+            id,
+            senders,
+            inbox,
+            pending: VecDeque::new(),
+            stats: stats.clone(),
+        });
+    }
+    (endpoints, stats)
+}
+
+impl Endpoint {
+    /// Serialize and send `payload` to party `to`, recording its exact
+    /// wire size.
+    pub fn send(&self, to: usize, tag: &str, payload: &Payload) {
+        let bytes = payload.encode();
+        // framing overhead: 2 ids + tag length, like a slim TCP app header
+        self.stats.record(self.id, to, bytes.len() + 8 + tag.len());
+        let tx = self.senders[to]
+            .as_ref()
+            .unwrap_or_else(|| panic!("party {} sending to itself", self.id));
+        tx.send(Frame { from: self.id, tag: tag.to_string(), bytes })
+            .expect("peer hung up");
+    }
+
+    /// Blocking receive of the next message from `from` tagged `tag`
+    /// (out-of-order frames are buffered, not lost).
+    pub fn recv(&mut self, from: usize, tag: &str) -> Payload {
+        // check the buffer first
+        if let Some(pos) = self
+            .pending
+            .iter()
+            .position(|f| f.from == from && f.tag == tag)
+        {
+            let f = self.pending.remove(pos).unwrap();
+            return Payload::decode(&f.bytes);
+        }
+        loop {
+            let f = self
+                .inbox
+                .recv()
+                .expect("all peers disconnected while waiting");
+            if f.from == from && f.tag == tag {
+                return Payload::decode(&f.bytes);
+            }
+            self.pending.push_back(f);
+        }
+    }
+
+    /// Broadcast to every peer.
+    pub fn broadcast(&self, tag: &str, payload: &Payload) {
+        for to in 0..self.senders.len() {
+            if to != self.id {
+                self.send(to, tag, payload);
+            }
+        }
+    }
+
+    /// Number of parties in the mesh.
+    pub fn n_parties(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Shared stats sink (for offline accounting from protocol code).
+    pub fn stats(&self) -> &Arc<NetStats> {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn two_party_ping_pong() {
+        let (mut eps, stats) = full_mesh(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let t = thread::spawn(move || {
+            let p = b.recv(0, "ping");
+            assert_eq!(p, Payload::Ring(vec![1, 2, 3]));
+            b.send(0, "pong", &Payload::Scalar(9.5));
+        });
+        a.send(1, "ping", &Payload::Ring(vec![1, 2, 3]));
+        let r = a.recv(1, "pong");
+        assert_eq!(r, Payload::Scalar(9.5));
+        t.join().unwrap();
+        assert_eq!(stats.total_msgs(), 2);
+        assert!(stats.link_bytes(0, 1) > 24);
+        assert!(stats.link_bytes(1, 0) > 8);
+    }
+
+    #[test]
+    fn out_of_order_delivery_buffered() {
+        let (mut eps, _) = full_mesh(2);
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        a.send(1, "first", &Payload::Flag(true));
+        a.send(1, "second", &Payload::Flag(false));
+        // receive in reverse order
+        assert_eq!(b.recv(0, "second"), Payload::Flag(false));
+        assert_eq!(b.recv(0, "first"), Payload::Flag(true));
+    }
+
+    #[test]
+    fn three_party_broadcast() {
+        let (mut eps, stats) = full_mesh(3);
+        let mut c = eps.pop().unwrap();
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        a.broadcast("hello", &Payload::Scalar(1.0));
+        assert_eq!(b.recv(0, "hello"), Payload::Scalar(1.0));
+        assert_eq!(c.recv(0, "hello"), Payload::Scalar(1.0));
+        assert_eq!(stats.total_msgs(), 2);
+    }
+
+    #[test]
+    fn dropped_peer_fails_loudly() {
+        // failure injection: a crashed party must surface as a clear
+        // panic on the waiting side, not a hang or silent corruption
+        let (mut eps, _) = full_mesh(2);
+        let b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        drop(b);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            a.recv(1, "never-coming")
+        }));
+        assert!(result.is_err(), "recv from a dead peer must panic");
+    }
+
+    #[test]
+    fn send_to_self_rejected() {
+        let (mut eps, _) = full_mesh(2);
+        let a = eps.remove(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            a.send(0, "loop", &Payload::Flag(true))
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn same_tag_fifo_per_link() {
+        let (mut eps, _) = full_mesh(2);
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        for i in 0..5u64 {
+            a.send(1, "seq", &Payload::Ring(vec![i]));
+        }
+        for i in 0..5u64 {
+            assert_eq!(b.recv(0, "seq"), Payload::Ring(vec![i]));
+        }
+    }
+}

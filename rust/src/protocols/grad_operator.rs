@@ -1,0 +1,191 @@
+//! Protocol 2 — secure gradient-operator computing.
+//!
+//! CPs hold shares of the aggregated intermediates; this protocol turns
+//! them into shares of the **scaled gradient-operator** `m·d`:
+//!
+//! - LR (eq. 7): `m·d = 0.25·WX − 0.5·Y` — affine with *exact*
+//!   power-of-two public constants, so it is communication-free.
+//! - PR (eq. 8): `m·d = e^{WX} − Y`, where `e^{WX} = Π_p e^{W_p X_p}` is
+//!   a chain of `k−1` Beaver multiplications over the per-party exp
+//!   shares (the paper's §4.2: shares of `e^{WX}` are required "in
+//!   addition to WX and Y").
+//! - Linear: `m·d = WX − Y` (communication-free).
+//!
+//! Returns `None` on non-CP parties.
+
+use super::mpc_online::mpc_mul;
+use super::ProtoCtx;
+use crate::glm::GlmKind;
+use crate::mpc::share::Share;
+
+/// Inputs to Protocol 2, as produced by Protocol 1 on the CPs.
+pub struct GradOpInputs {
+    /// Share of `WX = Σ_p W_p X_p`.
+    pub wx: Share,
+    /// Share of the label vector `Y`.
+    pub y: Share,
+    /// Per exponential multiplier `c` (see
+    /// [`GlmKind::exp_multipliers`]): the per-party shares of
+    /// `e^{c·W_pX_p}` to be chained into `e^{c·WX}`.
+    pub exps: Vec<Vec<Share>>,
+}
+
+/// Outputs: the `m·d` share plus the intermediates Protocol 4 reuses.
+pub struct GradOpOutputs {
+    /// Share of `m·d` (single fixed-point scale).
+    pub md: Share,
+    /// Loss aggregates, model-specific (see [`crate::protocols::secure_loss`]):
+    /// PR `[e^{WX}]`; Gamma `[y⊙e^{−WX}]`; Tweedie
+    /// `[y⊙e^{(1−ρ)WX}, e^{(2−ρ)WX}]`; empty for LR/linear.
+    pub loss_aux: Vec<Share>,
+}
+
+/// Chain per-party shares of `e^{c·z_p}` into a share of
+/// `e^{c·WX} = Π_p e^{c·z_p}` (k−1 Beaver rounds between the CPs).
+fn chain_exps(ctx: &mut ProtoCtx, parts: &[Share], tag: &str) -> Share {
+    assert!(!parts.is_empty(), "exponential chain needs shares");
+    let mut prod = parts[0].clone();
+    for (i, e) in parts.iter().enumerate().skip(1) {
+        prod = mpc_mul(ctx, &prod, e, &format!("{tag}:{i}"));
+    }
+    prod
+}
+
+/// Run Protocol 2 on a CP. `first` arithmetic-role handling is internal.
+pub fn protocol2_grad_operator(
+    ctx: &mut ProtoCtx,
+    kind: GlmKind,
+    inputs: &GradOpInputs,
+) -> GradOpOutputs {
+    assert!(ctx.is_cp(), "Protocol 2 runs on computing parties only");
+    let first = ctx.is_first_cp();
+    match kind {
+        GlmKind::Logistic => {
+            // m·d = 0.25·WX − 0.5·Y : public exact binary scalars, local.
+            let md = inputs
+                .wx
+                .scale_public(0.25, first)
+                .sub(&inputs.y.scale_public(0.5, first));
+            GradOpOutputs { md, loss_aux: Vec::new() }
+        }
+        GlmKind::Poisson => {
+            let prod = chain_exps(ctx, &inputs.exps[0], "p2:exp0");
+            let md = prod.sub(&inputs.y);
+            GradOpOutputs { md, loss_aux: vec![prod] }
+        }
+        GlmKind::Linear => GradOpOutputs {
+            md: inputs.wx.sub(&inputs.y),
+            loss_aux: Vec::new(),
+        },
+        GlmKind::Gamma => {
+            // m·d = 1 − y·e^{−WX}
+            let e_neg = chain_exps(ctx, &inputs.exps[0], "p2:exp0");
+            let t = mpc_mul(ctx, &inputs.y, &e_neg, "p2:yexp");
+            let ones = vec![1.0; t.len()];
+            let md = t.neg().add_public(&ones, first);
+            GradOpOutputs { md, loss_aux: vec![t] }
+        }
+        GlmKind::Tweedie => {
+            // m·d = e^{(2−ρ)WX} − y·e^{(1−ρ)WX}
+            let e1 = chain_exps(ctx, &inputs.exps[0], "p2:exp0");
+            let e2 = chain_exps(ctx, &inputs.exps[1], "p2:exp1");
+            let t1 = mpc_mul(ctx, &inputs.y, &e1, "p2:yexp");
+            let md = e2.sub(&t1);
+            GradOpOutputs { md, loss_aux: vec![t1, e2] }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::mesh_ctxs;
+    use crate::crypto::prng::ChaChaRng;
+    use crate::mpc::share::{reconstruct_f64, share_f64};
+    use std::thread;
+
+    fn run_two_cp(
+        kind: GlmKind,
+        wx: Vec<f64>,
+        y: Vec<f64>,
+        exps: Vec<Vec<f64>>,
+    ) -> (Vec<f64>, Option<Vec<f64>>) {
+        let ctxs = mesh_ctxs(2, (0, 1), 21);
+        let mut rng = ChaChaRng::from_seed(22);
+        let (wx0, wx1) = share_f64(&wx, &mut rng);
+        let (y0, y1) = share_f64(&y, &mut rng);
+        let mut e0s = Vec::new();
+        let mut e1s = Vec::new();
+        for e in &exps {
+            let (a, b) = share_f64(e, &mut rng);
+            e0s.push(a);
+            e1s.push(b);
+        }
+        let wrap = |v: Vec<Share>| if v.is_empty() { Vec::new() } else { vec![v] };
+        let sides = [
+            GradOpInputs { wx: wx0, y: y0, exps: wrap(e0s) },
+            GradOpInputs { wx: wx1, y: y1, exps: wrap(e1s) },
+        ];
+        let mut handles = Vec::new();
+        for (mut ctx, inp) in ctxs.into_iter().zip(sides) {
+            handles.push(thread::spawn(move || {
+                ctx.reseed_dealer(0);
+                let out = protocol2_grad_operator(&mut ctx, kind, &inp);
+                (out.md, out.loss_aux.into_iter().next())
+            }));
+        }
+        let mut res: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let (md1, e1) = res.pop().unwrap();
+        let (md0, e0) = res.pop().unwrap();
+        let md = reconstruct_f64(&md0, &md1);
+        let ewx = match (e0, e1) {
+            (Some(a), Some(b)) => Some(reconstruct_f64(&a, &b)),
+            _ => None,
+        };
+        (md, ewx)
+    }
+
+    #[test]
+    fn lr_grad_operator() {
+        let wx = vec![0.8, -0.4];
+        let y = vec![1.0, -1.0]; // already ±1-encoded shares
+        let (md, _) = run_two_cp(GlmKind::Logistic, wx.clone(), y.clone(), vec![]);
+        for i in 0..2 {
+            let expect = 0.25 * wx[i] - 0.5 * y[i];
+            assert!((md[i] - expect).abs() < 1e-4, "{} vs {expect}", md[i]);
+        }
+    }
+
+    #[test]
+    fn pr_grad_operator_two_parties() {
+        // z_C = 0.3, z_B = -0.1 per sample; e^{wx} = e^{0.2}
+        let wx = vec![0.2, 0.2];
+        let y = vec![1.0, 0.0];
+        let e_c = vec![0.3f64.exp(), 0.3f64.exp()];
+        let e_b = vec![(-0.1f64).exp(), (-0.1f64).exp()];
+        let (md, ewx) = run_two_cp(GlmKind::Poisson, wx, y.clone(), vec![e_c, e_b]);
+        let expect_e = 0.2f64.exp();
+        let ewx = ewx.unwrap();
+        for i in 0..2 {
+            assert!((ewx[i] - expect_e).abs() < 1e-3, "{} vs {expect_e}", ewx[i]);
+            assert!((md[i] - (expect_e - y[i])).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn pr_three_party_exp_chain() {
+        let wx = vec![0.6];
+        let y = vec![2.0];
+        let parts = vec![vec![0.1f64.exp()], vec![0.2f64.exp()], vec![0.3f64.exp()]];
+        let (md, ewx) = run_two_cp(GlmKind::Poisson, wx, y, parts);
+        let expect = 0.6f64.exp();
+        assert!((ewx.unwrap()[0] - expect).abs() < 2e-3);
+        assert!((md[0] - (expect - 2.0)).abs() < 2e-3);
+    }
+
+    #[test]
+    fn linear_grad_operator() {
+        let (md, _) = run_two_cp(GlmKind::Linear, vec![2.0], vec![0.5], vec![]);
+        assert!((md[0] - 1.5).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,157 @@
+//! The paper's four protocols (§4.1), written as straight-line
+//! message-passing code over [`crate::net`].
+//!
+//! | Paper | Module | Role |
+//! |---|---|---|
+//! | Protocol 1 | [`secret_share`] | split intermediates toward the CPs |
+//! | Protocol 2 | [`grad_operator`] | shares of `m·d` on the CPs |
+//! | Protocol 3 | [`secure_gradient`] | per-party plaintext gradients via HE |
+//! | Protocol 4 | [`secure_loss`] | loss revealed to party C |
+//!
+//! All functions take a [`ProtoCtx`] carrying the endpoint, PRNG, key
+//! material and the current computing-party (CP) pair. They are executed
+//! by *every* party; role branches mirror Algorithm 1's `if P is
+//! computing party` structure.
+//!
+//! ## Fixed-point scaling convention
+//!
+//! Shares hold `m·d` (the gradient-operator scaled by the batch size) at
+//! single fixed-point scale; the `1/m` division happens in plaintext f64
+//! when gradients are decoded ([`crate::crypto::he_ops::decode_gradient`]),
+//! where it cannot underflow the 2⁻²⁰ fixed-point resolution.
+//!
+//! ## Bridging Z_2⁶⁴ shares and Paillier integers (Protocol 3)
+//!
+//! `Xᵀ·⟨md⟩` is evaluated as an **exact integer** in the Paillier
+//! plaintext space (`n ≫ 2¹⁰⁰ >` any intermediate), then the two share
+//! contributions are summed and reduced mod 2⁶⁴ — integer addition
+//! commutes with the reduction, so the result equals the ring value
+//! `Xᵀ·(md) mod 2⁶⁴` even though individual share terms carry `±2⁶⁴`
+//! wrap offsets. See DESIGN.md §7.
+
+pub mod grad_operator;
+pub mod mpc_online;
+pub mod secret_share;
+pub mod secure_gradient;
+pub mod secure_loss;
+
+use crate::crypto::paillier::{Keypair, PublicKey};
+use crate::crypto::prng::ChaChaRng;
+use crate::mpc::beaver::TripleDealer;
+use crate::net::Endpoint;
+use std::sync::Arc;
+
+/// Per-party protocol context for one training run.
+pub struct ProtoCtx {
+    /// This party's mesh endpoint (`id` 0 = C, 1.. = B_i).
+    pub ep: Endpoint,
+    /// Party-local randomness.
+    pub rng: ChaChaRng,
+    /// This party's Paillier key pair.
+    pub kp: Arc<Keypair>,
+    /// All parties' public keys (indexed by party id).
+    pub pks: Vec<Arc<PublicKey>>,
+    /// The computing parties for the current iteration.
+    pub cp: (usize, usize),
+    /// Shared-seed triple dealer for the current iteration (both CPs
+    /// advance it in lockstep; see [`reseed_dealer`]).
+    pub dealer: TripleDealer,
+    /// Base seed of the run (drives per-iteration dealer reseeding).
+    pub run_seed: u64,
+}
+
+impl ProtoCtx {
+    /// True if this party is one of the current computing parties.
+    pub fn is_cp(&self) -> bool {
+        self.ep.id == self.cp.0 || self.ep.id == self.cp.1
+    }
+
+    /// True if this party is the *first* CP (the `party_is_first` side of
+    /// the MPC share arithmetic).
+    pub fn is_first_cp(&self) -> bool {
+        self.ep.id == self.cp.0
+    }
+
+    /// The other computing party (panics if self is not a CP).
+    pub fn cp_peer(&self) -> usize {
+        if self.ep.id == self.cp.0 {
+            self.cp.1
+        } else if self.ep.id == self.cp.1 {
+            self.cp.0
+        } else {
+            panic!("party {} is not a computing party", self.ep.id)
+        }
+    }
+
+    /// Re-seed the triple dealer for iteration `t` — every party derives
+    /// the same stream, so the two CPs stay in lockstep regardless of
+    /// which pair is selected this round.
+    pub fn reseed_dealer(&mut self, t: usize) {
+        let seed = self
+            .run_seed
+            .wrapping_add((t as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        self.dealer = TripleDealer::new(seed);
+    }
+}
+
+/// Select the computing-party pair for iteration `t`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CpSelection {
+    /// Always `(C, B1)` — the configuration the paper measures.
+    Fixed,
+    /// Fresh random pair each iteration (the paper's anti-collusion
+    /// variant, §4.3): derived from the shared run seed so every party
+    /// agrees without extra communication.
+    Rotate,
+}
+
+impl CpSelection {
+    /// The CP pair for iteration `t` of a run over `n` parties.
+    pub fn pick(&self, n: usize, run_seed: u64, t: usize) -> (usize, usize) {
+        match self {
+            CpSelection::Fixed => (0, 1),
+            CpSelection::Rotate => {
+                let mut rng = ChaChaRng::from_seed(
+                    run_seed ^ (t as u64).wrapping_mul(0xd1b5_4a32_d192_ed03),
+                );
+                let a = rng.next_u64_below(n as u64) as usize;
+                let mut b = rng.next_u64_below(n as u64 - 1) as usize;
+                if b >= a {
+                    b += 1;
+                }
+                (a, b)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cp_selection_fixed() {
+        assert_eq!(CpSelection::Fixed.pick(4, 7, 0), (0, 1));
+        assert_eq!(CpSelection::Fixed.pick(4, 7, 9), (0, 1));
+    }
+
+    #[test]
+    fn cp_selection_rotate_distinct_and_agreed() {
+        for t in 0..50 {
+            let (a, b) = CpSelection::Rotate.pick(5, 42, t);
+            assert_ne!(a, b);
+            assert!(a < 5 && b < 5);
+            // deterministic: every party computes the same pair
+            assert_eq!((a, b), CpSelection::Rotate.pick(5, 42, t));
+        }
+    }
+
+    #[test]
+    fn cp_rotation_covers_pairs() {
+        let mut seen = std::collections::HashSet::new();
+        for t in 0..100 {
+            seen.insert(CpSelection::Rotate.pick(3, 1, t));
+        }
+        assert!(seen.len() >= 4, "rotation barely rotates: {seen:?}");
+    }
+}

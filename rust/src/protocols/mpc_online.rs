@@ -1,0 +1,108 @@
+//! Online Beaver multiplication between the two CPs.
+//!
+//! Both CPs hold shares of `x` and `y`, pull the next triple from their
+//! lockstep dealers, exchange the masked openings `(e, f)` in a single
+//! round, and combine locally. Offline triple bytes are recorded once (by
+//! the first CP) against the offline counter.
+
+use super::ProtoCtx;
+use crate::mpc::beaver::{mul_combine, mul_open};
+use crate::mpc::ring;
+use crate::mpc::share::Share;
+use crate::net::Payload;
+
+/// Endpoint-level Beaver multiplication between two parties holding
+/// shares of `x`, `y` (also used by the SS baselines, which don't carry a
+/// [`ProtoCtx`]). `first` designates the arithmetic "party 0" role.
+pub fn mul_over_wire(
+    ep: &mut crate::net::Endpoint,
+    peer: usize,
+    first: bool,
+    dealer: &mut crate::mpc::beaver::TripleDealer,
+    x: &Share,
+    y: &Share,
+    tag: &str,
+) -> Share {
+    assert_eq!(x.len(), y.len());
+    // lockstep dealing: both sides generate the same (t0, t1), take their half
+    let (t0, t1) = dealer.deal(x.len());
+    if first {
+        ep.stats().record_offline(t0.byte_len() + t1.byte_len());
+    }
+    let t = if first { t0 } else { t1 };
+
+    let (e_my, f_my) = mul_open(x, y, &t);
+    ep.send(peer, tag, &Payload::RingPair(e_my.clone(), f_my.clone()));
+    let (e_peer, f_peer) = ep.recv(peer, tag).into_ring_pair();
+    let e = ring::add_vec(&e_my, &e_peer);
+    let f = ring::add_vec(&f_my, &f_peer);
+    mul_combine(&e, &f, &t, first)
+}
+
+/// CP-only: share of `x·y` (single fixed-point scale after truncation).
+///
+/// Panics if called by a non-CP. `tag` must be unique per multiplication
+/// within an iteration.
+pub fn mpc_mul(ctx: &mut ProtoCtx, x: &Share, y: &Share, tag: &str) -> Share {
+    assert!(ctx.is_cp(), "mpc_mul called on a non-computing party");
+    let first = ctx.is_first_cp();
+    let peer = ctx.cp_peer();
+    let mut dealer = std::mem::replace(&mut ctx.dealer, crate::mpc::beaver::TripleDealer::new(0));
+    let out = mul_over_wire(&mut ctx.ep, peer, first, &mut dealer, x, y, tag);
+    ctx.dealer = dealer;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::mesh_ctxs;
+    use crate::mpc::share::{reconstruct_f64, share_f64};
+    use crate::crypto::prng::ChaChaRng;
+    use std::thread;
+
+    #[test]
+    fn networked_beaver_mul() {
+        let ctxs = mesh_ctxs(2, (0, 1), 11);
+        let mut rng = ChaChaRng::from_seed(12);
+        let x = vec![1.5, -2.0, 3.0];
+        let y = vec![4.0, 0.5, -1.0];
+        let (x0, x1) = share_f64(&x, &mut rng);
+        let (y0, y1) = share_f64(&y, &mut rng);
+        let shares = [(x0, y0), (x1, y1)];
+        let mut handles = Vec::new();
+        for (mut ctx, (xs, ys)) in ctxs.into_iter().zip(shares) {
+            handles.push(thread::spawn(move || {
+                ctx.reseed_dealer(0);
+                mpc_mul(&mut ctx, &xs, &ys, "mul")
+            }));
+        }
+        let res: Vec<Share> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let z = reconstruct_f64(&res[0], &res[1]);
+        for ((a, b), c) in x.iter().zip(&y).zip(&z) {
+            assert!((a * b - c).abs() < 1e-3, "{a}*{b} != {c}");
+        }
+    }
+
+    #[test]
+    fn sequential_muls_stay_in_lockstep() {
+        let ctxs = mesh_ctxs(2, (0, 1), 13);
+        let mut rng = ChaChaRng::from_seed(14);
+        let x = vec![2.0, 3.0];
+        let (x0, x1) = share_f64(&x, &mut rng);
+        let shares = [x0, x1];
+        let mut handles = Vec::new();
+        for (mut ctx, xs) in ctxs.into_iter().zip(shares) {
+            handles.push(thread::spawn(move || {
+                ctx.reseed_dealer(1);
+                // square, then fourth power
+                let sq = mpc_mul(&mut ctx, &xs, &xs, "sq");
+                mpc_mul(&mut ctx, &sq, &sq, "quad")
+            }));
+        }
+        let res: Vec<Share> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let z = reconstruct_f64(&res[0], &res[1]);
+        assert!((z[0] - 16.0).abs() < 0.01, "{}", z[0]);
+        assert!((z[1] - 81.0).abs() < 0.01, "{}", z[1]);
+    }
+}

@@ -1,0 +1,140 @@
+//! Protocol 1 — secret sharing of intermediates toward the CPs.
+//!
+//! The owner of a vector `Z` samples a uniform share for the first CP and
+//! sends `Z − ⟨Z⟩` to the second (keeping its own half if it *is* a CP).
+//! Non-owner non-CP parties are idle. Returns this party's share when it
+//! is a CP, `None` otherwise.
+
+use super::ProtoCtx;
+use crate::mpc::ring::{self, Elem};
+use crate::mpc::share::Share;
+use crate::net::Payload;
+
+/// Run Protocol 1 for the vector `vals` owned by party `owner`.
+///
+/// `vals` must be `Some` on the owner (ring-encoded, single fixed-point
+/// scale) and is ignored elsewhere. `tag` namespaces concurrent shares.
+pub fn protocol1_share(
+    ctx: &mut ProtoCtx,
+    tag: &str,
+    owner: usize,
+    vals: Option<&[Elem]>,
+) -> Option<Share> {
+    let me = ctx.ep.id;
+    let (cp_a, cp_b) = ctx.cp;
+
+    if me == owner {
+        let v = vals.expect("owner must supply values");
+        // uniform share for cp_a, remainder for cp_b
+        let s_a: Vec<Elem> = v.iter().map(|_| ctx.rng.next_u64()).collect();
+        let s_b: Vec<Elem> = v.iter().zip(&s_a).map(|(&x, &a)| ring::sub(x, a)).collect();
+        let mut kept: Option<Share> = None;
+        for (cp, share) in [(cp_a, s_a), (cp_b, s_b)] {
+            if cp == me {
+                kept = Some(Share(share));
+            } else {
+                ctx.ep.send(cp, tag, &Payload::Ring(share));
+            }
+        }
+        kept
+    } else if me == cp_a || me == cp_b {
+        Some(Share(ctx.ep.recv(owner, tag).into_ring()))
+    } else {
+        None
+    }
+}
+
+/// Share every party's vector under a per-owner tag and, on CPs, return
+/// the *sum of shares* (i.e. a share of `Σ_p Z_p` — the aggregation every
+/// GLM needs for `WX = Σ_p W_p X_p`).
+pub fn share_and_sum(
+    ctx: &mut ProtoCtx,
+    tag_prefix: &str,
+    own_vals: &[Elem],
+) -> Option<Share> {
+    let n = ctx.ep.n_parties();
+    let mut acc: Option<Share> = None;
+    for p in 0..n {
+        let tag = format!("{tag_prefix}:{p}");
+        let vals = if p == ctx.ep.id { Some(own_vals) } else { None };
+        if let Some(s) = protocol1_share(ctx, &tag, p, vals) {
+            acc = Some(match acc {
+                None => s,
+                Some(prev) => prev.add(&s),
+            });
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::mesh_ctxs;
+    use crate::mpc::share::reconstruct_f64;
+    use std::thread;
+
+    #[test]
+    fn three_party_share_to_cps() {
+        // parties 0,1 are CPs; party 2 shares a vector; CPs reconstruct
+        let ctxs = mesh_ctxs(3, (0, 1), 7);
+        let vals = ring::encode_vec(&[1.5, -2.0, 42.0]);
+        let vals2 = vals.clone();
+        let mut handles = Vec::new();
+        for (i, mut ctx) in ctxs.into_iter().enumerate() {
+            let v = vals2.clone();
+            handles.push(thread::spawn(move || {
+                let owned = if i == 2 { Some(v.as_slice()) } else { None };
+                protocol1_share(&mut ctx, "t", 2, owned)
+            }));
+        }
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let s0 = results[0].clone().unwrap();
+        let s1 = results[1].clone().unwrap();
+        assert!(results[2].is_none());
+        let back = reconstruct_f64(&s0, &s1);
+        assert!((back[0] - 1.5).abs() < 1e-6);
+        assert!((back[1] + 2.0).abs() < 1e-6);
+        assert!((back[2] - 42.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn owner_is_cp_keeps_half() {
+        let ctxs = mesh_ctxs(2, (0, 1), 8);
+        let vals = ring::encode_vec(&[3.25, -1.0]);
+        let mut handles = Vec::new();
+        for (i, mut ctx) in ctxs.into_iter().enumerate() {
+            let v = vals.clone();
+            handles.push(thread::spawn(move || {
+                let owned = if i == 0 { Some(v.as_slice()) } else { None };
+                protocol1_share(&mut ctx, "t", 0, owned)
+            }));
+        }
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let back = reconstruct_f64(
+            results[0].as_ref().unwrap(),
+            results[1].as_ref().unwrap(),
+        );
+        assert!((back[0] - 3.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn share_and_sum_aggregates_all_parties() {
+        let ctxs = mesh_ctxs(3, (0, 1), 9);
+        // party p owns the vector [p+1, 2(p+1)]; the sum is [6, 12]
+        let mut handles = Vec::new();
+        for (i, mut ctx) in ctxs.into_iter().enumerate() {
+            handles.push(thread::spawn(move || {
+                let mine = ring::encode_vec(&[(i + 1) as f64, 2.0 * (i + 1) as f64]);
+                share_and_sum(&mut ctx, "z", &mine)
+            }));
+        }
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let back = reconstruct_f64(
+            results[0].as_ref().unwrap(),
+            results[1].as_ref().unwrap(),
+        );
+        assert!((back[0] - 6.0).abs() < 1e-5);
+        assert!((back[1] - 12.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,210 @@
+//! Protocol 4 — secure loss computing.
+//!
+//! CPs compute *scalar* shares of the loss aggregates on their secret
+//! shares, reveal them to party C only, and C assembles the loss value in
+//! plaintext (adding its label-side constants). Nothing per-sample is
+//! revealed — only the two scalar sums the loss formula needs.
+//!
+//! - LR: second-order MacLaurin of eq. (1) (see
+//!   [`crate::glm::GlmKind::loss_taylor`]):
+//!   `L = ln2 − S_t/(2m) + S_{t²}/(8m)` with `t = Y⊙WX`;
+//!   `S_t`, `S_{t²}` need 2 Beaver multiplications.
+//! - PR: eq. (3): `L = −(S_{y·wx} − S_{e^{wx}})/m + Σln(y!)/m`;
+//!   one Beaver multiplication, `e^{WX}` shares reused from Protocol 2.
+//! - Linear: `L = S_{r²}/(2m)`, `r = WX − Y`.
+
+use super::mpc_online::mpc_mul;
+use super::ProtoCtx;
+use crate::glm::GlmKind;
+use crate::mpc::ring;
+use crate::mpc::share::Share;
+use crate::net::Payload;
+
+/// CP-side inputs (all shares at single fixed-point scale).
+pub struct LossInputs {
+    /// Share of `WX`.
+    pub wx: Share,
+    /// Share of `Y` (±1-encoded for LR, counts/amounts otherwise).
+    pub y: Share,
+    /// Model-specific aggregates from Protocol 2
+    /// ([`crate::protocols::grad_operator::GradOpOutputs::loss_aux`]).
+    pub aux: Vec<Share>,
+}
+
+/// Run Protocol 4. `inputs` is `Some` on CPs. `lny_sum` is `Σ ln(yᵢ!)`,
+/// computed locally by C from its plaintext labels (0.0 elsewhere /
+/// non-Poisson). Returns the loss on party C, `None` elsewhere.
+pub fn protocol4_loss(
+    ctx: &mut ProtoCtx,
+    kind: GlmKind,
+    inputs: Option<&LossInputs>,
+    m: usize,
+    lny_sum: f64,
+) -> Option<f64> {
+    let me = ctx.ep.id;
+    const C: usize = 0;
+
+    // CP side: build scalar shares [s1, s2] of the two aggregates.
+    let my_scalars: Option<Vec<u64>> = if ctx.is_cp() {
+        let inp = inputs.expect("CP must hold loss inputs");
+        let scalars = match kind {
+            GlmKind::Logistic => {
+                let t = mpc_mul(ctx, &inp.wx, &inp.y, "p4:t");
+                let t2 = mpc_mul(ctx, &t, &t, "p4:t2");
+                vec![t.sum(), t2.sum()]
+            }
+            GlmKind::Poisson => {
+                let t = mpc_mul(ctx, &inp.wx, &inp.y, "p4:t");
+                let e = inp.aux.first().expect("Poisson needs e^{WX} shares");
+                vec![t.sum(), e.sum()]
+            }
+            GlmKind::Linear => {
+                let r = inp.wx.sub(&inp.y);
+                let r2 = mpc_mul(ctx, &r, &r, "p4:r2");
+                vec![r2.sum(), 0]
+            }
+            GlmKind::Gamma => {
+                // L·m = Σ y·e^{−WX} + Σ WX  — both aggregates are free
+                let t = inp.aux.first().expect("Gamma needs y·e^{−WX} shares");
+                vec![t.sum(), inp.wx.sum()]
+            }
+            GlmKind::Tweedie => {
+                // L·m = −Σt₁/(1−ρ) + Σe₂/(2−ρ)
+                let t1 = &inp.aux[0];
+                let e2 = &inp.aux[1];
+                vec![t1.sum(), e2.sum()]
+            }
+        };
+        if me != C {
+            ctx.ep.send(C, "p4:loss", &Payload::Ring(scalars.clone()));
+        }
+        Some(scalars)
+    } else {
+        None
+    };
+
+    if me != C {
+        return None;
+    }
+
+    // Party C: reveal the aggregates and assemble the loss.
+    let mut totals = my_scalars.unwrap_or_else(|| vec![0, 0]);
+    for &cp in &[ctx.cp.0, ctx.cp.1] {
+        if cp != C {
+            let peer = ctx.ep.recv(cp, "p4:loss").into_ring();
+            for (t, p) in totals.iter_mut().zip(&peer) {
+                *t = ring::add(*t, *p);
+            }
+        }
+    }
+    let s1 = ring::decode(totals[0]);
+    let s2 = ring::decode(totals[1]);
+    let m_f = m as f64;
+    let loss = match kind {
+        GlmKind::Logistic => std::f64::consts::LN_2 - 0.5 * s1 / m_f + 0.125 * s2 / m_f,
+        GlmKind::Poisson => -(s1 - s2) / m_f + lny_sum / m_f,
+        GlmKind::Linear => 0.5 * s1 / m_f,
+        GlmKind::Gamma => (s1 + s2) / m_f,
+        GlmKind::Tweedie => {
+            use crate::glm::TWEEDIE_P;
+            (-s1 / (1.0 - TWEEDIE_P) + s2 / (2.0 - TWEEDIE_P)) / m_f
+        }
+    };
+    Some(loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::mesh_ctxs;
+    use crate::crypto::prng::ChaChaRng;
+    use crate::glm::{ln_factorial, to_pm1};
+    use crate::mpc::share::share_f64;
+    use std::thread;
+
+    fn run_loss(
+        n_parties: usize,
+        cp: (usize, usize),
+        kind: GlmKind,
+        wx: Vec<f64>,
+        y: Vec<f64>,
+        exp_wx: Option<Vec<f64>>,
+        lny_sum: f64,
+    ) -> f64 {
+        let m = wx.len();
+        let mut rng = ChaChaRng::from_seed(41);
+        let (wx0, wx1) = share_f64(&wx, &mut rng);
+        let (y0, y1) = share_f64(&y, &mut rng);
+        let (e0, e1) = match &exp_wx {
+            Some(e) => {
+                let (a, b) = share_f64(e, &mut rng);
+                (vec![a], vec![b])
+            }
+            None => (Vec::new(), Vec::new()),
+        };
+        let inputs = vec![
+            LossInputs { wx: wx0, y: y0, aux: e0 },
+            LossInputs { wx: wx1, y: y1, aux: e1 },
+        ];
+        let ctxs = mesh_ctxs(n_parties, cp, 42);
+        let mut handles = Vec::new();
+        let mut inputs = inputs.into_iter();
+        for (p, mut ctx) in ctxs.into_iter().enumerate() {
+            let inp = if p == cp.0 || p == cp.1 {
+                inputs.next()
+            } else {
+                None
+            };
+            handles.push(thread::spawn(move || {
+                ctx.reseed_dealer(0);
+                protocol4_loss(&mut ctx, kind, inp.as_ref(), m, lny_sum)
+            }));
+        }
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (p, r) in results.iter().enumerate() {
+            assert_eq!(r.is_some(), p == 0, "only C learns the loss");
+        }
+        results[0].unwrap()
+    }
+
+    #[test]
+    fn lr_loss_matches_taylor() {
+        let wx = vec![0.3, -0.2, 0.1, 0.4];
+        let y01 = vec![1.0, 0.0, 1.0, 0.0];
+        let y_pm: Vec<f64> = y01.iter().map(|&v| to_pm1(v)).collect();
+        let got = run_loss(2, (0, 1), GlmKind::Logistic, wx.clone(), y_pm, None, 0.0);
+        let expect = GlmKind::Logistic.loss_taylor(&wx, &y01);
+        assert!((got - expect).abs() < 1e-3, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn pr_loss_matches_exact() {
+        let wx = vec![0.2, -0.5, 0.0];
+        let y = vec![1.0, 0.0, 2.0];
+        let exp_wx: Vec<f64> = wx.iter().map(|&z: &f64| z.exp()).collect();
+        let lny: f64 = y.iter().map(|&v| ln_factorial(v)).sum();
+        let got = run_loss(2, (0, 1), GlmKind::Poisson, wx.clone(), y.clone(), Some(exp_wx), lny);
+        let expect = GlmKind::Poisson.loss(&wx, &y);
+        assert!((got - expect).abs() < 1e-3, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn linear_loss() {
+        let wx = vec![1.0, 2.0];
+        let y = vec![0.5, 2.5];
+        let got = run_loss(2, (0, 1), GlmKind::Linear, wx.clone(), y.clone(), None, 0.0);
+        let expect = GlmKind::Linear.loss(&wx, &y);
+        assert!((got - expect).abs() < 1e-3);
+    }
+
+    #[test]
+    fn c_not_a_cp_still_learns_loss() {
+        // 3 parties, CPs are (1, 2); C=0 must still receive the loss.
+        let wx = vec![0.1, 0.2];
+        let y = vec![1.0, -1.0];
+        let got = run_loss(3, (1, 2), GlmKind::Logistic, wx.clone(), y, None, 0.0);
+        let y01 = vec![1.0, 0.0];
+        let expect = GlmKind::Logistic.loss_taylor(&wx, &y01);
+        assert!((got - expect).abs() < 1e-3, "{got} vs {expect}");
+    }
+}

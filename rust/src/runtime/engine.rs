@@ -1,0 +1,211 @@
+//! The PJRT engine: compiles `artifacts/*.hlo.txt` once, executes them on
+//! the request path.
+//!
+//! Artifacts are produced by `python/compile/aot.py` (L2 JAX graphs
+//! calling the L1 Pallas kernels, lowered to HLO *text* — see
+//! DESIGN.md §2) with fixed tile shapes; this engine pads inputs to the
+//! tile and loops over row tiles, so one compiled executable serves every
+//! (m, f) the coordinator throws at it.
+
+use super::Compute;
+use crate::linalg::Matrix;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Row-tile height the artifacts are compiled for (must match aot.py).
+pub const M_TILE: usize = 1024;
+/// Feature width the artifacts are compiled for (must match aot.py).
+pub const F_PAD: usize = 32;
+
+/// One compiled executable plus its manifest entry.
+struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT-backed [`Compute`] implementation.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    artifacts: Mutex<HashMap<String, Artifact>>,
+    dir: PathBuf,
+}
+
+// xla handles are opaque C++ pointers behind Arc-like semantics; the
+// engine is only used behind Arc and calls are internally synchronized
+// by the Mutex around the artifact map.
+unsafe impl Send for XlaEngine {}
+unsafe impl Sync for XlaEngine {}
+
+impl XlaEngine {
+    /// Load from the default `artifacts/` directory (next to the
+    /// workspace root or given by `EFMVFL_ARTIFACTS`).
+    pub fn load_default() -> Result<XlaEngine> {
+        let dir = std::env::var("EFMVFL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        Self::load(&dir)
+    }
+
+    /// Load from an explicit artifact directory (must contain
+    /// `manifest.txt` naming the compiled entry points).
+    pub fn load(dir: &Path) -> Result<XlaEngine> {
+        let manifest = dir.join("manifest.txt");
+        if !manifest.exists() {
+            return Err(anyhow!("no manifest at {}", manifest.display()));
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let engine = XlaEngine { client, artifacts: Mutex::new(HashMap::new()), dir: dir.into() };
+        // eagerly compile everything listed in the manifest
+        let listing = std::fs::read_to_string(&manifest)?;
+        for line in listing.lines() {
+            let name = line.trim();
+            if name.is_empty() || name.starts_with('#') {
+                continue;
+            }
+            engine.compile(name)?;
+        }
+        Ok(engine)
+    }
+
+    /// Compile one named artifact (idempotent).
+    fn compile(&self, name: &str) -> Result<()> {
+        let mut map = self.artifacts.lock().unwrap();
+        if map.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        map.insert(name.to_string(), Artifact { exe });
+        Ok(())
+    }
+
+    /// Execute a named artifact on f32 buffers, returning the flat f32
+    /// outputs of the (single-element) result tuple.
+    fn run(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let map = self.artifacts.lock().unwrap();
+        let art = map
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not loaded"))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Tiled `X·w` through the `wx` artifact: pads features to
+    /// [`F_PAD`], loops row tiles of [`M_TILE`].
+    pub fn gemv_tiled(&self, x: &Matrix, w: &[f64]) -> Result<Vec<f64>> {
+        assert!(x.cols <= F_PAD, "feature block wider than artifact pad");
+        let mut w_pad = [0f32; F_PAD];
+        for (dst, &src) in w_pad.iter_mut().zip(w) {
+            *dst = src as f32;
+        }
+        let mut out = Vec::with_capacity(x.rows);
+        let mut x_tile = vec![0f32; M_TILE * F_PAD];
+        let mut start = 0;
+        while start < x.rows {
+            let rows = (x.rows - start).min(M_TILE);
+            x_tile.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..rows {
+                let row = x.row(start + i);
+                for (j, &v) in row.iter().enumerate() {
+                    x_tile[i * F_PAD + j] = v as f32;
+                }
+            }
+            let z = self.run(
+                "wx",
+                &[(&x_tile, &[M_TILE, F_PAD][..]), (&w_pad, &[F_PAD][..])],
+            )?;
+            out.extend(z[..rows].iter().map(|&v| v as f64));
+            start += rows;
+        }
+        Ok(out)
+    }
+
+    /// Tiled elementwise exp through the `exp` artifact.
+    pub fn exp_tiled(&self, z: &[f64]) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(z.len());
+        let mut tile = vec![0f32; M_TILE];
+        let mut start = 0;
+        while start < z.len() {
+            let nv = (z.len() - start).min(M_TILE);
+            tile.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..nv {
+                tile[i] = z[start + i] as f32;
+            }
+            let e = self.run("exp", &[(&tile, &[M_TILE][..])])?;
+            out.extend(e[..nv].iter().map(|&v| v as f64));
+            start += nv;
+        }
+        Ok(out)
+    }
+
+    /// Tiled `Xᵀ·d` through the `xtd` artifact (plaintext gradient path
+    /// used by baselines and evaluation).
+    pub fn gemv_t_tiled(&self, x: &Matrix, d: &[f64]) -> Result<Vec<f64>> {
+        assert!(x.cols <= F_PAD);
+        assert_eq!(x.rows, d.len());
+        let mut acc = vec![0f64; x.cols];
+        let mut x_tile = vec![0f32; M_TILE * F_PAD];
+        let mut d_tile = vec![0f32; M_TILE];
+        let mut start = 0;
+        while start < x.rows {
+            let rows = (x.rows - start).min(M_TILE);
+            x_tile.iter_mut().for_each(|v| *v = 0.0);
+            d_tile.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..rows {
+                let row = x.row(start + i);
+                for (j, &v) in row.iter().enumerate() {
+                    x_tile[i * F_PAD + j] = v as f32;
+                }
+                d_tile[i] = d[start + i] as f32;
+            }
+            let g = self.run(
+                "xtd",
+                &[(&x_tile, &[M_TILE, F_PAD][..]), (&d_tile, &[M_TILE][..])],
+            )?;
+            for j in 0..x.cols {
+                acc[j] += g[j] as f64;
+            }
+            start += rows;
+        }
+        Ok(acc)
+    }
+}
+
+impl Compute for XlaEngine {
+    fn gemv(&self, x: &Matrix, w: &[f64]) -> Vec<f64> {
+        self.gemv_tiled(x, w).expect("XLA gemv failed")
+    }
+
+    fn exp(&self, z: &[f64]) -> Vec<f64> {
+        self.exp_tiled(z).expect("XLA exp failed")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}

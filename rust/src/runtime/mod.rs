@@ -1,0 +1,79 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! The [`Compute`] trait abstracts the party-local dense math; the
+//! coordinator calls it every iteration for `W_p X_p` (and `exp` for PR).
+//! [`Native`] is the pure-rust fallback so `cargo test` needs no
+//! artifacts; [`XlaEngine`] (see [`engine`]) loads `artifacts/*.hlo.txt`
+//! via the PJRT CPU client and serves the same calls — Python never runs
+//! at training time.
+
+pub mod engine;
+
+use crate::linalg::{self, Matrix};
+use std::sync::Arc;
+
+/// Party-local dense compute used on the training path.
+pub trait Compute: Send + Sync {
+    /// `z = X·w` — the per-party linear predictor `W_p X_p`.
+    fn gemv(&self, x: &Matrix, w: &[f64]) -> Vec<f64>;
+
+    /// Elementwise `exp` (Poisson's `e^{W_p X_p}`).
+    fn exp(&self, z: &[f64]) -> Vec<f64> {
+        z.iter().map(|&v| v.exp()).collect()
+    }
+
+    /// Backend name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust fallback backend.
+pub struct Native;
+
+impl Compute for Native {
+    fn gemv(&self, x: &Matrix, w: &[f64]) -> Vec<f64> {
+        linalg::gemv(x, w)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Pick the default backend: the XLA engine when requested and its
+/// artifacts exist, native otherwise.
+pub fn default_compute(use_xla: bool) -> Arc<dyn Compute> {
+    if use_xla {
+        match engine::XlaEngine::load_default() {
+            Ok(engine) => return Arc::new(engine),
+            Err(err) => {
+                eprintln!("[efmvfl] XLA artifacts unavailable ({err}); using native compute");
+            }
+        }
+    }
+    Arc::new(Native)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_gemv() {
+        let x = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(Native.gemv(&x, &[1.0, -1.0]), vec![-1.0, -1.0]);
+        assert_eq!(Native.name(), "native");
+    }
+
+    #[test]
+    fn native_exp() {
+        let e = Native.exp(&[0.0, 1.0]);
+        assert!((e[0] - 1.0).abs() < 1e-12);
+        assert!((e[1] - std::f64::consts::E).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_compute_falls_back() {
+        // with use_xla=false we always get native
+        assert_eq!(default_compute(false).name(), "native");
+    }
+}

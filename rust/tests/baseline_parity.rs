@@ -1,0 +1,116 @@
+//! Cross-framework parity: all four frameworks must train essentially
+//! the same model on the same data (they compute the same gradients —
+//! securely, by different means), while their communication profiles
+//! must show the paper's §5.3 ordering.
+
+use efmvfl::baselines::Framework;
+use efmvfl::coordinator::TrainConfig;
+use efmvfl::data::{split_vertical, synthetic};
+use efmvfl::glm::GlmKind;
+use efmvfl::linalg;
+use efmvfl::metrics;
+
+const FRAMEWORKS: [Framework; 4] = [
+    Framework::Efmvfl,
+    Framework::ThirdParty,
+    Framework::SecretShare,
+    Framework::SsHe,
+];
+
+#[test]
+fn all_frameworks_learn_the_same_lr_model() {
+    let mut data = synthetic::credit_default_like(400, 12, 5);
+    data.standardize();
+    let split = split_vertical(&data, 2);
+    let cfg = TrainConfig::logistic(2)
+        .with_key_bits(256)
+        .with_iterations(6)
+        .with_batch(None)
+        .with_seed(55);
+
+    let mut weight_sets = Vec::new();
+    for fw in FRAMEWORKS {
+        let rep = fw.train(&split, &cfg).unwrap();
+        assert_eq!(rep.iterations_run, 6, "{:?} stopped early", fw);
+        weight_sets.push((fw, rep.full_weights()));
+    }
+    let (_, reference) = &weight_sets[0];
+    for (fw, w) in &weight_sets[1..] {
+        for (a, b) in w.iter().zip(reference) {
+            assert!(
+                (a - b).abs() < 3e-2,
+                "{fw:?} diverged from EFMVFL: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn comm_ordering_matches_paper() {
+    // Paper Table 1 ordering among no-third-party frameworks:
+    //   SS-LR ≫ SS-HE-LR > EFMVFL-LR.
+    let mut data = synthetic::credit_default_like(512, 16, 6);
+    data.standardize();
+    let split = split_vertical(&data, 2);
+    let cfg = TrainConfig::logistic(2)
+        .with_key_bits(256)
+        .with_iterations(4)
+        .with_batch(Some(256))
+        .with_seed(56);
+
+    let efmvfl = Framework::Efmvfl.train(&split, &cfg).unwrap();
+    let ss = Framework::SecretShare.train(&split, &cfg).unwrap();
+    let ss_he = Framework::SsHe.train(&split, &cfg).unwrap();
+
+    assert!(
+        ss.comm_mb > ss_he.comm_mb,
+        "SS ({}) must exceed SS-HE ({})",
+        ss.comm_mb,
+        ss_he.comm_mb
+    );
+    assert!(
+        ss_he.comm_mb > efmvfl.comm_mb,
+        "SS-HE ({}) must exceed EFMVFL ({})",
+        ss_he.comm_mb,
+        efmvfl.comm_mb
+    );
+}
+
+#[test]
+fn tp_and_efmvfl_agree_on_poisson() {
+    let mut data = synthetic::dvisits_like(300, 10, 7);
+    data.standardize();
+    let split = split_vertical(&data, 2);
+    let mut cfg = TrainConfig::poisson(2)
+        .with_key_bits(256)
+        .with_iterations(5)
+        .with_batch(None)
+        .with_seed(57);
+    cfg.kind = GlmKind::Poisson;
+
+    let ours = Framework::Efmvfl.train(&split, &cfg).unwrap();
+    let tp = Framework::ThirdParty.train(&split, &cfg).unwrap();
+
+    for (a, b) in ours.full_weights().iter().zip(&tp.full_weights()) {
+        assert!((a - b).abs() < 3e-2, "{a} vs {b}");
+    }
+    // losses (both exact-form PR NLL) nearly identical — Figure 1 lower
+    for (la, lb) in ours.losses.iter().zip(&tp.losses) {
+        assert!((la - lb).abs() < 0.02, "{la} vs {lb}");
+    }
+    // both models predict usefully
+    let wx = linalg::gemv(&data.x, &ours.full_weights());
+    let pred: Vec<f64> = wx.iter().map(|&z| z.exp()).collect();
+    assert!(metrics::mae(&data.y, &pred) < 1.0);
+}
+
+#[test]
+fn framework_labels_and_parsing() {
+    assert_eq!(Framework::Efmvfl.label(GlmKind::Logistic), "EFMVFL-LR");
+    assert_eq!(Framework::ThirdParty.label(GlmKind::Poisson), "TP-PR");
+    assert_eq!(Framework::SecretShare.label(GlmKind::Logistic), "SS-LR");
+    assert_eq!(Framework::SsHe.label(GlmKind::Logistic), "SS-HE-LR");
+    assert_eq!(Framework::parse("caesar"), Some(Framework::SsHe));
+    assert_eq!(Framework::parse("efmvfl"), Some(Framework::Efmvfl));
+    assert_eq!(Framework::parse("nope"), None);
+}

@@ -1,0 +1,262 @@
+//! Cross-module property-based invariants (testkit-driven), widening the
+//! per-module unit coverage: algebraic laws of the bignum, Paillier
+//! homomorphisms under random inputs, ring/fixed-point semantics, metric
+//! invariances, and data-pipeline round trips.
+
+use efmvfl::bignum::modular::{modinv, modpow};
+use efmvfl::bignum::{prime, BigUint, Montgomery, PowTable};
+use efmvfl::crypto::paillier::Keypair;
+use efmvfl::crypto::prng::ChaChaRng;
+use efmvfl::crypto::{fixed, he_ops};
+use efmvfl::data::{split_vertical, synthetic};
+use efmvfl::glm::GlmKind;
+use efmvfl::linalg::Matrix;
+use efmvfl::metrics;
+use efmvfl::mpc::ring;
+use efmvfl::testkit;
+
+fn rand_big(g: &mut testkit::Gen, bits: usize) -> BigUint {
+    g.rng().next_biguint_exact_bits(bits.max(1))
+}
+
+// ---------- bignum algebra ----------
+
+#[test]
+fn prop_distributivity() {
+    testkit::check("a(b+c) == ab + ac", 100, |g| {
+        let (ba, bb, bc) = (g.usize_in(1..700), g.usize_in(1..700), g.usize_in(1..700));
+        let a = rand_big(g, ba);
+        let b = rand_big(g, bb);
+        let c = rand_big(g, bc);
+        a.mul(&b.add(&c)) == a.mul(&b).add(&a.mul(&c))
+    });
+}
+
+#[test]
+fn prop_mul_associative_commutative() {
+    testkit::check("mul assoc+comm", 60, |g| {
+        let (ba, bb, bc) = (g.usize_in(1..400), g.usize_in(1..400), g.usize_in(1..400));
+        let a = rand_big(g, ba);
+        let b = rand_big(g, bb);
+        let c = rand_big(g, bc);
+        a.mul(&b) == b.mul(&a) && a.mul(&b).mul(&c) == a.mul(&b.mul(&c))
+    });
+}
+
+#[test]
+fn prop_division_algorithm() {
+    testkit::check("n == q·d + r, r < d", 150, |g| {
+        let (bn, bd) = (g.usize_in(1..900), g.usize_in(1..900));
+        let n = rand_big(g, bn);
+        let d = rand_big(g, bd);
+        let (q, r) = n.divrem(&d);
+        r < d && q.mul(&d).add(&r) == n
+    });
+}
+
+#[test]
+fn prop_modpow_homomorphic_in_exponent() {
+    testkit::check("b^(e1+e2) == b^e1 · b^e2 mod m", 30, |g| {
+        let mut m = rand_big(g, 256);
+        if !m.is_odd() {
+            m = m.add(&BigUint::one());
+        }
+        let b = rand_big(g, 200);
+        let e1 = rand_big(g, 64);
+        let e2 = rand_big(g, 64);
+        let lhs = modpow(&b, &e1.add(&e2), &m);
+        let rhs = modpow(&b, &e1, &m).mul_mod(&modpow(&b, &e2, &m), &m);
+        lhs == rhs
+    });
+}
+
+#[test]
+fn prop_modinv_is_inverse() {
+    testkit::check("a · a⁻¹ ≡ 1 (mod m)", 60, |g| {
+        let bm = g.usize_in(65..512);
+        let mut m = rand_big(g, bm);
+        if !m.is_odd() {
+            m = m.add(&BigUint::one());
+        }
+        let bb = g.usize_in(1..256);
+        let a = rand_big(g, bb);
+        match modinv(&a, &m) {
+            Some(inv) => a.mul_mod(&inv, &m).is_one(),
+            None => !a.gcd(&m).is_one() || a.rem(&m).is_zero(),
+        }
+    });
+}
+
+#[test]
+fn prop_pow_table_agrees_with_modpow() {
+    testkit::check("PowTable == modpow", 25, |g| {
+        let mut m = rand_big(g, 320);
+        if !m.is_odd() {
+            m = m.add(&BigUint::one());
+        }
+        let mont = Montgomery::new(&m);
+        let base = rand_big(g, 300);
+        let t = PowTable::new(&mont, &base);
+        let be = g.usize_in(1..128);
+        let e = rand_big(g, be);
+        t.pow(&e) == modpow(&base, &e, &m)
+    });
+}
+
+#[test]
+fn prop_generated_primes_pass_fermat() {
+    testkit::check("gen_prime passes base-2/3 Fermat", 6, |g| {
+        let bits = 32 + g.usize_in(0..64);
+        let p = prime::gen_prime(bits, g.rng());
+        let e = p.sub(&BigUint::one());
+        modpow(&BigUint::from_u64(2), &e, &p).is_one()
+            && modpow(&BigUint::from_u64(3), &e, &p).is_one()
+    });
+}
+
+// ---------- Paillier homomorphisms ----------
+
+#[test]
+fn prop_paillier_additive_homomorphism() {
+    let mut rng = ChaChaRng::from_seed(501);
+    let kp = Keypair::generate(256, &mut rng);
+    testkit::check("Dec(Enc(a)·Enc(b)) == a+b", 40, |g| {
+        let a = g.i64_in(-(1 << 40)..(1 << 40)) as i128;
+        let b = g.i64_in(-(1 << 40)..(1 << 40)) as i128;
+        let ca = kp.pk.encrypt_i128(a, g.rng());
+        let cb = kp.pk.encrypt_i128(b, g.rng());
+        kp.sk.decrypt_i128(&kp.pk.add(&ca, &cb), &kp.pk) == a + b
+    });
+}
+
+#[test]
+fn prop_paillier_scalar_homomorphism() {
+    let mut rng = ChaChaRng::from_seed(502);
+    let kp = Keypair::generate(256, &mut rng);
+    testkit::check("Dec(Enc(a)^k) == a·k", 40, |g| {
+        let a = g.i64_in(-(1 << 30)..(1 << 30)) as i128;
+        let k = g.i64_in(-(1 << 20)..(1 << 20)) as i128;
+        let ca = kp.pk.encrypt_i128(a, g.rng());
+        kp.sk.decrypt_i128(&kp.pk.mul_plain_i128(&ca, k), &kp.pk) == a * k
+    });
+}
+
+#[test]
+fn prop_he_matvec_equals_exact_integer_product() {
+    let mut rng = ChaChaRng::from_seed(503);
+    let kp = Keypair::generate(256, &mut rng);
+    testkit::check("HE Xᵀd == integer Xᵀd", 10, |g| {
+        let m = g.usize_in(1..12);
+        let f = g.usize_in(1..6);
+        let x = Matrix::random(m, f, g.rng());
+        let d: Vec<i128> = (0..m)
+            .map(|_| fixed::encode(g.f64_in(-4.0, 4.0)))
+            .collect();
+        let cts: Vec<_> = d.iter().map(|&v| kp.pk.encrypt_i128(v, g.rng())).collect();
+        let enc = he_ops::he_matvec_t(&kp.pk, &cts, &x);
+        (0..f).all(|j| {
+            let want: i128 = (0..m).map(|i| fixed::encode(x.get(i, j)) * d[i]).sum();
+            kp.sk.decrypt_i128(&enc[j], &kp.pk) == want
+        })
+    });
+}
+
+#[test]
+fn prop_he_gemv_equals_exact_integer_product() {
+    let mut rng = ChaChaRng::from_seed(504);
+    let kp = Keypair::generate(256, &mut rng);
+    testkit::check("HE X·w == integer X·w", 10, |g| {
+        let m = g.usize_in(1..8);
+        let f = g.usize_in(1..6);
+        let x = Matrix::random(m, f, g.rng());
+        let w: Vec<i128> = (0..f)
+            .map(|_| fixed::encode(g.f64_in(-4.0, 4.0)))
+            .collect();
+        let cts: Vec<_> = w.iter().map(|&v| kp.pk.encrypt_i128(v, g.rng())).collect();
+        let enc = he_ops::he_gemv(&kp.pk, &cts, &x);
+        (0..m).all(|i| {
+            let want: i128 = (0..f).map(|j| fixed::encode(x.get(i, j)) * w[j]).sum();
+            kp.sk.decrypt_i128(&enc[i], &kp.pk) == want
+        })
+    });
+}
+
+// ---------- ring / fixed-point semantics ----------
+
+#[test]
+fn prop_ring_add_mul_match_integers_in_range() {
+    testkit::check("ring ops == wrapping integer ops", 200, |g| {
+        let a = g.f64_in(-1000.0, 1000.0);
+        let b = g.f64_in(-1000.0, 1000.0);
+        let sum = ring::decode(ring::add(ring::encode(a), ring::encode(b)));
+        let prod = ring::decode2(ring::mul(ring::encode(a), ring::encode(b)));
+        (sum - (a + b)).abs() < 1e-5 && (prod - a * b).abs() < 0.05
+    });
+}
+
+#[test]
+fn prop_truncation_preserves_sign_and_magnitude() {
+    testkit::check("truncate(x·2^f) ≈ x", 200, |g| {
+        let v = g.f64_in(-1e5, 1e5);
+        let dbl = ring::encode(v) as i64 as i128 * (1i128 << fixed::FRAC_BITS);
+        let t = ring::truncate_share(ring::from_signed(dbl as i64), true);
+        // single-party truncation: exact arithmetic shift
+        (ring::decode(t) - v).abs() < 1e-4 * (1.0 + v.abs())
+    });
+}
+
+// ---------- metrics invariances ----------
+
+#[test]
+fn prop_auc_flip_symmetry() {
+    testkit::check("auc(y, -s) == 1 - auc(y, s)", 80, |g| {
+        let n = g.usize_in(4..64);
+        let y: Vec<f64> = (0..n).map(|_| g.bool() as u8 as f64).collect();
+        if y.iter().all(|&v| v == y[0]) {
+            return true; // degenerate: auc defined as 0.5 both ways
+        }
+        let s: Vec<f64> = (0..n).map(|_| g.f64_in(-2.0, 2.0)).collect();
+        let neg: Vec<f64> = s.iter().map(|v| -v).collect();
+        (metrics::auc(&y, &s) + metrics::auc(&y, &neg) - 1.0).abs() < 1e-9
+    });
+}
+
+#[test]
+fn prop_rmse_dominates_mae() {
+    testkit::check("rmse >= mae", 100, |g| {
+        let n = g.usize_in(1..64);
+        let a: Vec<f64> = (0..n).map(|_| g.f64_in(-5.0, 5.0)).collect();
+        let b: Vec<f64> = (0..n).map(|_| g.f64_in(-5.0, 5.0)).collect();
+        metrics::rmse(&a, &b) >= metrics::mae(&a, &b) - 1e-12
+    });
+}
+
+// ---------- data pipeline ----------
+
+#[test]
+fn prop_vertical_split_concat_identity() {
+    testkit::check("split → concat == identity", 40, |g| {
+        let n = g.usize_in(4..40);
+        let f = g.usize_in(4..16);
+        let parties = g.usize_in(2..f.min(5));
+        let data = synthetic::credit_default_like(n, f, g.u64());
+        let split = split_vertical(&data, parties);
+        split.concat_features().data == data.x.data
+    });
+}
+
+#[test]
+fn prop_gradient_operator_linear_in_wx_for_lr() {
+    testkit::check("LR d is affine in wx", 100, |g| {
+        let m = g.usize_in(1..32);
+        let wx: Vec<f64> = (0..m).map(|_| g.f64_in(-3.0, 3.0)).collect();
+        let y: Vec<f64> = (0..m).map(|_| g.bool() as u8 as f64).collect();
+        let d1 = GlmKind::Logistic.gradient_operator(&wx, &y);
+        let shifted: Vec<f64> = wx.iter().map(|v| v + 1.0).collect();
+        let d2 = GlmKind::Logistic.gradient_operator(&shifted, &y);
+        // slope 0.25/m per unit of wx
+        d1.iter()
+            .zip(&d2)
+            .all(|(a, b)| ((b - a) - 0.25 / m as f64).abs() < 1e-12)
+    });
+}

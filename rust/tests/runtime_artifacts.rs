@@ -1,0 +1,87 @@
+//! Runtime bridge tests: the AOT artifacts loaded through PJRT must
+//! agree with native compute, and the trainer must work end-to-end with
+//! `use_xla = true`.
+//!
+//! Skipped (with a notice) when `artifacts/` hasn't been built — run
+//! `make artifacts` first; `make test` does this automatically.
+
+use efmvfl::coordinator::{train, TrainConfig};
+use efmvfl::crypto::prng::ChaChaRng;
+use efmvfl::data::{split_vertical, synthetic};
+use efmvfl::linalg::{self, Matrix};
+use efmvfl::runtime::engine::XlaEngine;
+use efmvfl::runtime::Compute;
+
+fn engine() -> Option<XlaEngine> {
+    match XlaEngine::load_default() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping runtime tests (run `make artifacts`): {err}");
+            None
+        }
+    }
+}
+
+#[test]
+fn xla_gemv_matches_native() {
+    let Some(eng) = engine() else { return };
+    let mut rng = ChaChaRng::from_seed(80);
+    for (m, f) in [(100, 8), (1024, 32), (1500, 24), (1, 1)] {
+        let x = Matrix::random(m, f, &mut rng);
+        let w: Vec<f64> = (0..f).map(|_| rng.next_gaussian()).collect();
+        let got = eng.gemv(&x, &w);
+        let want = linalg::gemv(&x, &w);
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{m}x{f}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn xla_exp_matches_native() {
+    let Some(eng) = engine() else { return };
+    let z: Vec<f64> = (0..2500).map(|i| (i as f64 / 500.0) - 2.5).collect();
+    let got = eng.exp(&z);
+    for (a, b) in got.iter().zip(z.iter().map(|&v| v.exp())) {
+        assert!((a - b).abs() < 1e-3 * (1.0 + b), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn xla_gemv_t_matches_native() {
+    let Some(eng) = engine() else { return };
+    let mut rng = ChaChaRng::from_seed(81);
+    let x = Matrix::random(700, 16, &mut rng);
+    let d: Vec<f64> = (0..700).map(|_| rng.next_gaussian()).collect();
+    let got = eng.gemv_t_tiled(&x, &d).unwrap();
+    let want = linalg::gemv_t(&x, &d);
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 2e-2 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn training_through_pjrt_matches_native() {
+    let Some(_) = engine() else { return };
+    let mut data = synthetic::blobs(300, 9);
+    data.standardize();
+    let split = split_vertical(&data, 2);
+    let cfg = TrainConfig::logistic(2)
+        .with_key_bits(256)
+        .with_iterations(5)
+        .with_batch(None)
+        .with_seed(82);
+
+    let native = train(&split, &cfg).unwrap();
+    let mut cfg_xla = cfg.clone();
+    cfg_xla.use_xla = true;
+    let xla = train(&split, &cfg_xla).unwrap();
+
+    for (a, b) in xla.full_weights().iter().zip(&native.full_weights()) {
+        assert!((a - b).abs() < 1e-2, "weights: {a} vs {b}");
+    }
+    for (la, lb) in xla.losses.iter().zip(&native.losses) {
+        assert!((la - lb).abs() < 1e-2, "loss: {la} vs {lb}");
+    }
+}
