@@ -17,7 +17,7 @@
 
 use crate::coordinator::party::batch_rows;
 use crate::coordinator::{TrainConfig, TrainReport};
-use crate::crypto::he_ops::{self, MASK_BITS};
+use crate::crypto::he_ops;
 use crate::crypto::paillier::{Ciphertext, Keypair, PublicKey};
 use crate::crypto::prng::ChaChaRng;
 use crate::data::VerticalSplit;
@@ -78,7 +78,7 @@ fn cross_request(
     let mut masked = Vec::with_capacity(enc_v.len());
     let mut my_shares = Vec::with_capacity(enc_v.len());
     for ct in &enc_v {
-        let r = rng.next_biguint_exact_bits(MASK_BITS);
+        let r = rng.next_biguint_exact_bits(he_ops::mask_bits(pk_peer));
         let enc_r = pk_peer.encrypt_raw(&r.rem(&pk_peer.n), rng);
         masked.push(pk_peer.add(ct, &enc_r));
         my_shares.push(r.low_u64().wrapping_neg());
@@ -129,6 +129,11 @@ pub fn train_ss_he(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainRepor
         .iter()
         .map(|kp| Arc::new(PublicKey::from_n(kp.pk.n.clone())))
         .collect();
+    // the cross-term share conversion decodes v + R through low_u64, so
+    // both keys must clear the HE minimum before any thread starts
+    for pk in &pks {
+        he_ops::assert_key_wide_enough(pk);
+    }
 
     let (mut endpoints, stats) = full_mesh(2);
     let pk_bytes = (cfg.key_bits + 7) / 8;

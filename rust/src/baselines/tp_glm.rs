@@ -50,6 +50,9 @@ pub fn train_tp(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> 
     let mut keyrng = ChaChaRng::from_seed(cfg.seed.wrapping_add(77));
     let kp = Arc::new(Keypair::generate(cfg.key_bits, &mut keyrng));
     let pk = Arc::new(PublicKey::from_n(kp.pk.n.clone()));
+    // gradient/loss values decrypt at double/triple fixed-point scale:
+    // reject keys too narrow to hold them before any thread starts
+    he_ops::assert_key_wide_enough(&pk);
     if cfg.obfuscator_pool > 0 {
         pk.precompute_pool(cfg.obfuscator_pool, &mut keyrng);
     }

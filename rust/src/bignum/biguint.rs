@@ -100,15 +100,12 @@ impl BigUint {
 
     /// Parse from a hexadecimal string (no `0x` prefix, case-insensitive).
     pub fn from_hex(s: &str) -> Option<Self> {
-        let mut limbs: Vec<u64> = Vec::new();
         let digits: Vec<u32> = s.chars().map(|c| c.to_digit(16)).collect::<Option<_>>()?;
         let mut acc = BigUint::zero();
         for d in digits {
             acc = acc.shl_bits(4);
             acc = acc.add(&BigUint::from_u64(d as u64));
         }
-        limbs.clear();
-        let _ = limbs;
         Some(acc)
     }
 
@@ -225,9 +222,6 @@ impl BigUint {
     /// Left shift by `bits`.
     pub fn shl_bits(&self, bits: usize) -> BigUint {
         if self.is_zero() || bits == 0 {
-            if bits == 0 {
-                return self.clone();
-            }
             return self.clone();
         }
         let (words, rem) = (bits / 64, bits % 64);

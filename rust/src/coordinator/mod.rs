@@ -128,7 +128,12 @@ pub struct TrainReport {
     /// time-share the local CPUs).
     pub wall_secs: f64,
     /// Per-party CPU seconds — what each party's *own server* computes in
-    /// the paper's multi-machine testbed.
+    /// the paper's multi-machine testbed. Measured per party *thread*:
+    /// time spent in the HE hot path's scoped worker threads
+    /// (`EFMVFL_THREADS` > 1) is not attributed here, so with threading
+    /// enabled this underestimates total CPU while wall/runtime stay
+    /// accurate. Set `EFMVFL_THREADS=1` for exact per-party CPU
+    /// attribution.
     pub party_cpu_secs: Vec<f64>,
     /// Simulated wire time from the byte/message counts.
     pub net_secs: f64,
@@ -176,6 +181,11 @@ pub fn train(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> {
         let pk = crate::crypto::paillier::PublicKey::from_n(kp.pk.n.clone());
         Arc::new(pk)
     }).collect();
+    // fail fast on keys too narrow for Protocol 3's double-scale values
+    // (the per-protocol assert would only fire inside a party thread)
+    for pk in &pks {
+        crate::crypto::he_ops::assert_key_wide_enough(pk);
+    }
 
     let (endpoints, stats) = full_mesh(n);
     // account the public-key broadcast

@@ -3,16 +3,21 @@
 //! The single hot operation is `[[g]] = Xᵀ · [[d]]`: for every feature
 //! `j`, `[[g_j]] = Σᵢ X[i,j] ⊗ [[dᵢ]] = Πᵢ [[dᵢ]]^enc(X[i,j]) mod n²`.
 //!
-//! Optimizations (measured in EXPERIMENTS.md §Perf):
+//! Optimizations (measured in EXPERIMENTS.md §Perf and `benches/micro.rs`):
 //!
 //! - one 4-bit [`crate::bignum::PowTable`] per ciphertext, shared by the
 //!   whole feature row (f exponentiations amortize one table build);
 //! - negative exponents via **one** ciphertext inversion per sample
 //!   (`[[d]]^(−k) = ([[d]]⁻¹)^k`), instead of per-entry 2048-bit
 //!   exponents (`n − k` is astronomically large as an exponent);
-//! - statistically-hiding additive masks: a uniform `MASK_BITS`-bit `R`
-//!   added homomorphically before the ciphertext leaves the party, so the
-//!   decrypting peer sees `v + R` only.
+//! - statistically-hiding additive masks: a uniform `mask_bits(pk)`-bit
+//!   `R` added homomorphically before the ciphertext leaves the party, so
+//!   the decrypting peer sees `v + R` only;
+//! - **multi-threaded evaluation**: outputs are independent mod-n²
+//!   accumulations, so they are sharded per-output-column across
+//!   `std::thread::scope` workers that share the window tables
+//!   read-only. Thread count comes from the `EFMVFL_THREADS` env knob
+//!   (default: available parallelism, capped at 8).
 
 use crate::bignum::BigUint;
 use crate::crypto::fixed;
@@ -20,9 +25,70 @@ use crate::crypto::paillier::{Ciphertext, PublicKey};
 use crate::crypto::prng::ChaChaRng;
 use crate::linalg::Matrix;
 
-/// Mask width: covers the value magnitude (< 2⁹⁹ for our shapes, see
-/// DESIGN.md §7) plus ≥ 80 bits of statistical hiding.
-pub const MASK_BITS: usize = 180;
+/// Upper bound (bits) on any value Protocol 3 decrypts: a double-scale
+/// fixed-point matvec entry `Σᵢ enc(xᵢ)·enc(dᵢ)` for our shapes stays
+/// below 2⁹⁹ (DESIGN.md §7), rounded up to a power-friendly 100.
+pub const P3_VALUE_BITS: usize = 100;
+
+/// Statistical-hiding slack added on top of the value bound.
+pub const MASK_STAT_BITS: usize = 80;
+
+/// Nominal mask width at production key sizes (value bits + statistical
+/// slack). The *effective* width is [`mask_bits`], which additionally
+/// caps the mask below the key modulus so masked values cannot wrap.
+pub const MASK_BITS: usize = P3_VALUE_BITS + MASK_STAT_BITS;
+
+/// Smallest Paillier modulus the HE protocols accept: the plaintext
+/// space must hold a centered [`P3_VALUE_BITS`]-bit value with headroom,
+/// or decrypted gradients silently decode to garbage.
+pub const MIN_KEY_BITS: usize = P3_VALUE_BITS + 4;
+
+/// Effective additive-mask width for `pk`: the nominal [`MASK_BITS`]
+/// (value magnitude + ≥80-bit statistical slack), capped two bits below
+/// `n` so `v + R` never wraps mod `n`. Keys below ~180 bits trade mask
+/// slack for correctness; [`assert_key_wide_enough`] enforces the hard
+/// floor.
+pub fn mask_bits(pk: &PublicKey) -> usize {
+    MASK_BITS.min(pk.n.bit_len().saturating_sub(2))
+}
+
+/// Protocol-entry guard: panic with a clear message when a key is too
+/// narrow for the HE gradient path (testutil allows arbitrary key sizes;
+/// this turns silent wraparound garbage into an immediate error).
+pub fn assert_key_wide_enough(pk: &PublicKey) {
+    assert!(
+        pk.n.bit_len() >= MIN_KEY_BITS,
+        "Paillier modulus too narrow for Protocol 3: {} bits < {MIN_KEY_BITS} \
+         (double-scale gradient values need {P3_VALUE_BITS} bits + headroom)",
+        pk.n.bit_len()
+    );
+}
+
+/// Worker-thread count for the HE hot path: `EFMVFL_THREADS` when set
+/// (`0` and `1` both force the serial path; unparsable values are
+/// ignored), otherwise the machine's available parallelism capped at 8
+/// (party threads already run concurrently, so uncapped nesting
+/// oversubscribes small boxes).
+pub fn he_threads() -> usize {
+    let default = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8);
+    parse_threads(std::env::var("EFMVFL_THREADS").ok().as_deref(), default)
+}
+
+/// Pure parsing core of [`he_threads`]: an absent or unparsable knob
+/// keeps the default; an explicit value is honored, with `0` clamped to
+/// the serial path.
+fn parse_threads(knob: Option<&str>, default: usize) -> usize {
+    match knob {
+        None => default,
+        Some(s) => match s.trim().parse::<usize>() {
+            Ok(n) => n.max(1),
+            Err(_) => default,
+        },
+    }
+}
 
 /// Encrypt a vector of ring shares (interpreted as signed i64, single
 /// fixed-point scale) under `pk`.
@@ -37,13 +103,27 @@ pub fn encrypt_share_vec(pk: &PublicKey, share: &[u64], rng: &mut ChaChaRng) -> 
 /// encrypts the *exact integer* `Σᵢ enc(X[i,j]) · dᵢ` (double fixed-point
 /// scale; no modular wraparound because `n ≫` value magnitudes).
 ///
+/// Parallelized across [`he_threads`] workers; use
+/// [`he_matvec_t_threads`] to pin the worker count explicitly.
+///
 /// The result ciphertexts are NOT re-randomized — callers must mask
 /// ([`mask_ct`]) before sending them anywhere.
 pub fn he_matvec_t(pk: &PublicKey, cts: &[Ciphertext], x: &Matrix) -> Vec<Ciphertext> {
+    he_matvec_t_threads(pk, cts, x, he_threads())
+}
+
+/// [`he_matvec_t`] with an explicit worker count (1 = serial reference
+/// path; `benches/micro.rs` reports the serial-vs-threaded ratio).
+pub fn he_matvec_t_threads(
+    pk: &PublicKey,
+    cts: &[Ciphertext],
+    x: &Matrix,
+    threads: usize,
+) -> Vec<Ciphertext> {
     assert_eq!(cts.len(), x.rows, "ciphertext count != sample count");
     // encode once; outputs indexed by column
     let exps: Vec<i64> = x.data.iter().map(|&v| fixed::encode(v) as i64).collect();
-    multi_exp(pk, cts, &exps, x.rows, x.cols, /*outputs_are_cols=*/ true)
+    multi_exp(pk, cts, &exps, x.rows, x.cols, /*outputs_are_cols=*/ true, threads)
 }
 
 /// Shared-squaring simultaneous exponentiation (Straus/Shamir-style):
@@ -56,6 +136,12 @@ pub fn he_matvec_t(pk: &PublicKey, cts: &[Ciphertext], x: &Matrix) -> Vec<Cipher
 /// 20 squarings are shared by every base contributing to that output.
 /// Base tables are built once and reused across all outputs.
 ///
+/// Threading: outputs are fully independent, so with `threads > 1` both
+/// the table builds (per-base) and the output accumulations
+/// (per-column) are sharded across `std::thread::scope` workers. The
+/// table set is shared read-only; results are stitched back in order,
+/// so the threaded path is bit-identical to the serial one.
+///
 /// `exps` is row-major `rows×cols`; `outputs_are_cols` selects `Xᵀ·v`
 /// (bases = rows, outputs = cols) vs `X·v` (bases = cols, outputs = rows).
 fn multi_exp(
@@ -65,10 +151,39 @@ fn multi_exp(
     rows: usize,
     cols: usize,
     outputs_are_cols: bool,
+    threads: usize,
 ) -> Vec<Ciphertext> {
     let mont = pk.mont();
     let (n_bases, n_out) = if outputs_are_cols { (rows, cols) } else { (cols, rows) };
     assert_eq!(cts.len(), n_bases);
+    let threads = threads.max(1);
+
+    // 16-entry Montgomery window tables, one per base — built once (in
+    // parallel when worth it) and shared read-only by every worker.
+    let tables: Vec<Vec<Vec<u64>>> = if threads == 1 || n_bases < threads * 2 {
+        cts.iter().map(|ct| pk.pow_table(ct).into_raw_table()).collect()
+    } else {
+        let chunk = (n_bases + threads - 1) / threads;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = cts
+                .chunks(chunk)
+                .map(|block| {
+                    scope.spawn(move || {
+                        block
+                            .iter()
+                            .map(|ct| pk.pow_table(ct).into_raw_table())
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            let mut all = Vec::with_capacity(n_bases);
+            for h in handles {
+                all.extend(h.join().expect("table worker panicked"));
+            }
+            all
+        })
+    };
+
     // exponent of base b for output o
     let exp_at = |b: usize, o: usize| -> i64 {
         if outputs_are_cols {
@@ -77,12 +192,6 @@ fn multi_exp(
             exps[o * cols + b]
         }
     };
-
-    // 16-entry Montgomery window tables, one per base
-    let tables: Vec<Vec<Vec<u64>>> = cts
-        .iter()
-        .map(|ct| pk.pow_table(ct).into_raw_table())
-        .collect();
 
     // widest exponent drives the window count
     let max_bits = exps
@@ -93,8 +202,9 @@ fn multi_exp(
     let nwin = (max_bits + 3) / 4;
 
     let one = mont.one_mont();
-    let mut out = Vec::with_capacity(n_out);
-    for o in 0..n_out {
+
+    // One output's accumulation: all captures are read-only shared state.
+    let compute_output = |o: usize| -> Ciphertext {
         let mut acc_pos = one.clone();
         let mut acc_neg = one.clone();
         let mut pos_used = false;
@@ -131,32 +241,63 @@ fn multi_exp(
         // pos · neg⁻¹, one inversion per output
         let pos = mont.leave_mont(&acc_pos);
         if !neg_used {
-            out.push(Ciphertext(pos));
-            continue;
+            return Ciphertext(pos);
         }
         let neg = mont.leave_mont(&acc_neg);
         let inv = crate::bignum::modular::modinv(&neg, &pk.n2)
             .expect("ciphertext accumulator not a unit");
-        out.push(Ciphertext(pos.mul_mod(&inv, &pk.n2)));
+        Ciphertext(pos.mul_mod(&inv, &pk.n2))
+    };
+
+    if threads == 1 || n_out < 2 {
+        return (0..n_out).map(compute_output).collect();
     }
-    out
+
+    // Per-output-column sharding: contiguous chunks, stitched in order.
+    let compute_output = &compute_output;
+    let chunk = (n_out + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                let start = (w * chunk).min(n_out);
+                let end = ((w + 1) * chunk).min(n_out);
+                scope.spawn(move || (start..end).map(compute_output).collect::<Vec<_>>())
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n_out);
+        for h in handles {
+            out.extend(h.join().expect("matvec worker panicked"));
+        }
+        out
+    })
 }
 
 /// Homomorphic `X · [[v]]` (row side): returns `m` ciphertexts, entry `i`
 /// encrypting `Σⱼ enc(X[i,j]) · vⱼ`. One power table per *column*
 /// ciphertext, reused across all rows — the CAESAR baseline's
-/// `X·[[⟨w⟩]]` cross term.
+/// `X·[[⟨w⟩]]` cross term. Parallelized like [`he_matvec_t`].
 pub fn he_gemv(pk: &PublicKey, cts: &[Ciphertext], x: &Matrix) -> Vec<Ciphertext> {
-    assert_eq!(cts.len(), x.cols, "ciphertext count != feature count");
-    let exps: Vec<i64> = x.data.iter().map(|&v| fixed::encode(v) as i64).collect();
-    multi_exp(pk, cts, &exps, x.rows, x.cols, /*outputs_are_cols=*/ false)
+    he_gemv_threads(pk, cts, x, he_threads())
 }
 
-/// Additively mask a ciphertext with a fresh uniform `MASK_BITS`-bit `R`
-/// (also re-randomizes it, since `Enc(R)` is fresh). Returns the masked
-/// ciphertext and `R`.
+/// [`he_gemv`] with an explicit worker count.
+pub fn he_gemv_threads(
+    pk: &PublicKey,
+    cts: &[Ciphertext],
+    x: &Matrix,
+    threads: usize,
+) -> Vec<Ciphertext> {
+    assert_eq!(cts.len(), x.cols, "ciphertext count != feature count");
+    let exps: Vec<i64> = x.data.iter().map(|&v| fixed::encode(v) as i64).collect();
+    multi_exp(pk, cts, &exps, x.rows, x.cols, /*outputs_are_cols=*/ false, threads)
+}
+
+/// Additively mask a ciphertext with a fresh uniform [`mask_bits`]-wide
+/// `R` (also re-randomizes it, since `Enc(R)` is fresh). Returns the
+/// masked ciphertext and `R`.
 pub fn mask_ct(pk: &PublicKey, ct: &Ciphertext, rng: &mut ChaChaRng) -> (Ciphertext, BigUint) {
-    let r = rng.next_biguint_exact_bits(MASK_BITS);
+    assert_key_wide_enough(pk);
+    let r = rng.next_biguint_exact_bits(mask_bits(pk));
     let enc_r = pk.encrypt_raw(&r.rem(&pk.n), rng);
     (pk.add(ct, &enc_r), r)
 }
@@ -209,6 +350,40 @@ mod tests {
     }
 
     #[test]
+    fn threaded_matvec_is_bit_identical_to_serial() {
+        let mut rng = ChaChaRng::from_seed(104);
+        let kp = Keypair::generate(256, &mut rng);
+        let x = Matrix::random(9, 5, &mut rng);
+        let cts: Vec<Ciphertext> = (0..9)
+            .map(|i| kp.pk.encrypt_i128((i as i128 - 4) << 10, &mut rng))
+            .collect();
+        let serial = he_matvec_t_threads(&kp.pk, &cts, &x, 1);
+        for threads in [2usize, 3, 4, 16] {
+            let par = he_matvec_t_threads(&kp.pk, &cts, &x, threads);
+            assert_eq!(serial.len(), par.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.0, b.0, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_gemv_is_bit_identical_to_serial() {
+        let mut rng = ChaChaRng::from_seed(106);
+        let kp = Keypair::generate(256, &mut rng);
+        let x = Matrix::random(7, 4, &mut rng);
+        let cts: Vec<Ciphertext> = (0..4)
+            .map(|i| kp.pk.encrypt_i128((i as i128 + 1) << 8, &mut rng))
+            .collect();
+        let serial = he_gemv_threads(&kp.pk, &cts, &x, 1);
+        let par = he_gemv_threads(&kp.pk, &cts, &x, 4);
+        assert_eq!(serial.len(), par.len());
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.0, b.0);
+        }
+    }
+
+    #[test]
     fn mask_unmask_roundtrip() {
         let mut rng = ChaChaRng::from_seed(101);
         let kp = Keypair::generate(256, &mut rng);
@@ -234,6 +409,48 @@ mod tests {
         let seen = kp.sk.decrypt_raw(&masked);
         // the seen value is dominated by R, not by the payload
         assert!(seen.bit_len() >= MASK_BITS - 8);
+    }
+
+    #[test]
+    fn mask_width_derives_from_key() {
+        let mut rng = ChaChaRng::from_seed(107);
+        // production-sized test key: full nominal width
+        let kp = Keypair::generate(256, &mut rng);
+        assert_eq!(mask_bits(&kp.pk), MASK_BITS);
+        // narrow key: capped below n so v + R cannot wrap mod n, and the
+        // mask round-trip stays exact even without full statistical slack
+        let kp = Keypair::generate(128, &mut rng);
+        let mb = mask_bits(&kp.pk);
+        assert!(mb < kp.pk.n.bit_len(), "mask must stay below n");
+        assert_eq!(mb, kp.pk.n.bit_len() - 2);
+        let ct = kp.pk.encrypt_i128(12345, &mut rng);
+        let (masked, r) = mask_ct(&kp.pk, &ct, &mut rng);
+        let seen = kp.sk.decrypt_raw(&masked);
+        assert_eq!(unmask_decode(&kp.pk, &seen, &r), 12345);
+    }
+
+    #[test]
+    #[should_panic(expected = "Paillier modulus too narrow")]
+    fn narrow_key_rejected_at_protocol_entry() {
+        let mut rng = ChaChaRng::from_seed(108);
+        let kp = Keypair::generate(64, &mut rng);
+        assert_key_wide_enough(&kp.pk);
+    }
+
+    #[test]
+    fn thread_knob_parses_env_shapes() {
+        // explicit values are honored, 0 clamps to serial
+        assert_eq!(parse_threads(Some("4"), 8), 4);
+        assert_eq!(parse_threads(Some(" 2 "), 8), 2);
+        assert_eq!(parse_threads(Some("1"), 8), 1);
+        assert_eq!(parse_threads(Some("0"), 8), 1);
+        // absent or unparsable keeps the default parallelism
+        assert_eq!(parse_threads(None, 6), 6);
+        assert_eq!(parse_threads(Some(""), 6), 6);
+        assert_eq!(parse_threads(Some("auto"), 6), 6);
+        assert_eq!(parse_threads(Some("-3"), 6), 6);
+        // and whatever the process env says, the public knob is >= 1
+        assert!(he_threads() >= 1);
     }
 
     #[test]

@@ -14,9 +14,15 @@
 //! - **L1 (`python/compile/kernels/`)**: Pallas kernels for the fused
 //!   gradient-operator / matvec hot spot, validated against a jnp oracle.
 //!
-//! At runtime Python is never on the path: [`runtime`] loads the AOT
-//! artifacts through PJRT (`xla` crate) and the coordinator calls them like
-//! local functions, falling back to [`linalg`] when artifacts are absent.
+//! At runtime Python is never on the path: [`runtime`] exposes a backend
+//! registry whose default is the dependency-free pure-Rust [`linalg`]
+//! backend; the PJRT engine (`xla` crate) is compiled only behind the
+//! `xla` cargo feature and used only when `artifacts/` exists, falling
+//! back gracefully otherwise. The Protocol 3 HE hot path
+//! ([`crypto::he_ops`]) shards its per-output-column work across scoped
+//! threads (`EFMVFL_THREADS` knob); parties themselves run as threads
+//! over the mpsc full-mesh transport ([`net`]). See `rust/README.md`
+//! for the workspace layout and build matrix.
 
 pub mod baselines;
 pub mod benchkit;

@@ -272,9 +272,18 @@ fn cmd_keygen(args: &Args) -> Result<()> {
 fn cmd_info() -> Result<()> {
     println!("efmvfl {} — EFMVFL reproduction", env!("CARGO_PKG_VERSION"));
     println!("fixed-point scale: 2^{}", efmvfl::crypto::fixed::FRAC_BITS);
-    match efmvfl::runtime::engine::XlaEngine::load_default() {
-        Ok(_) => println!("artifacts: loaded (PJRT backend available)"),
-        Err(e) => println!("artifacts: unavailable ({e}); native backend only"),
+    println!(
+        "compute backends: {} (xla feature {})",
+        efmvfl::runtime::available_backends().join(", "),
+        if cfg!(feature = "xla") { "on" } else { "off" }
+    );
+    match efmvfl::runtime::backend_by_name("xla") {
+        Some(_) => println!("artifacts: loaded (PJRT backend available)"),
+        None => println!("artifacts: unavailable; native backend only"),
     }
+    println!(
+        "HE worker threads: {} (override with EFMVFL_THREADS)",
+        efmvfl::crypto::he_ops::he_threads()
+    );
     Ok(())
 }

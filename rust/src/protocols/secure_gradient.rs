@@ -94,6 +94,13 @@ pub fn protocol3_gradients(
     let (cp_a, cp_b) = ctx.cp;
     let cps = [cp_a, cp_b];
 
+    // Protocol entry guard: every ciphertext this round decrypts to a
+    // double-scale gradient value, so both CP keys must be wide enough
+    // for the centered decoding (narrow test keys would otherwise wrap
+    // mod n and silently decode garbage).
+    he_ops::assert_key_wide_enough(&ctx.pks[cp_a]);
+    he_ops::assert_key_wide_enough(&ctx.pks[cp_b]);
+
     // 1. CPs encrypt their md share and fan it out.
     if ctx.is_cp() {
         let share = md_share.expect("CP must hold an md share").clone();

@@ -1,13 +1,59 @@
-//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//! Pluggable compute backends for the party-local dense math.
 //!
-//! The [`Compute`] trait abstracts the party-local dense math; the
+//! The [`Compute`] trait abstracts the per-party dense operations; the
 //! coordinator calls it every iteration for `W_p X_p` (and `exp` for PR).
-//! [`Native`] is the pure-rust fallback so `cargo test` needs no
-//! artifacts; [`XlaEngine`] (see [`engine`]) loads `artifacts/*.hlo.txt`
-//! via the PJRT CPU client and serves the same calls — Python never runs
-//! at training time.
+//! Backends register by name:
+//!
+//! - `"native"` (alias `"linalg"`): the dependency-free pure-Rust
+//!   [`Native`] backend — always available, the default.
+//! - `"xla"`: the PJRT engine ([`engine::XlaEngine`]), compiled only
+//!   behind the `xla` cargo feature and usable only when the AOT
+//!   `artifacts/` directory exists. Without the feature the module is a
+//!   stub whose loader fails fast, so [`default_compute`] and
+//!   [`backend_by_name`] fall back to [`Native`] gracefully — Python is
+//!   never on the training path either way.
 
+#[cfg(feature = "xla")]
 pub mod engine;
+
+/// Stub engine module for the default (offline, no-`xla`) build: keeps
+/// the `runtime::engine::XlaEngine` path compiling while every loader
+/// reports the missing feature, which drives the graceful fallback.
+#[cfg(not(feature = "xla"))]
+pub mod engine {
+    use super::Compute;
+    use crate::linalg::Matrix;
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    /// Placeholder for the PJRT engine; cannot be constructed without
+    /// the `xla` feature.
+    pub struct XlaEngine {
+        _private: (),
+    }
+
+    impl XlaEngine {
+        /// Always fails: the crate was built without `--features xla`.
+        pub fn load_default() -> Result<XlaEngine> {
+            bail!("efmvfl was built without the `xla` feature; PJRT backend unavailable")
+        }
+
+        /// Always fails: the crate was built without `--features xla`.
+        pub fn load(_dir: &Path) -> Result<XlaEngine> {
+            Self::load_default()
+        }
+    }
+
+    impl Compute for XlaEngine {
+        fn gemv(&self, _x: &Matrix, _w: &[f64]) -> Vec<f64> {
+            unreachable!("stub XlaEngine cannot be constructed")
+        }
+
+        fn name(&self) -> &'static str {
+            "xla-stub"
+        }
+    }
+}
 
 use crate::linalg::{self, Matrix};
 use std::sync::Arc;
@@ -36,6 +82,33 @@ impl Compute for Native {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+}
+
+/// Names every backend the registry can *try* to construct in this
+/// build. `"xla"` is listed only when compiled in; whether it actually
+/// loads still depends on the artifacts directory at runtime.
+pub fn available_backends() -> Vec<&'static str> {
+    let mut names = vec!["native", "linalg"];
+    if cfg!(feature = "xla") {
+        names.push("xla");
+    }
+    names
+}
+
+/// Look a backend up by name. `"native"`/`"linalg"` always succeed;
+/// `"xla"` succeeds only when the feature is compiled in *and* the AOT
+/// artifacts load; unknown names and unavailable backends return
+/// `None` silently — callers decide whether that is worth reporting
+/// ([`default_compute`] prints a fallback notice, `efmvfl info` its own
+/// status line).
+pub fn backend_by_name(name: &str) -> Option<Arc<dyn Compute>> {
+    match name {
+        "native" | "linalg" => Some(Arc::new(Native) as Arc<dyn Compute>),
+        "xla" => engine::XlaEngine::load_default()
+            .ok()
+            .map(|eng| Arc::new(eng) as Arc<dyn Compute>),
+        _ => None,
     }
 }
 
@@ -75,5 +148,26 @@ mod tests {
     fn default_compute_falls_back() {
         // with use_xla=false we always get native
         assert_eq!(default_compute(false).name(), "native");
+    }
+
+    #[test]
+    fn registry_knows_native_aliases() {
+        assert_eq!(backend_by_name("native").unwrap().name(), "native");
+        assert_eq!(backend_by_name("linalg").unwrap().name(), "native");
+        assert!(backend_by_name("not-a-backend").is_none());
+        let names = available_backends();
+        assert!(names.contains(&"native"));
+        assert_eq!(names.contains(&"xla"), cfg!(feature = "xla"));
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_engine_reports_missing_feature() {
+        let err = match engine::XlaEngine::load_default() {
+            Ok(_) => panic!("stub engine must never load"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("xla"), "{err}");
+        assert!(backend_by_name("xla").is_none());
     }
 }

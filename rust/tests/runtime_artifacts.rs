@@ -2,8 +2,11 @@
 //! agree with native compute, and the trainer must work end-to-end with
 //! `use_xla = true`.
 //!
-//! Skipped (with a notice) when `artifacts/` hasn't been built — run
-//! `make artifacts` first; `make test` does this automatically.
+//! Compiled only with `--features xla` (the default offline build ships
+//! a stub engine); additionally skipped (with a notice) when
+//! `artifacts/` hasn't been built — run `make artifacts` first.
+
+#![cfg(feature = "xla")]
 
 use efmvfl::coordinator::{train, TrainConfig};
 use efmvfl::crypto::prng::ChaChaRng;

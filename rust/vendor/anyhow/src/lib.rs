@@ -1,0 +1,231 @@
+//! Vendored, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build environment is offline, so the workspace carries the subset
+//! of anyhow's API that EFMVFL actually uses as a local path crate named
+//! `anyhow` — call sites (`use anyhow::{anyhow, bail, Context, Result}`)
+//! are identical to the real crate, and swapping the registry crate back
+//! in is a one-line Cargo.toml change.
+//!
+//! Provided surface:
+//!
+//! - [`Error`]: an opaque error carrying a message and an optional source
+//!   chain; converts from any `std::error::Error + Send + Sync + 'static`
+//!   via `?`.
+//! - [`Result<T>`]: alias with `Error` as the default error type.
+//! - [`Context`]: `.context(msg)` / `.with_context(|| msg)` on `Result`
+//!   and `Option`.
+//! - [`anyhow!`], [`bail!`], [`ensure!`] macros.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque, heap-cheap error value with an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap a concrete error, keeping it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Prefix the error with higher-level context (consuming form, used
+    /// by the [`Context`] trait).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The captured source error, if any.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        match &self.source {
+            Some(boxed) => Some(&**boxed),
+            None => None,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur: Option<&(dyn StdError + 'static)> = self.source();
+        let mut first = true;
+        while let Some(err) = cur {
+            if first {
+                write!(f, "\n\nCaused by:")?;
+                first = false;
+            }
+            write!(f, "\n    {err}")?;
+            cur = err.source();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that keeps this blanket conversion coherent (same trick as the real
+// anyhow crate) so `?` works on any concrete error type.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Attach context to errors, anyhow-style.
+///
+/// The second type parameter mirrors the real crate's signature: it keeps
+/// the `Result` and `Option` impls trivially non-overlapping under
+/// stable coherence rules.
+pub trait Context<T, E> {
+    /// Wrap the error with a static-ish context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with lazily-built context.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/here/ever")
+            .with_context(|| "reading the missing file".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        let shown = format!("{err}");
+        assert!(shown.starts_with("reading the missing file: "), "{shown}");
+        assert!(err.source().is_some());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let n = 3;
+        let e = anyhow!("value {n} and {}", 7);
+        assert_eq!(e.to_string(), "value 3 and 7");
+        fn bails() -> Result<()> {
+            bail!("stopped at {}", 42);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stopped at 42");
+        fn ensures(v: i32) -> Result<()> {
+            ensure!(v > 0, "need positive, got {v}");
+            Ok(())
+        }
+        assert!(ensures(1).is_ok());
+        assert_eq!(
+            ensures(-1).unwrap_err().to_string(),
+            "need positive, got -1"
+        );
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.context("missing value").unwrap_err();
+        assert_eq!(err.to_string(), "missing value");
+        assert_eq!(Some(5u32).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn parse_context_chains() {
+        let r: Result<usize> = "abc".parse::<usize>().context("parties");
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.starts_with("parties: "), "{msg}");
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        let err = io_fail().unwrap_err();
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+}

@@ -1,0 +1,165 @@
+//! Offline **type-check stub** for the `xla` (PJRT) bindings.
+//!
+//! The real crate links libxla/PJRT and is unavailable in the offline
+//! build environment. This stub mirrors the exact API surface the
+//! feature-gated [`runtime engine`](../../src/runtime/engine.rs) uses, so
+//! `cargo check --features xla` type-checks the engine without network or
+//! native libraries. Every runtime entry point fails fast from
+//! [`PjRtClient::cpu`], which makes the engine's loader return an error
+//! and the backend registry fall back to the pure-Rust `linalg` backend.
+//!
+//! Swapping in the real PJRT bindings is a Cargo.toml change only; no
+//! engine code changes.
+
+use std::fmt;
+
+/// Error type matching the shape the engine formats with `{e:?}`.
+pub struct XlaError {
+    msg: String,
+}
+
+impl XlaError {
+    fn new(msg: &str) -> XlaError {
+        XlaError { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.msg)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// Stub result type.
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaError::new(&format!(
+        "{what}: PJRT unavailable (built against the offline xla stub)"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client. The stub always errors, which sends the
+    /// engine loader down its graceful-fallback path.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// A compiled, device-loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments; returns per-device, per-output
+    /// buffers.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device buffer produced by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to the host as a literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A host-side tensor value.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Unwrap a single-element tuple literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: Copy + Default>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an `.hlo.txt` artifact. The stub errors so `XlaEngine::load`
+    /// reports the missing toolchain instead of pretending to compile.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_fast() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        let shown = format!("{err:?}");
+        assert!(shown.contains("PJRT unavailable"), "{shown}");
+    }
+
+    #[test]
+    fn literal_builders_exist() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
