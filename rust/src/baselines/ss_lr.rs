@@ -16,7 +16,7 @@ use crate::linalg::Matrix;
 use crate::mpc::beaver::TripleDealer;
 use crate::mpc::ring::{self, Elem};
 use crate::mpc::share::{share_vec, Share};
-use crate::net::{full_mesh, Endpoint, Payload};
+use crate::net::{full_mesh, Endpoint, Payload, Transport};
 use crate::protocols::mpc_online::mul_over_wire;
 use anyhow::Result;
 

@@ -31,7 +31,7 @@ use crate::crypto::prng::ChaChaRng;
 use crate::data::VerticalSplit;
 use crate::glm::{ln_factorial, to_pm1, GlmKind};
 use crate::linalg::Matrix;
-use crate::net::{full_mesh, Endpoint, Payload};
+use crate::net::{full_mesh, Endpoint, Payload, Transport};
 use anyhow::Result;
 use std::sync::Arc;
 

@@ -1,6 +1,6 @@
 //! Config-file support: load a [`TrainConfig`] from a TOML-subset file
-//! (`key = value` lines, `#` comments, optional `[section]` headers that
-//! are ignored) — the launcher-style alternative to CLI flags.
+//! (`key = value` lines, `#` comments, optional `[section]` headers) —
+//! the launcher-style alternative to CLI flags.
 //!
 //! ```toml
 //! # experiment: credit risk, 3 parties
@@ -13,18 +13,31 @@
 //! rotate_cps = true
 //! use_xla = true
 //! seed = 7
+//!
+//! # distributed mode: one address per party id (0 = C)
+//! [roster]
+//! 0 = "10.0.0.1:7100"
+//! 1 = "10.0.0.2:7100"
+//! 2 = "10.0.0.3:7100"
 //! ```
+//!
+//! Only the `[roster]` section is meaningful; other section headers are
+//! ignored (kept for readability), as before.
 
 use super::TrainConfig;
 use crate::glm::GlmKind;
+use crate::net::tcp::Roster;
 use crate::protocols::CpSelection;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 
-/// Parse the TOML-subset text into key/value pairs.
+/// Parse the TOML-subset text into key/value pairs. Keys inside a
+/// `[roster]` section come back prefixed `roster.`; all other sections
+/// leave keys bare (ignored headers, the pre-roster behavior).
 pub fn parse_kv(text: &str) -> Result<HashMap<String, String>> {
     let mut out = HashMap::new();
+    let mut in_roster = false;
     for (lineno, raw) in text.lines().enumerate() {
         // strip comments (naive: '#' outside quotes)
         let line = match raw.find('#') {
@@ -34,13 +47,21 @@ pub fn parse_kv(text: &str) -> Result<HashMap<String, String>> {
             _ => raw,
         };
         let line = line.trim();
-        if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            in_roster = line[1..line.len() - 1].trim().eq_ignore_ascii_case("roster");
             continue;
         }
         let (key, value) = line
             .split_once('=')
             .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
-        let key = key.trim().to_string();
+        let key = if in_roster {
+            format!("roster.{}", key.trim())
+        } else {
+            key.trim().to_string()
+        };
         let mut value = value.trim().to_string();
         if value.starts_with('"') && value.ends_with('"') && value.len() >= 2 {
             value = value[1..value.len() - 1].to_string();
@@ -48,9 +69,39 @@ pub fn parse_kv(text: &str) -> Result<HashMap<String, String>> {
         if key.is_empty() || value.is_empty() {
             bail!("line {}: empty key or value", lineno + 1);
         }
-        out.insert(key, value);
+        let duplicate = out.insert(key.clone(), value).is_some();
+        // a repeated roster id would silently drop a party address;
+        // non-roster keys keep the historical last-wins behavior
+        if duplicate && key.starts_with("roster.") {
+            bail!("line {}: duplicate roster entry {:?}", lineno + 1, &key["roster.".len()..]);
+        }
     }
     Ok(out)
+}
+
+/// The roster a config file requests (`None` when there is no
+/// `[roster]` section). Entries must be contiguous party ids from 0.
+pub fn roster_of(kv: &HashMap<String, String>) -> Result<Option<Roster>> {
+    let mut count = 0;
+    for k in kv.keys().filter(|k| k.starts_with("roster.")) {
+        let suffix = &k["roster.".len()..];
+        if suffix.parse::<usize>().is_err() {
+            bail!("[roster] keys must be party ids (`0 = \"host:port\"`), got {suffix:?}");
+        }
+        count += 1;
+    }
+    if count == 0 {
+        return Ok(None);
+    }
+    let mut addrs = Vec::with_capacity(count);
+    for p in 0..count {
+        let key = format!("roster.{p}");
+        let addr = kv.get(&key).ok_or_else(|| {
+            anyhow!("[roster] must list contiguous party ids from 0 (missing entry for {p})")
+        })?;
+        addrs.push(addr.clone());
+    }
+    Ok(Some(Roster::new(addrs)))
 }
 
 /// The number of parties a config file requests (needed by the caller to
@@ -79,6 +130,7 @@ pub fn config_from_kv(kv: &HashMap<String, String>) -> Result<TrainConfig> {
     for (key, value) in kv {
         match key.as_str() {
             "model" | "parties" => {}
+            k if k.starts_with("roster.") => {} // handled by `roster_of`
             "iterations" => cfg.iterations = value.parse().context("iterations")?,
             "learning_rate" => cfg.learning_rate = value.parse().context("learning_rate")?,
             "loss_threshold" => cfg.loss_threshold = value.parse().context("loss_threshold")?,
@@ -108,13 +160,43 @@ pub fn config_from_kv(kv: &HashMap<String, String>) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
-/// Load a config file.
-pub fn load(path: &Path) -> Result<(TrainConfig, usize)> {
+/// Everything a config file can describe: the training config, the
+/// party count, and (for distributed mode) the roster.
+pub struct FileConfig {
+    /// The training configuration.
+    pub cfg: TrainConfig,
+    /// Number of parties (explicit `parties = N`, else the roster size,
+    /// else 2).
+    pub parties: usize,
+    /// Party-id → address map from the `[roster]` section, if any.
+    pub roster: Option<Roster>,
+}
+
+/// Load a config file, including the `[roster]` section.
+pub fn load_full(path: &Path) -> Result<FileConfig> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
     let kv = parse_kv(&text)?;
-    let parties = parties_of(&kv)?;
-    Ok((config_from_kv(&kv)?, parties))
+    let roster = roster_of(&kv)?;
+    let parties = match (&roster, kv.contains_key("parties")) {
+        (Some(r), false) => r.n_parties(),
+        _ => parties_of(&kv)?,
+    };
+    if let Some(r) = &roster {
+        if r.n_parties() != parties {
+            bail!(
+                "[roster] lists {} parties but parties = {parties}",
+                r.n_parties()
+            );
+        }
+    }
+    Ok(FileConfig { cfg: config_from_kv(&kv)?, parties, roster })
+}
+
+/// Load a config file (training config + party count only).
+pub fn load(path: &Path) -> Result<(TrainConfig, usize)> {
+    let fc = load_full(path)?;
+    Ok((fc.cfg, fc.parties))
 }
 
 #[cfg(test)]
@@ -163,6 +245,59 @@ mod tests {
         assert!(config_from_kv(&kv).is_err());
         assert!(parse_kv("no equals sign here\n").is_err());
         assert!(parse_kv("key =\n").is_err());
+    }
+
+    #[test]
+    fn roster_section_parses() {
+        let text = r#"
+            model = "lr"
+            parties = 3
+            [roster]
+            0 = "127.0.0.1:7100"
+            1 = "127.0.0.1:7101"   # loopback quickstart
+            2 = "10.0.0.3:7100"
+        "#;
+        let kv = parse_kv(text).unwrap();
+        let roster = roster_of(&kv).unwrap().expect("roster present");
+        assert_eq!(roster.n_parties(), 3);
+        assert_eq!(roster.addr_of(0), "127.0.0.1:7100");
+        assert_eq!(roster.addr_of(2), "10.0.0.3:7100");
+        // roster keys must not break the TrainConfig parse
+        let cfg = config_from_kv(&kv).unwrap();
+        assert_eq!(cfg.kind, GlmKind::Logistic);
+    }
+
+    #[test]
+    fn roster_errors() {
+        // non-contiguous ids
+        let kv = parse_kv("[roster]\n0 = \"a:1\"\n2 = \"b:2\"\n").unwrap();
+        assert!(roster_of(&kv).is_err());
+        // non-numeric roster key names the real problem
+        let kv = parse_kv("[roster]\n0 = \"a:1\"\nhost = \"b:2\"\n").unwrap();
+        let msg = roster_of(&kv).unwrap_err().to_string();
+        assert!(msg.contains("party ids"), "{msg}");
+        // duplicate roster ids are rejected at parse time
+        assert!(parse_kv("[roster]\n0 = \"a:1\"\n0 = \"b:2\"\n").is_err());
+        // no roster at all
+        let kv = parse_kv("model = \"lr\"\n").unwrap();
+        assert!(roster_of(&kv).unwrap().is_none());
+    }
+
+    #[test]
+    fn load_full_reconciles_parties_and_roster() {
+        let dir = std::env::temp_dir().join("efmvfl_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // roster size implies parties when `parties` is absent
+        let p = dir.join("roster_only.toml");
+        std::fs::write(&p, "[roster]\n0 = \"h0:1\"\n1 = \"h1:1\"\n2 = \"h2:1\"\n").unwrap();
+        let fc = load_full(&p).unwrap();
+        assert_eq!(fc.parties, 3);
+        assert_eq!(fc.roster.unwrap().n_parties(), 3);
+        // explicit mismatch is an error
+        let q = dir.join("mismatch.toml");
+        std::fs::write(&q, "parties = 2\n[roster]\n0 = \"h0:1\"\n1 = \"h1:1\"\n2 = \"h2:1\"\n")
+            .unwrap();
+        assert!(load_full(&q).is_err());
     }
 
     #[test]

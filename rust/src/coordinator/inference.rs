@@ -8,16 +8,21 @@
 //! from C while the sum `WX = Σ z_p` — and therefore the prediction
 //! `g⁻¹(WX)` — comes out exactly.
 //!
-//! (In-process simulation note: pair seeds derive from the run seed; a
-//! real deployment agrees them with a DH exchange. The wire shape and
-//! byte counts are identical.)
+//! The round is written against [`Transport`], so the same code serves
+//! the in-process simulation ([`predict`]) and real multi-process
+//! deployments ([`predict_party`], behind the CLI's `party --load`).
+//!
+//! (Simulation note: pair seeds derive from the run seed; a real
+//! deployment agrees them with a DH exchange. The wire shape and byte
+//! counts are identical.)
 
+use super::distributed::gather_stats;
 use crate::crypto::prng::ChaChaRng;
 use crate::data::VerticalSplit;
 use crate::glm::GlmKind;
-use crate::linalg;
+use crate::linalg::{self, Matrix};
 use crate::mpc::ring;
-use crate::net::{full_mesh, Payload};
+use crate::net::{full_mesh, Payload, Transport, WireModel};
 use anyhow::Result;
 
 /// Result of a federated batch-inference round.
@@ -30,17 +35,88 @@ pub struct PredictReport {
 }
 
 /// Pairwise zero-sum mask for party `me` against `other`.
+///
+/// Both ends of the (unordered) pair must derive the identical stream,
+/// so the seed mixes the *sorted* ids: the low id is spread by
+/// `0x9e37_79b9_7f4a_7c15` (⌊2⁶⁴/φ⌋, the SplitMix64/Weyl increment —
+/// its golden-ratio bit pattern decorrelates nearby ids), and the high
+/// id is shifted past the multiplier's low bits so distinct `(lo, hi)`
+/// pairs cannot alias for any realistic party count.
 fn pair_mask(seed: u64, me: usize, other: usize, len: usize) -> Vec<u64> {
     let (lo, hi) = (me.min(other) as u64, me.max(other) as u64);
     let mut rng = ChaChaRng::from_seed(
         seed ^ (lo.wrapping_mul(0x9e37_79b9_7f4a_7c15)).wrapping_add(hi << 17),
     );
-    let mask: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
-    mask
+    (0..len).map(|_| rng.next_u64()).collect()
+}
+
+/// One party's half of the inference round over any transport: mask the
+/// local `z_p = W_p X_p` with the pairwise zero-sum streams, then either
+/// aggregate (party 0 = C) or send to C. Returns the revealed `WX` on C,
+/// `None` elsewhere.
+fn predict_one<T: Transport>(ep: &mut T, x: &Matrix, w: &[f64], seed: u64) -> Option<Vec<f64>> {
+    let p = ep.id();
+    let n = ep.n_parties();
+    let m = x.rows;
+    let z = linalg::gemv(x, w);
+    let mut masked: Vec<u64> = z.iter().map(|&v| ring::encode(v)).collect();
+    // zero-sum masking across all party pairs
+    for q in 0..n {
+        if q == p {
+            continue;
+        }
+        let mask = pair_mask(seed, p, q, m);
+        for (acc, &mv) in masked.iter_mut().zip(&mask) {
+            *acc = if p < q {
+                ring::add(*acc, mv)
+            } else {
+                ring::sub(*acc, mv)
+            };
+        }
+    }
+    if p == 0 {
+        // C: collect every other party's masked vector
+        let mut total = masked;
+        for q in 1..n {
+            let theirs = ep.recv(q, "infer").into_ring();
+            total = ring::add_vec(&total, &theirs);
+        }
+        Some(ring::decode_vec(&total))
+    } else {
+        ep.send(0, "infer", &Payload::Ring(masked));
+        None
+    }
+}
+
+/// Distributed entry point: run this party's side of one federated
+/// inference round over `transport` (weight block `w` for feature block
+/// `x`), then gather the comm totals to C. Returns `Some(report)` on
+/// party 0, `None` elsewhere. Like
+/// [`super::distributed::train_party`], this expects each party to own
+/// its stats sink (socket transports) — over a shared in-process sink
+/// the gathered comm doubles; use [`predict`] there instead.
+pub fn predict_party<T: Transport>(
+    transport: &mut T,
+    x: &Matrix,
+    w: &[f64],
+    kind: GlmKind,
+    seed: u64,
+) -> Result<Option<PredictReport>> {
+    let wx = predict_one(transport, x, w, seed);
+    let comm = gather_stats(transport, WireModel::default());
+    match (wx, comm) {
+        (Some(wx), Some(c)) => Ok(Some(PredictReport {
+            predictions: wx.iter().map(|&z| kind.inverse_link(z)).collect(),
+            comm_mb: c.comm_mb,
+        })),
+        (None, None) => Ok(None),
+        _ => unreachable!("WX and the comm totals both surface on party 0"),
+    }
 }
 
 /// Score `split` (the *new* samples, vertically partitioned like the
-/// training data) under the per-party `weights`. `seed` drives the mask
+/// training data) under the per-party `weights`, simulating every party
+/// as a thread over the in-process mesh. `seed` drives the mask
 /// agreement. Returns predictions as revealed to party C.
 pub fn predict(
     split: &VerticalSplit,
@@ -50,7 +126,6 @@ pub fn predict(
 ) -> Result<PredictReport> {
     let n = split.n_parties();
     assert_eq!(weights.len(), n, "one weight block per party");
-    let m = split.n_samples();
     let (endpoints, stats) = full_mesh(n);
 
     let mut predictions = Vec::new();
@@ -59,36 +134,7 @@ pub fn predict(
         for (p, mut ep) in endpoints.into_iter().enumerate() {
             let x = split.party_block(p).clone();
             let w = weights[p].clone();
-            handles.push(scope.spawn(move || {
-                let z = linalg::gemv(&x, &w);
-                let mut masked: Vec<u64> = z.iter().map(|&v| ring::encode(v)).collect();
-                // zero-sum masking across all party pairs
-                for q in 0..n {
-                    if q == p {
-                        continue;
-                    }
-                    let mask = pair_mask(seed, p, q, m);
-                    for (acc, &mv) in masked.iter_mut().zip(&mask) {
-                        *acc = if p < q {
-                            ring::add(*acc, mv)
-                        } else {
-                            ring::sub(*acc, mv)
-                        };
-                    }
-                }
-                if p == 0 {
-                    // C: collect every other party's masked vector
-                    let mut total = masked;
-                    for q in 1..n {
-                        let theirs = ep.recv(q, "infer").into_ring();
-                        total = ring::add_vec(&total, &theirs);
-                    }
-                    Some(ring::decode_vec(&total))
-                } else {
-                    ep.send(0, "infer", &Payload::Ring(masked));
-                    None
-                }
-            }));
+            handles.push(scope.spawn(move || predict_one(&mut ep, &x, &w, seed)));
         }
         for h in handles {
             if let Some(wx) = h.join().expect("inference party panicked") {

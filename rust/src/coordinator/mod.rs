@@ -9,6 +9,7 @@
 //! paper's tables report.
 
 pub mod config_file;
+pub mod distributed;
 pub mod inference;
 pub mod party;
 pub mod persist;
@@ -213,7 +214,7 @@ pub fn train(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> {
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(n);
         for (p, ep) in endpoints.into_iter().enumerate() {
-            let ctx = ProtoCtx {
+            let mut ctx = ProtoCtx {
                 ep,
                 rng: ChaChaRng::from_seed(cfg.seed.wrapping_add(3000 + p as u64)),
                 kp: keypairs[p].clone(),
@@ -228,7 +229,7 @@ pub fn train(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> {
             };
             let cfg = cfg.clone();
             let compute = compute.clone();
-            handles.push(scope.spawn(move || party::run_party(ctx, input, &cfg, compute)));
+            handles.push(scope.spawn(move || party::run_party(&mut ctx, input, &cfg, compute)));
         }
         for (p, h) in handles.into_iter().enumerate() {
             results[p] = Some(h.join().expect("party thread panicked"));

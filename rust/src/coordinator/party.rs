@@ -9,7 +9,7 @@ use crate::glm::{ln_factorial, to_pm1, GlmKind};
 use crate::linalg::Matrix;
 use crate::mpc::ring;
 use crate::mpc::share::Share;
-use crate::net::Payload;
+use crate::net::{Payload, Transport};
 use crate::protocols::grad_operator::{protocol2_grad_operator, GradOpInputs};
 use crate::protocols::secret_share::protocol1_share;
 use crate::protocols::secure_gradient::protocol3_gradients;
@@ -57,14 +57,20 @@ pub fn batch_rows(m_total: usize, batch: Option<usize>, t: usize) -> Vec<usize> 
 }
 
 /// Run Algorithm 1 for one party until the stop flag or max iterations.
-pub fn run_party(
-    mut ctx: ProtoCtx,
+///
+/// Generic over the transport: the in-process trainer ([`super::train`])
+/// passes an [`crate::net::Endpoint`], the multi-process runtime
+/// ([`super::distributed::train_party`]) a real-socket transport. Takes
+/// `ctx` by `&mut` so the caller keeps the transport (distributed mode
+/// gathers stats over it after training).
+pub fn run_party<T: Transport>(
+    ctx: &mut ProtoCtx<T>,
     input: PartyInput,
     cfg: &TrainConfig,
     compute: Arc<dyn Compute>,
 ) -> PartyResult {
     let cpu_start = crate::benchkit::thread_cpu_secs();
-    let me = ctx.ep.id;
+    let me = ctx.ep.id();
     let n = ctx.ep.n_parties();
     let is_c = me == 0;
     let m_total = input.x.rows;
@@ -93,7 +99,7 @@ pub fn run_party(
 
         // Protocol 1: share z (all parties), y (C), exp(z) per party (PR)
         let wx_share = crate::protocols::secret_share::share_and_sum(
-            &mut ctx,
+            ctx,
             &format!("z{t}"),
             &ring::encode_vec(&z),
         );
@@ -101,7 +107,7 @@ pub fn run_party(
             let yb: Option<Vec<f64>> =
                 y_all.as_ref().map(|y| rows.iter().map(|&i| y[i]).collect());
             let enc = yb.as_ref().map(|y| ring::encode_vec(y));
-            protocol1_share(&mut ctx, &format!("y{t}"), 0, enc.as_deref())
+            protocol1_share(ctx, &format!("y{t}"), 0, enc.as_deref())
         };
         // exponential intermediates: one chain per multiplier c, each
         // party sharing e^{c·z_p} (paper §4.2 / DESIGN §7)
@@ -113,7 +119,7 @@ pub fn run_party(
             let shares: Vec<Share> = (0..n)
                 .filter_map(|p| {
                     let vals = (p == me).then_some(enc.as_slice());
-                    protocol1_share(&mut ctx, &format!("e{t}:{ci}:{p}"), p, vals)
+                    protocol1_share(ctx, &format!("e{t}:{ci}:{p}"), p, vals)
                 })
                 .collect();
             exp_shares.push(shares);
@@ -126,14 +132,14 @@ pub fn run_party(
                 y: y_share.clone().expect("CP has y share"),
                 exps: exp_shares,
             };
-            let out = protocol2_grad_operator(&mut ctx, cfg.kind, &inputs);
+            let out = protocol2_grad_operator(ctx, cfg.kind, &inputs);
             (Some(out.md), out.loss_aux)
         } else {
             (None, Vec::new())
         };
 
         // Protocol 3: every party gets its plaintext gradient
-        let g = protocol3_gradients(&mut ctx, &xb, md_share.as_ref());
+        let g = protocol3_gradients(ctx, &xb, md_share.as_ref());
 
         // line 23 / eq. 6: local weight update
         for (wi, gi) in w.iter_mut().zip(&g) {
@@ -156,7 +162,7 @@ pub fn run_party(
         } else {
             0.0
         };
-        let loss = protocol4_loss(&mut ctx, cfg.kind, loss_inputs.as_ref(), m, lny_sum);
+        let loss = protocol4_loss(ctx, cfg.kind, loss_inputs.as_ref(), m, lny_sum);
 
         // lines 24-31: stop-flag decision on C, broadcast to everyone
         iterations_run = t + 1;

@@ -161,13 +161,62 @@ mod tests {
         std::fs::create_dir_all(p.parent().unwrap()).unwrap();
         std::fs::write(&p, b"not a model").unwrap();
         assert!(SavedModel::load(&p).is_err());
-        // truncated file
+    }
+
+    /// A valid on-disk model to corrupt in the error-path tests
+    /// (`name` keeps parallel tests off each other's files).
+    fn good_bytes(name: &str) -> Vec<u8> {
         let m = SavedModel { kind: GlmKind::Linear, weights: vec![vec![1.0; 8]] };
-        let good = tmp("good.efmv");
+        let good = tmp(name);
         m.save(&good).unwrap();
-        let bytes = std::fs::read(&good).unwrap();
-        let cut = tmp("cut.efmv");
-        std::fs::write(&cut, &bytes[..bytes.len() - 5]).unwrap();
-        assert!(SavedModel::load(&cut).is_err());
+        std::fs::read(&good).unwrap()
+    }
+
+    #[test]
+    fn rejects_corrupt_magic() {
+        let mut bytes = good_bytes("good_magic.efmv");
+        bytes[0] = b'X'; // EFMV → XFMV
+        let p = tmp("badmagic.efmv");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = SavedModel::load(&p).unwrap_err();
+        assert!(err.to_string().contains("not an EFMVFL model"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let mut bytes = good_bytes("good_ver.efmv");
+        bytes[4..6].copy_from_slice(&99u16.to_le_bytes());
+        let p = tmp("badver.efmv");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = SavedModel::load(&p).unwrap_err();
+        assert!(err.to_string().contains("unsupported model version 99"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_boundary() {
+        let bytes = good_bytes("good_trunc.efmv");
+        // header cut, block-length cut, mid-weights cut, off-by-one
+        for cut in [3, 8, 11, bytes.len() - 5, bytes.len() - 1] {
+            let p = tmp(&format!("cut{cut}.efmv"));
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(SavedModel::load(&p).is_err(), "cut at {cut} must fail");
+        }
+        // trailing junk is also rejected, not silently ignored
+        let mut extended = bytes.clone();
+        extended.push(0);
+        let p = tmp("trailing.efmv");
+        std::fs::write(&p, &extended).unwrap();
+        let err = SavedModel::load(&p).unwrap_err();
+        assert!(err.to_string().contains("trailing bytes"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_glm_tag() {
+        let mut bytes = good_bytes("good_tag.efmv");
+        bytes[6] = 200; // kind tag
+        let p = tmp("badkind.efmv");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = SavedModel::load(&p).unwrap_err();
+        assert!(err.to_string().contains("unknown GLM tag"), "{err}");
     }
 }

@@ -20,9 +20,12 @@
 //! `xla` cargo feature and used only when `artifacts/` exists, falling
 //! back gracefully otherwise. The Protocol 3 HE hot path
 //! ([`crypto::he_ops`]) shards its per-output-column work across scoped
-//! threads (`EFMVFL_THREADS` knob); parties themselves run as threads
-//! over the mpsc full-mesh transport ([`net`]). See `rust/README.md`
-//! for the workspace layout and build matrix.
+//! threads (`EFMVFL_THREADS` knob). Parties run over the [`net`]
+//! transport layer: threads on the in-process mpsc full mesh
+//! ([`coordinator::train`]), or separate OS processes over real TCP
+//! sockets ([`net::tcp`] + [`coordinator::distributed`], the CLI's
+//! `party` / `run-distributed` subcommands). See `rust/README.md` for
+//! the workspace layout and build matrix.
 
 pub mod baselines;
 pub mod benchkit;
@@ -47,5 +50,6 @@ pub mod prelude {
     pub use crate::data::{split_vertical, Dataset, VerticalSplit};
     pub use crate::glm::{GlmKind, Model};
     pub use crate::mpc::share::Share;
+    pub use crate::net::Transport;
     pub use crate::protocols::CpSelection;
 }

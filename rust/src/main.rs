@@ -3,6 +3,12 @@
 //! Subcommands:
 //!
 //! - `train`  — run any framework/GLM on synthetic or CSV data
+//!   (in-process simulation: parties are threads, the wire is modeled)
+//! - `party`  — run ONE party as this OS process over real TCP sockets
+//!   (the paper's testbed shape; needs a `[roster]` in the config file)
+//! - `run-distributed` — convenience launcher: spawn every `party`
+//!   process of a roster locally and wait for them
+//! - `predict` — federated inference with a saved model (in-process)
 //! - `keygen` — time Paillier key generation at a given size
 //! - `info`   — build/runtime information (artifact status, backends)
 //! - `help`   — this text
@@ -13,23 +19,28 @@
 //! efmvfl train --model lr --parties 3 --samples 5000 --iters 30
 //! efmvfl train --model pr --framework tp --key-bits 1024
 //! efmvfl train --csv data/credit.csv --label-col 23 --xla
+//! efmvfl party --config exp.toml --id 1
+//! efmvfl run-distributed --config exp.toml
 //! efmvfl keygen --key-bits 1024
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use efmvfl::baselines::Framework;
 use efmvfl::cli::Args;
 use efmvfl::coordinator::TrainConfig;
-use efmvfl::data::{csv, split_vertical, synthetic};
+use efmvfl::crypto::prng::ChaChaRng;
+use efmvfl::data::{csv, split_vertical, synthetic, Dataset};
 use efmvfl::glm::GlmKind;
+use efmvfl::net::tcp;
 use efmvfl::protocols::CpSelection;
 use efmvfl::{linalg, metrics};
 use std::path::Path;
+use std::time::Duration;
 
 const FLAGS: &[&'static str] = &[
     "model", "framework", "parties", "samples", "features", "iters", "lr", "batch",
     "key-bits", "seed", "csv", "label-col", "xla", "rotate-cps", "pool", "threshold",
-    "save", "load", "config",
+    "save", "load", "config", "id", "connect-timeout",
 ];
 
 fn main() {
@@ -47,7 +58,7 @@ fn main() {
 fn print_help() {
     println!("efmvfl — multi-party vertical federated learning without a third party");
     println!();
-    println!("USAGE: efmvfl <train|keygen|info|help> [flags]");
+    println!("USAGE: efmvfl <train|predict|party|run-distributed|keygen|info|help> [flags]");
     println!();
     println!("train flags:");
     println!("  --model lr|pr|linear     GLM to train               [lr]");
@@ -63,6 +74,14 @@ fn print_help() {
     println!("  --rotate-cps             re-select CPs each iteration");
     println!("  --pool N                 pre-generate N obfuscators");
     println!("  --xla                    use the PJRT AOT artifacts");
+    println!();
+    println!("distributed mode (real TCP sockets, one OS process per party):");
+    println!("  efmvfl party --config exp.toml --id N [train flags]");
+    println!("      run party N of the config's [roster]; --load M.efmv");
+    println!("      serves federated inference instead of training");
+    println!("  efmvfl run-distributed --config exp.toml [train flags]");
+    println!("      spawn every roster party locally and wait");
+    println!("  --connect-timeout SECS   mesh bootstrap deadline      [30]");
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -70,10 +89,80 @@ fn run(argv: &[String]) -> Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "predict" => cmd_predict(&args),
+        "party" => cmd_party(&args),
+        "run-distributed" => cmd_run_distributed(&args, argv),
         "keygen" => cmd_keygen(&args),
         "info" => cmd_info(),
         other => bail!("unknown subcommand {other}; try `efmvfl help`"),
     }
+}
+
+/// Dataset selection shared by `train` and `party`: an explicit CSV, or
+/// kind-appropriate synthetic data (both deterministic in `seed`, so
+/// every party process rebuilds the identical dataset).
+fn load_or_synth_data(args: &Args, kind: GlmKind, seed: u64) -> Result<Dataset> {
+    if let Some(path) = args.get("csv") {
+        let label_col: usize = args.get_or("label-col", 0)?;
+        return csv::read_dataset(Path::new(path), label_col);
+    }
+    let samples: usize = args.get_or("samples", 5000)?;
+    Ok(match kind {
+        GlmKind::Poisson => synthetic::dvisits_like(samples, args.get_or("features", 18)?, seed),
+        GlmKind::Gamma | GlmKind::Tweedie => {
+            synthetic::claims_severity_like(samples, args.get_or("features", 12)?, seed)
+        }
+        _ => synthetic::credit_default_like(samples, args.get_or("features", 23)?, seed),
+    })
+}
+
+/// Dataset for scoring with a saved model (shared by the in-process
+/// `predict` and distributed `party --load` paths): an explicit CSV, or
+/// synthetic samples shaped to the model's feature count.
+fn predict_dataset(
+    args: &Args,
+    model: &efmvfl::coordinator::persist::SavedModel,
+    seed: u64,
+) -> Result<Dataset> {
+    if let Some(csv_path) = args.get("csv") {
+        let label_col: usize = args.get_or("label-col", 0)?;
+        return csv::read_dataset(Path::new(csv_path), label_col);
+    }
+    let samples: usize = args.get_or("samples", 1000)?;
+    Ok(match model.kind {
+        GlmKind::Poisson => synthetic::dvisits_like(samples, model.n_features(), seed),
+        GlmKind::Gamma | GlmKind::Tweedie => {
+            synthetic::claims_severity_like(samples, model.n_features(), seed)
+        }
+        _ => synthetic::credit_default_like(samples, model.n_features(), seed),
+    })
+}
+
+/// Apply the CLI's train-flag overrides on top of a `TrainConfig` base
+/// (the config-file values, or the kind-appropriate defaults) — shared
+/// by `train` and `party` so the two modes cannot drift.
+fn apply_train_overrides(args: &Args, cfg: &mut TrainConfig) -> Result<()> {
+    if let Some(m) = args.get("model") {
+        cfg.kind = GlmKind::parse(m)
+            .ok_or_else(|| anyhow::anyhow!("--model must be lr|pr|linear|gamma|tweedie"))?;
+    }
+    cfg.iterations = args.get_or("iters", cfg.iterations)?;
+    cfg.learning_rate = args.get_or("lr", cfg.learning_rate)?;
+    cfg.key_bits = args.get_or("key-bits", cfg.key_bits)?;
+    cfg.loss_threshold = args.get_or("threshold", cfg.loss_threshold)?;
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    cfg.batch_size = match args.get("batch") {
+        Some("full") => None,
+        Some(v) => Some(v.parse()?),
+        None => cfg.batch_size,
+    };
+    if args.has("rotate-cps") {
+        cfg.cp_selection = CpSelection::Rotate;
+    }
+    if args.has("xla") {
+        cfg.use_xla = true;
+    }
+    cfg.obfuscator_pool = args.get_or("pool", cfg.obfuscator_pool)?;
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -92,26 +181,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--framework must be efmvfl|tp|ss|ss-he"))?;
     let file_parties = file_cfg.as_ref().map(|(_, p)| *p).unwrap_or(2);
     let parties: usize = args.get_or("parties", file_parties)?;
-    let seed: u64 = args.get_or("seed", 7)?;
+    // dataset seed follows the config file's seed (like `party` does),
+    // so a shared config means a shared dataset across modes
+    let file_seed = file_cfg.as_ref().map(|(c, _)| c.seed).unwrap_or(7);
+    let seed: u64 = args.get_or("seed", file_seed)?;
 
     // data
-    let mut data = if let Some(path) = args.get("csv") {
-        let label_col: usize = args.get_or("label-col", 0)?;
-        csv::read_dataset(Path::new(path), label_col)?
-    } else {
-        let samples: usize = args.get_or("samples", 5000)?;
-        match kind {
-            GlmKind::Poisson => {
-                synthetic::dvisits_like(samples, args.get_or("features", 18)?, seed)
-            }
-            GlmKind::Gamma | GlmKind::Tweedie => {
-                synthetic::claims_severity_like(samples, args.get_or("features", 12)?, seed)
-            }
-            _ => synthetic::credit_default_like(samples, args.get_or("features", 23)?, seed),
-        }
-    };
+    let mut data = load_or_synth_data(args, kind, seed)?;
     data.standardize();
-    let mut keyrng = efmvfl::crypto::prng::ChaChaRng::from_seed(seed);
+    let mut keyrng = ChaChaRng::from_seed(seed);
     let (train_set, test_set) = data.train_test_split(0.7, &mut keyrng);
     let split = split_vertical(&train_set, parties);
 
@@ -124,32 +202,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         },
     };
     cfg.kind = kind;
-    cfg.iterations = args.get_or("iters", cfg.iterations)?;
-    cfg.learning_rate = args.get_or(
-        "lr",
-        if file_cfg.is_some() {
-            cfg.learning_rate
-        } else if kind == GlmKind::Poisson {
-            0.1
-        } else {
-            0.15
-        },
-    )?;
-    cfg.key_bits = args.get_or("key-bits", cfg.key_bits)?;
-    cfg.loss_threshold = args.get_or("threshold", cfg.loss_threshold)?;
-    cfg.seed = args.get_or("seed", cfg.seed)?;
-    cfg.batch_size = match args.get("batch") {
-        Some("full") => None,
-        Some(v) => Some(v.parse()?),
-        None => cfg.batch_size,
-    };
-    if args.has("rotate-cps") {
-        cfg.cp_selection = CpSelection::Rotate;
-    }
-    if args.has("xla") {
-        cfg.use_xla = true;
-    }
-    cfg.obfuscator_pool = args.get_or("pool", cfg.obfuscator_pool)?;
+    // without a config file, `cfg` was built from `kind` above, so its
+    // learning_rate already carries the 0.15 LR / 0.1 PR paper default —
+    // the shared override helper's base is correct in both cases
+    apply_train_overrides(args, &mut cfg)?;
 
     println!(
         "{} on {} ({} train / {} test, {} features, {} parties)",
@@ -215,22 +271,16 @@ fn cmd_predict(args: &Args) -> Result<()> {
         .get("load")
         .ok_or_else(|| anyhow::anyhow!("predict needs --load <model.efmv>"))?;
     let model = efmvfl::coordinator::persist::SavedModel::load(Path::new(path))?;
-    let seed: u64 = args.get_or("seed", 7)?;
+    // like `train` and `party --load`, follow the config file's seed so
+    // every mode scores the same synthetic dataset
+    let file_seed = match args.get("config") {
+        Some(p) => efmvfl::coordinator::config_file::load(Path::new(p))?.0.seed,
+        None => 7,
+    };
+    let seed: u64 = args.get_or("seed", file_seed)?;
     let parties = model.weights.len();
 
-    let mut data = if let Some(csv_path) = args.get("csv") {
-        let label_col: usize = args.get_or("label-col", 0)?;
-        csv::read_dataset(Path::new(csv_path), label_col)?
-    } else {
-        let samples: usize = args.get_or("samples", 1000)?;
-        match model.kind {
-            GlmKind::Poisson => synthetic::dvisits_like(samples, model.n_features(), seed),
-            GlmKind::Gamma | GlmKind::Tweedie => {
-                synthetic::claims_severity_like(samples, model.n_features(), seed)
-            }
-            _ => synthetic::credit_default_like(samples, model.n_features(), seed),
-        }
-    };
+    let mut data = predict_dataset(args, &model, seed)?;
     data.standardize();
     let split = split_vertical(&data, parties);
     let rep =
@@ -251,6 +301,150 @@ fn cmd_predict(args: &Args) -> Result<()> {
     }
     for (i, p) in rep.predictions.iter().take(5).enumerate() {
         println!("  sample {i}: {p:.4}");
+    }
+    Ok(())
+}
+
+/// Run ONE party of a distributed mesh in this process, over real TCP
+/// sockets. Training by default; `--load model.efmv` serves a federated
+/// inference round instead. All parties must share the config file (it
+/// carries the roster and the agreed protocol parameters).
+fn cmd_party(args: &Args) -> Result<()> {
+    let path = args
+        .get("config")
+        .ok_or_else(|| anyhow::anyhow!("party needs --config <file> with a [roster] section"))?;
+    let fc = efmvfl::coordinator::config_file::load_full(Path::new(path))?;
+    let roster = fc.roster.ok_or_else(|| {
+        anyhow::anyhow!("{path} has no [roster] section; distributed mode needs one")
+    })?;
+    let parties = roster.n_parties();
+    let id: usize = args
+        .get("id")
+        .ok_or_else(|| anyhow::anyhow!("party needs --id <0..{}>", parties - 1))?
+        .parse()
+        .context("--id")?;
+    if id >= parties {
+        bail!("--id {id} outside the {parties}-party roster");
+    }
+    let mut cfg = fc.cfg;
+    apply_train_overrides(args, &mut cfg)?;
+    let seed = cfg.seed;
+    let timeout: u64 = args.get_or("connect-timeout", 30)?;
+
+    if let Some(model_path) = args.get("load") {
+        // federated inference: every party scores its block of the
+        // (shared-seed or CSV) samples; predictions surface at C only
+        let model = efmvfl::coordinator::persist::SavedModel::load(Path::new(model_path))?;
+        if model.weights.len() != parties {
+            bail!("model has {} weight blocks, roster has {parties} parties", model.weights.len());
+        }
+        let mut data = predict_dataset(args, &model, seed)?;
+        data.standardize();
+        let split = split_vertical(&data, parties);
+        eprintln!("party {id}: joining {parties}-party inference mesh at {}", roster.addr_of(id));
+        let mut transport = tcp::connect_mesh(&roster, id, Duration::from_secs(timeout))?;
+        let rep = efmvfl::coordinator::inference::predict_party(
+            &mut transport,
+            split.party_block(id),
+            &model.weights[id],
+            model.kind,
+            seed,
+        )?;
+        match rep {
+            Some(rep) => {
+                println!(
+                    "scored {} samples across {parties} parties ({:.3} MB moved)",
+                    rep.predictions.len(),
+                    rep.comm_mb
+                );
+                for (i, p) in rep.predictions.iter().take(5).enumerate() {
+                    println!("  sample {i}: {p:.4}");
+                }
+            }
+            None => println!("party {id}: inference done (predictions revealed to party 0 only)"),
+        }
+        return Ok(());
+    }
+
+    // training: rebuild the shared dataset deterministically, keep only
+    // this party's vertical block (plus labels on C)
+    let mut data = load_or_synth_data(args, cfg.kind, seed)?;
+    data.standardize();
+    let mut keyrng = ChaChaRng::from_seed(seed);
+    let (train_set, _test_set) = data.train_test_split(0.7, &mut keyrng);
+    let split = split_vertical(&train_set, parties);
+    let x = split.party_block(id).clone();
+    let y = (id == 0).then(|| split.y.clone());
+    eprintln!(
+        "party {id}: joining {parties}-party training mesh at {} ({} rows, {} local features)",
+        roster.addr_of(id),
+        x.rows,
+        x.cols
+    );
+    let transport = tcp::connect_mesh(&roster, id, Duration::from_secs(timeout))?;
+    let rep = efmvfl::coordinator::distributed::train_party(transport, x, y, &cfg)?;
+    if id == 0 {
+        println!("\niter  loss");
+        for (i, l) in rep.losses.iter().enumerate() {
+            println!("{:>4}  {l:.6}", i + 1);
+        }
+        let comm = rep.comm.as_ref().expect("party 0 gathers the comm totals");
+        println!();
+        println!("comm     = {:.2} MB online (+{:.2} MB offline)", comm.comm_mb, comm.offline_mb);
+        println!("messages = {}", comm.msgs);
+        println!(
+            "wall     = {:.2} s over real sockets (modeled wire time would be {:.2} s)",
+            rep.wall_secs, comm.net_secs
+        );
+    } else {
+        println!(
+            "party {id}: trained {} local weights in {} iterations",
+            rep.weights.len(),
+            rep.iterations_run
+        );
+    }
+    Ok(())
+}
+
+/// Spawn one `efmvfl party` OS process per roster entry on this machine
+/// and wait for all of them — the loopback quickstart for distributed
+/// mode (real deployments start `party` on each server instead).
+fn cmd_run_distributed(args: &Args, argv: &[String]) -> Result<()> {
+    let path = args.get("config").ok_or_else(|| {
+        anyhow::anyhow!("run-distributed needs --config <file> with a [roster] section")
+    })?;
+    let fc = efmvfl::coordinator::config_file::load_full(Path::new(path))?;
+    let roster = fc.roster.ok_or_else(|| {
+        anyhow::anyhow!("{path} has no [roster] section; distributed mode needs one")
+    })?;
+    let n = roster.n_parties();
+    let exe = std::env::current_exe().context("locating the efmvfl binary")?;
+    eprintln!("spawning {n} party processes from the roster in {path}");
+    let mut children = Vec::with_capacity(n);
+    for id in 0..n {
+        let mut cmd = std::process::Command::new(&exe);
+        // forward every flag we received (config, train overrides, load)
+        // and append the party id — last occurrence wins in the parser
+        cmd.arg("party");
+        cmd.args(&argv[1..]);
+        cmd.arg("--id").arg(id.to_string());
+        if id != 0 {
+            // party 0 owns stdout (losses, comm report); hosts keep stderr
+            cmd.stdout(std::process::Stdio::null());
+        }
+        let child = cmd.spawn().with_context(|| format!("spawning party {id}"))?;
+        children.push((id, child));
+    }
+    let mut ok = true;
+    for (id, mut child) in children {
+        let status = child.wait().with_context(|| format!("waiting for party {id}"))?;
+        if !status.success() {
+            eprintln!("party {id} exited with {status}");
+            ok = false;
+        }
+    }
+    if !ok {
+        bail!("distributed run failed");
     }
     Ok(())
 }

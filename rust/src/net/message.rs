@@ -130,8 +130,12 @@ impl Payload {
         out
     }
 
-    /// Deserialize from wire bytes (panics on malformed input — the
-    /// transport is in-process, corruption means a bug, not an attack).
+    /// Deserialize from wire bytes. Panics on malformed input: both
+    /// transports (in-process channels and the authenticated-handshake
+    /// TCP mesh between mutually known parties) carry only peer-encoded
+    /// payloads, so corruption means a bug or a broken peer — failing
+    /// loudly beats decoding garbage. This parser is NOT hardened
+    /// against adversarial input from untrusted networks.
     pub fn decode(bytes: &[u8]) -> Payload {
         let tag = bytes[0];
         let mut pos = 1usize;
@@ -178,18 +182,56 @@ mod tests {
 
     #[test]
     fn roundtrip_all_variants() {
+        // Every variant, including boundary values and all-empty vectors
+        // — this encoding is what crosses real TCP sockets in
+        // distributed mode, so lock it down.
         let cases = vec![
             Payload::Ring(vec![0, 1, u64::MAX]),
+            Payload::Ring(vec![]),
             Payload::RingPair(vec![5, 6], vec![7]),
+            Payload::RingPair(vec![], vec![u64::MAX]),
+            Payload::RingPair(vec![], vec![]),
+            Payload::Cipher { width: 4, data: vec![0xde, 0xad, 0xbe, 0xef] },
+            Payload::Cipher { width: 16, data: vec![] },
             Payload::Scalar(-3.25),
+            Payload::Scalar(0.0),
+            Payload::Scalar(f64::MAX),
+            Payload::Scalar(f64::NEG_INFINITY),
             Payload::Flag(true),
             Payload::Flag(false),
             Payload::Bytes(vec![1, 2, 3]),
-            Payload::Ring(vec![]),
+            Payload::Bytes(vec![]),
+            Payload::Bytes(vec![0xff; 300]),
         ];
         for p in cases {
             assert_eq!(Payload::decode(&p.encode()), p);
         }
+    }
+
+    #[test]
+    fn max_width_ciphertext_roundtrip() {
+        // a ciphertext that fills its fixed width exactly (leading 0xff,
+        // no zero padding) must survive the wire unchanged, as must one
+        // that is all padding (the zero ciphertext)
+        let width = 64;
+        let full_bytes = vec![0xffu8; width];
+        let full = Ciphertext(BigUint::from_bytes_be(&full_bytes));
+        let zero = Ciphertext(BigUint::from_bytes_be(&[0u8]));
+        let p = Payload::from_ciphertexts(&[full.clone(), zero.clone()], width);
+        let encoded = p.encode();
+        // exact wire size: tag + width + len + 2 ciphertexts
+        assert_eq!(encoded.len(), 1 + 8 + 8 + 2 * width);
+        let back = Payload::decode(&encoded).to_ciphertexts();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, full.0);
+        assert_eq!(back[1].0, zero.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "wider than key width")]
+    fn overwide_ciphertext_rejected() {
+        let ct = Ciphertext(BigUint::from_bytes_be(&[1u8; 9]));
+        let _ = Payload::from_ciphertexts(&[ct], 8);
     }
 
     #[test]

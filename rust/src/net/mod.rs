@@ -1,11 +1,23 @@
 //! Party-to-party transport with exact byte accounting.
 //!
 //! The paper's evaluation reports per-framework `comm` (MB moved during
-//! training) and `runtime` on a 1000 Mbps testbed. Parties here are
-//! threads in one process connected by channels, so every message is
-//! serialized to bytes first — the counters measure exactly what a TCP
-//! wire would carry — and a [`WireModel`] converts (bytes, messages) into
-//! simulated network seconds that are added to measured compute time.
+//! training) and `runtime` on a 1000 Mbps testbed. The protocol stack
+//! talks to peers through the [`Transport`] trait; two implementations
+//! exist:
+//!
+//! - [`Endpoint`] (in-process): parties are threads in one process
+//!   connected by channels. Every message is serialized to bytes first —
+//!   the counters measure exactly what a TCP wire would carry — and a
+//!   [`WireModel`] converts (bytes, messages) into **simulated** network
+//!   seconds that are added to measured compute time. The `WireModel`
+//!   applies to this in-process transport only: it exists to model the
+//!   wire the simulation doesn't have.
+//! - [`tcp::TcpTransport`] (multi-process): parties are separate OS
+//!   processes over real TCP sockets ([`tcp`]). Network time is then
+//!   *measured* wall time, not modeled; byte counters use the same
+//!   formula as the in-process path, so the `comm` columns stay
+//!   directly comparable (and are asserted identical in
+//!   `tests/tcp_transport.rs`).
 //!
 //! Offline-phase traffic (Beaver-triple dealing) is accounted separately,
 //! mirroring how SPDZ-style systems (and the paper's SS baselines) report
@@ -13,8 +25,9 @@
 
 mod message;
 mod stats;
+pub mod tcp;
 mod transport;
 
 pub use message::Payload;
 pub use stats::{NetStats, WireModel};
-pub use transport::{full_mesh, Endpoint};
+pub use transport::{full_mesh, Endpoint, Transport};

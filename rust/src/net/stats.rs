@@ -89,6 +89,33 @@ impl NetStats {
         self.total_bytes() as f64 / 1e6
     }
 
+    /// Flatten party `from`'s outgoing row for the end-of-run gather in
+    /// distributed mode: `[bytes to 0.., msgs to 0.., offline_bytes]`.
+    /// A socket transport counts only its own sends, so the union of all
+    /// parties' rows equals what the in-process shared sink records.
+    pub fn export_row(&self, from: usize) -> Vec<u64> {
+        let mut row = Vec::with_capacity(2 * self.n + 1);
+        for to in 0..self.n {
+            row.push(self.bytes[from * self.n + to].load(Ordering::Relaxed));
+        }
+        for to in 0..self.n {
+            row.push(self.msgs[from * self.n + to].load(Ordering::Relaxed));
+        }
+        row.push(self.offline_bytes.load(Ordering::Relaxed));
+        row
+    }
+
+    /// Merge a row produced by [`NetStats::export_row`] on party `from`'s
+    /// side into this sink (adds, so local counts are preserved).
+    pub fn merge_row(&self, from: usize, row: &[u64]) {
+        assert_eq!(row.len(), 2 * self.n + 1, "malformed stats row");
+        for to in 0..self.n {
+            self.bytes[from * self.n + to].fetch_add(row[to], Ordering::Relaxed);
+            self.msgs[from * self.n + to].fetch_add(row[self.n + to], Ordering::Relaxed);
+        }
+        self.offline_bytes.fetch_add(row[2 * self.n], Ordering::Relaxed);
+    }
+
     /// Reset all counters (between bench repetitions).
     pub fn reset(&self) {
         for c in self.bytes.iter().chain(self.msgs.iter()) {
@@ -117,6 +144,24 @@ mod tests {
         s.reset();
         assert_eq!(s.total_bytes(), 0);
         assert_eq!(s.offline_bytes(), 0);
+    }
+
+    #[test]
+    fn row_export_merge_roundtrip() {
+        // party 1's local counters, as a socket transport would hold them
+        let local = NetStats::new(3);
+        local.record(1, 0, 100);
+        local.record(1, 2, 40);
+        local.record_offline(8);
+        // party 0's sink after merging the gathered row
+        let sink = NetStats::new(3);
+        sink.record(0, 1, 7);
+        sink.merge_row(1, &local.export_row(1));
+        assert_eq!(sink.link_bytes(1, 0), 100);
+        assert_eq!(sink.link_bytes(1, 2), 40);
+        assert_eq!(sink.link_bytes(0, 1), 7);
+        assert_eq!(sink.total_msgs(), 3);
+        assert_eq!(sink.offline_bytes(), 8);
     }
 
     #[test]

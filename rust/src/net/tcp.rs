@@ -1,0 +1,591 @@
+//! Real-socket transport: EFMVFL parties as separate OS processes over
+//! TCP.
+//!
+//! The paper evaluates on a testbed where every party runs on its own
+//! 1000 Mbps server; this module is that deployment shape. A [`Roster`]
+//! maps party ids to `host:port` addresses, [`connect_mesh`] bootstraps
+//! a full mesh (lower ids dial higher ids, a magic + party-id handshake
+//! validates both ends, connects retry until a deadline), and
+//! [`TcpTransport`] then speaks the same `(from, tag)`-addressed,
+//! out-of-order-buffered protocol as the in-process [`super::Endpoint`].
+//!
+//! ## Wire format
+//!
+//! Handshake (once per connection, both directions):
+//! `b"EFM1" | party_id u16 | n_parties u16` (little-endian).
+//!
+//! Data frames: `from u16 | tag_len u16 | body_len u32 | tag | body`,
+//! where `body` is the hand-rolled [`Payload`] encoding — exactly the
+//! bytes the in-process mesh counts, so [`NetStats`] totals are
+//! identical across transports (the accounting formula lives in the
+//! [`Transport::send`] default and is shared).
+//!
+//! ## Accounting across processes
+//!
+//! Each process records only its *outgoing* row locally; the
+//! coordinator layer gathers rows to party 0 at end of run over the
+//! uncounted [`Transport::deliver`] control plane (see
+//! [`NetStats::export_row`] / [`NetStats::merge_row`]).
+
+use super::message::Payload;
+use super::stats::NetStats;
+use super::transport::{take_pending, Frame, Transport};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Handshake magic: "EFMVFL mesh, wire version 1".
+const HS_MAGIC: &[u8; 4] = b"EFM1";
+/// Frames with absurd header fields are treated as corruption and drop
+/// the connection rather than attempting a huge allocation.
+const MAX_TAG_LEN: usize = 1 << 12;
+const MAX_BODY_LEN: usize = 1 << 30;
+
+/// Party id → address map for one federation run. Index is the party id
+/// (0 = guest C, 1.. = hosts B_i).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Roster {
+    addrs: Vec<String>,
+}
+
+impl Roster {
+    /// Build a roster from `host:port` strings in party order.
+    pub fn new(addrs: Vec<String>) -> Roster {
+        Roster { addrs }
+    }
+
+    /// All-loopback roster on `n` consecutive ports — the quickstart /
+    /// test topology.
+    pub fn loopback(n: usize, base_port: u16) -> Roster {
+        Roster {
+            addrs: (0..n)
+                .map(|p| format!("127.0.0.1:{}", base_port + p as u16))
+                .collect(),
+        }
+    }
+
+    /// Number of parties in the roster.
+    pub fn n_parties(&self) -> usize {
+        self.addrs.len()
+    }
+
+    /// Address of party `p`.
+    pub fn addr_of(&self, p: usize) -> &str {
+        &self.addrs[p]
+    }
+
+    /// Listen port of party `p` (the part after the last `:`).
+    pub fn port_of(&self, p: usize) -> Result<u16> {
+        let addr = &self.addrs[p];
+        let (_, port) = addr
+            .rsplit_once(':')
+            .ok_or_else(|| anyhow!("roster entry {p} ({addr}) has no :port"))?;
+        port.parse()
+            .map_err(|_| anyhow!("roster entry {p} ({addr}): bad port"))
+    }
+}
+
+/// One party's connection to a TCP full mesh. Constructed by
+/// [`connect_mesh`]; implements [`Transport`] so the whole protocol
+/// stack runs over it unchanged.
+pub struct TcpTransport {
+    id: usize,
+    n: usize,
+    /// Write halves, indexed by peer id (`None` at `self.id`).
+    writers: Vec<Option<TcpStream>>,
+    inbox: Receiver<Frame>,
+    pending: VecDeque<Frame>,
+    stats: Arc<NetStats>,
+    readers: Vec<JoinHandle<()>>,
+    /// Per-peer liveness, flipped by a reader when its link dies — lets
+    /// `recv` fail loudly on a dead peer even while other links keep
+    /// the inbox channel open (a 3+-party mesh would otherwise hang).
+    dead: Arc<Vec<AtomicBool>>,
+}
+
+/// Bootstrap the mesh for party `me`: bind `0.0.0.0:<roster port>`, dial
+/// every higher id (retrying until `timeout`), accept every lower id,
+/// and handshake each link in both directions.
+pub fn connect_mesh(roster: &Roster, me: usize, timeout: Duration) -> Result<TcpTransport> {
+    let port = roster.port_of(me)?;
+    let listener = TcpListener::bind(("0.0.0.0", port))
+        .with_context(|| format!("party {me}: binding 0.0.0.0:{port}"))?;
+    connect_mesh_with_listener(roster, me, listener, timeout)
+}
+
+/// [`connect_mesh`] with a caller-supplied listener — lets tests bind
+/// `127.0.0.1:0` first and build the roster from the actual ports, so
+/// there is no reserve-then-rebind race.
+pub fn connect_mesh_with_listener(
+    roster: &Roster,
+    me: usize,
+    listener: TcpListener,
+    timeout: Duration,
+) -> Result<TcpTransport> {
+    let n = roster.n_parties();
+    if n < 2 {
+        bail!("a mesh needs at least 2 parties (roster has {n})");
+    }
+    if me >= n {
+        bail!("party id {me} outside the {n}-party roster");
+    }
+    let deadline = Instant::now() + timeout;
+    let mut streams: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+
+    // Dial every higher id. Their listeners bind before they dial, so
+    // the connects land in their accept backlog even while they are
+    // still dialing — no bootstrap ordering deadlock.
+    for q in me + 1..n {
+        let addr = roster.addr_of(q);
+        // NB: `.map_err(.context(..))` rather than `.with_context(..)` —
+        // the vendored anyhow implements `Context` for std errors only
+        let mut s = connect_with_retry(addr, deadline)
+            .map_err(|e| e.context(format!("party {me}: dialing party {q} at {addr}")))?;
+        s.set_nodelay(true).ok();
+        write_handshake(&mut s, me, n)?;
+        s.set_read_timeout(Some(remaining(deadline)))?;
+        let peer = read_handshake(&mut s, n)
+            .map_err(|e| e.context(format!("party {me}: handshaking with {addr}")))?;
+        if peer != q {
+            bail!("roster addr {addr} answered as party {peer}, expected {q}");
+        }
+        s.set_read_timeout(None)?;
+        streams[q] = Some(s);
+    }
+
+    // Accept every lower id (they dial us).
+    listener
+        .set_nonblocking(true)
+        .context("setting listener nonblocking")?;
+    let mut got = 0;
+    while got < me {
+        match listener.accept() {
+            Ok((mut s, peer_addr)) => {
+                s.set_nonblocking(false)?;
+                s.set_nodelay(true).ok();
+                // short handshake window so a silent or garbage inbound
+                // connection (port scanner, health check) is dropped and
+                // accepting continues, instead of aborting the mesh
+                s.set_read_timeout(Some(remaining(deadline).min(Duration::from_secs(5))))?;
+                let peer = match read_handshake(&mut s, n) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        eprintln!("party {me}: rejecting inbound {peer_addr}: {e}");
+                        continue;
+                    }
+                };
+                if peer >= me {
+                    eprintln!(
+                        "party {me}: rejecting party {peer} dialing in (lower ids dial higher)"
+                    );
+                    continue;
+                }
+                if streams[peer].is_some() {
+                    eprintln!("party {me}: rejecting duplicate connection from party {peer}");
+                    continue;
+                }
+                if let Err(e) = write_handshake(&mut s, me, n) {
+                    // the peer vanished mid-handshake; its restart will
+                    // dial in again within the deadline
+                    eprintln!("party {me}: peer {peer} dropped during handshake: {e}");
+                    continue;
+                }
+                s.set_read_timeout(None)?;
+                streams[peer] = Some(s);
+                got += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "party {me}: timed out waiting for inbound connections ({got}/{me} arrived)"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => bail!("party {me}: accepting peer connection: {e}"),
+        }
+    }
+
+    // One reader thread per link feeds a single inbox channel, mirroring
+    // the in-process mesh's mpsc fan-in.
+    let (tx, inbox) = channel::<Frame>();
+    let dead: Arc<Vec<AtomicBool>> = Arc::new((0..n).map(|_| AtomicBool::new(false)).collect());
+    let mut readers = Vec::with_capacity(n.saturating_sub(1));
+    for (peer, s) in streams.iter().enumerate() {
+        if let Some(s) = s {
+            let rs = s.try_clone().context("cloning stream for reader")?;
+            let txc = tx.clone();
+            let flags = dead.clone();
+            readers.push(std::thread::spawn(move || {
+                read_frames(peer, rs, txc);
+                // all frames are in the channel by now, so a recv that
+                // drains the channel and still sees this flag knows the
+                // peer is truly gone
+                flags[peer].store(true, Ordering::Release);
+            }));
+        }
+    }
+    drop(tx); // inbox closes when the last reader exits
+
+    Ok(TcpTransport {
+        id: me,
+        n,
+        writers: streams,
+        inbox,
+        pending: VecDeque::new(),
+        stats: Arc::new(NetStats::new(n)),
+        readers,
+        dead,
+    })
+}
+
+fn remaining(deadline: Instant) -> Duration {
+    deadline
+        .saturating_duration_since(Instant::now())
+        .max(Duration::from_millis(100))
+}
+
+fn connect_with_retry(addr: &str, deadline: Instant) -> Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    bail!("{e} (gave up after the connect timeout)");
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn write_handshake(s: &mut TcpStream, me: usize, n: usize) -> Result<()> {
+    let mut buf = [0u8; 8];
+    buf[..4].copy_from_slice(HS_MAGIC);
+    buf[4..6].copy_from_slice(&(me as u16).to_le_bytes());
+    buf[6..8].copy_from_slice(&(n as u16).to_le_bytes());
+    s.write_all(&buf).context("writing handshake")?;
+    Ok(())
+}
+
+fn read_handshake(s: &mut TcpStream, n: usize) -> Result<usize> {
+    let mut buf = [0u8; 8];
+    s.read_exact(&mut buf).context("reading handshake")?;
+    if &buf[..4] != HS_MAGIC {
+        bail!("peer is not an EFMVFL party (bad handshake magic)");
+    }
+    let id = u16::from_le_bytes([buf[4], buf[5]]) as usize;
+    let peer_n = u16::from_le_bytes([buf[6], buf[7]]) as usize;
+    if peer_n != n {
+        bail!("roster size mismatch: peer expects {peer_n} parties, we expect {n}");
+    }
+    if id >= n {
+        bail!("peer claims party id {id}, outside the {n}-party roster");
+    }
+    Ok(id)
+}
+
+/// Per-link reader: decode frames into the shared inbox until EOF,
+/// socket shutdown, corruption, or the transport being dropped.
+fn read_frames(peer: usize, mut stream: TcpStream, tx: Sender<Frame>) {
+    loop {
+        let mut head = [0u8; 8];
+        if stream.read_exact(&mut head).is_err() {
+            return; // EOF or shutdown — normal end of run
+        }
+        let from = u16::from_le_bytes([head[0], head[1]]) as usize;
+        let tag_len = u16::from_le_bytes([head[2], head[3]]) as usize;
+        let body_len = u32::from_le_bytes([head[4], head[5], head[6], head[7]]) as usize;
+        if from != peer || tag_len > MAX_TAG_LEN || body_len > MAX_BODY_LEN {
+            // name the corruption before dropping the link, so the
+            // waiting side's "disconnected" panic is diagnosable
+            let why = format!("from={from} tag_len={tag_len} body_len={body_len}");
+            eprintln!("dropping link to party {peer}: corrupt frame header ({why})");
+            return;
+        }
+        let mut tag_buf = vec![0u8; tag_len];
+        if stream.read_exact(&mut tag_buf).is_err() {
+            return;
+        }
+        let Ok(tag) = String::from_utf8(tag_buf) else {
+            eprintln!("dropping link to party {peer}: non-UTF-8 frame tag");
+            return;
+        };
+        let mut bytes = vec![0u8; body_len];
+        if stream.read_exact(&mut bytes).is_err() {
+            return;
+        }
+        if tx.send(Frame { from, tag, bytes }).is_err() {
+            return; // transport dropped
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn n_parties(&self) -> usize {
+        self.n
+    }
+
+    fn stats(&self) -> &Arc<NetStats> {
+        &self.stats
+    }
+
+    fn deliver(&mut self, to: usize, tag: &str, bytes: Vec<u8>) {
+        assert!(
+            tag.len() <= MAX_TAG_LEN && bytes.len() <= MAX_BODY_LEN,
+            "frame too large for the wire format"
+        );
+        let id = self.id;
+        let s = self.writers[to]
+            .as_mut()
+            .unwrap_or_else(|| panic!("party {id} sending to itself"));
+        // one write_all per frame: header + tag + body coalesced so the
+        // kernel sees whole frames (nodelay is on)
+        let mut buf = Vec::with_capacity(8 + tag.len() + bytes.len());
+        buf.extend_from_slice(&(id as u16).to_le_bytes());
+        buf.extend_from_slice(&(tag.len() as u16).to_le_bytes());
+        buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        buf.extend_from_slice(tag.as_bytes());
+        buf.extend_from_slice(&bytes);
+        s.write_all(&buf).expect("peer hung up");
+    }
+
+    fn recv(&mut self, from: usize, tag: &str) -> Payload {
+        if let Some(p) = take_pending(&mut self.pending, from, tag) {
+            return p;
+        }
+        // Poll with a short timeout: unlike the in-process mesh, a dead
+        // peer here does not close the inbox (other links keep it open),
+        // so liveness is checked per-peer via the reader-set flags.
+        loop {
+            match self.inbox.recv_timeout(Duration::from_millis(100)) {
+                Ok(f) => {
+                    if f.from == from && f.tag == tag {
+                        return Payload::decode(&f.bytes);
+                    }
+                    self.pending.push_back(f);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if self.dead[from].load(Ordering::Acquire) {
+                        // The reader enqueues every frame *before* it
+                        // raises the flag, so drain what is buffered
+                        // before giving up — a peer that sent its last
+                        // frame and exited cleanly is not a lost message.
+                        while let Ok(f) = self.inbox.try_recv() {
+                            self.pending.push_back(f);
+                        }
+                        match take_pending(&mut self.pending, from, tag) {
+                            Some(p) => return p,
+                            None => panic!(
+                                "party {from} disconnected while party {} waited for {tag:?}",
+                                self.id
+                            ),
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    panic!(
+                        "all peers disconnected while party {} waited for {tag:?} from {from}",
+                        self.id
+                    );
+                }
+            }
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // Shut the sockets down so our readers (blocked in read) and the
+        // peers' readers both observe EOF instead of hanging.
+        for w in self.writers.iter().flatten() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::full_mesh;
+    use std::thread;
+
+    /// Bind `n` loopback listeners on ephemeral ports and bootstrap a
+    /// mesh over them (one thread per party, as the bootstrap blocks).
+    fn local_mesh(n: usize) -> Vec<TcpTransport> {
+        let mut listeners = Vec::with_capacity(n);
+        let mut addrs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            addrs.push(format!("127.0.0.1:{}", l.local_addr().unwrap().port()));
+            listeners.push(l);
+        }
+        let roster = Roster::new(addrs);
+        let mut handles = Vec::with_capacity(n);
+        for (me, l) in listeners.into_iter().enumerate() {
+            let roster = roster.clone();
+            handles.push(thread::spawn(move || {
+                connect_mesh_with_listener(&roster, me, l, Duration::from_secs(10)).unwrap()
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn tcp_two_party_ping_pong() {
+        let mut t = local_mesh(2);
+        let mut b = t.pop().unwrap();
+        let mut a = t.pop().unwrap();
+        let h = thread::spawn(move || {
+            let p = b.recv(0, "ping");
+            assert_eq!(p, Payload::Ring(vec![1, 2, 3]));
+            b.send(0, "pong", &Payload::Scalar(9.5));
+            b
+        });
+        a.send(1, "ping", &Payload::Ring(vec![1, 2, 3]));
+        assert_eq!(a.recv(1, "pong"), Payload::Scalar(9.5));
+        let b = h.join().unwrap();
+        // each side counts only its own outgoing row
+        assert_eq!(a.stats().total_msgs(), 1);
+        assert_eq!(b.stats().total_msgs(), 1);
+        assert_eq!(b.stats().link_bytes(0, 1), 0);
+        assert!(b.stats().link_bytes(1, 0) > 8);
+    }
+
+    #[test]
+    fn tcp_out_of_order_delivery_buffered() {
+        let mut t = local_mesh(2);
+        let mut b = t.pop().unwrap();
+        let mut a = t.pop().unwrap();
+        a.send(1, "first", &Payload::Flag(true));
+        a.send(1, "second", &Payload::Flag(false));
+        assert_eq!(b.recv(0, "second"), Payload::Flag(false));
+        assert_eq!(b.recv(0, "first"), Payload::Flag(true));
+    }
+
+    #[test]
+    fn tcp_three_party_broadcast_and_uncounted_control() {
+        let mut t = local_mesh(3);
+        let mut c = t.pop().unwrap();
+        let mut b = t.pop().unwrap();
+        let mut a = t.pop().unwrap();
+        a.broadcast("hello", &Payload::Scalar(1.0));
+        assert_eq!(b.recv(0, "hello"), Payload::Scalar(1.0));
+        assert_eq!(c.recv(0, "hello"), Payload::Scalar(1.0));
+        assert_eq!(a.stats().total_msgs(), 2);
+        // control plane moves bytes without touching the counters
+        b.deliver(2, "ctl", Payload::Ring(vec![7]).encode());
+        assert_eq!(c.recv(1, "ctl"), Payload::Ring(vec![7]));
+        assert_eq!(b.stats().total_msgs(), 0);
+    }
+
+    #[test]
+    fn tcp_accounting_matches_in_process_formula() {
+        // the same send over both transports must count the same bytes
+        let (mut eps, stats) = full_mesh(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let payload = Payload::RingPair(vec![1, 2, 3], vec![9]);
+        e0.send(1, "tagged", &payload);
+        assert_eq!(e1.recv(0, "tagged"), payload);
+
+        let mut t = local_mesh(2);
+        let mut b = t.pop().unwrap();
+        let mut a = t.pop().unwrap();
+        a.send(1, "tagged", &payload);
+        assert_eq!(b.recv(0, "tagged"), payload);
+        assert_eq!(a.stats().link_bytes(0, 1), stats.link_bytes(0, 1));
+        assert_eq!(a.stats().total_msgs(), 1);
+    }
+
+    #[test]
+    fn tcp_dropped_peer_fails_loudly() {
+        let mut t = local_mesh(2);
+        let b = t.pop().unwrap();
+        let mut a = t.pop().unwrap();
+        drop(b); // shuts both sockets down
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            a.recv(1, "never-coming")
+        }));
+        assert!(result.is_err(), "recv from a dead peer must panic");
+    }
+
+    #[test]
+    fn tcp_dead_peer_detected_in_larger_mesh() {
+        // a dead peer must fail loudly even while OTHER links keep the
+        // inbox channel open (regression: recv used to hang for n >= 3)
+        let mut t = local_mesh(3);
+        let c = t.pop().unwrap();
+        let b = t.pop().unwrap();
+        let mut a = t.pop().unwrap();
+        drop(c); // party 2 dies; the a<->b link stays alive
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            a.recv(2, "never-coming")
+        }));
+        assert!(result.is_err(), "recv from a dead peer must panic, not hang");
+        drop(b);
+    }
+
+    #[test]
+    fn stray_inbound_connection_rejected_mesh_still_forms() {
+        // a garbage client hitting the listener must not abort bootstrap
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr1 = format!("127.0.0.1:{}", l1.local_addr().unwrap().port());
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr0 = format!("127.0.0.1:{}", l0.local_addr().unwrap().port());
+        let roster = Roster::new(vec![addr0, addr1.clone()]);
+        // stray client dials party 1 first and speaks garbage
+        let mut garbage = TcpStream::connect(addr1.as_str()).unwrap();
+        garbage.write_all(b"BOGUS---").unwrap();
+        let r1 = roster.clone();
+        let h1 = thread::spawn(move || {
+            connect_mesh_with_listener(&r1, 1, l1, Duration::from_secs(15)).unwrap()
+        });
+        let r0 = roster.clone();
+        let h0 = thread::spawn(move || {
+            connect_mesh_with_listener(&r0, 0, l0, Duration::from_secs(15)).unwrap()
+        });
+        let mut b = h1.join().unwrap();
+        let mut a = h0.join().unwrap();
+        a.send(1, "ok", &Payload::Flag(true));
+        assert_eq!(b.recv(0, "ok"), Payload::Flag(true));
+        drop(garbage);
+    }
+
+    #[test]
+    fn handshake_rejects_garbage() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let h = thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET / HTTP/1.1\r\n").unwrap();
+            s
+        });
+        let (mut s, _) = l.accept().unwrap();
+        let err = read_handshake(&mut s, 2);
+        assert!(err.is_err());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn roster_helpers() {
+        let r = Roster::loopback(3, 9000);
+        assert_eq!(r.n_parties(), 3);
+        assert_eq!(r.addr_of(2), "127.0.0.1:9002");
+        assert_eq!(r.port_of(1).unwrap(), 9001);
+        assert!(Roster::new(vec!["nope".into()]).port_of(0).is_err());
+    }
+}

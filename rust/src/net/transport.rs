@@ -1,9 +1,13 @@
-//! In-process full-mesh transport between party threads.
+//! The [`Transport`] abstraction and the in-process full-mesh
+//! implementation.
 //!
-//! Every party owns an [`Endpoint`]: one inbox (mpsc receiver) plus
-//! senders to every peer. Messages carry `(from, tag, encoded payload)`;
-//! `recv` matches on `(from, tag)` and buffers out-of-order arrivals, so
-//! protocol code can be written as straight-line request/response logic.
+//! Every party owns one transport endpoint: `send`/`recv` address peers
+//! by `(from, tag)`, out-of-order arrivals are buffered, and every send
+//! records its exact wire size into a shared [`NetStats`] sink — so
+//! protocol code can be written as straight-line request/response logic
+//! that is oblivious to whether its peers are threads in this process
+//! ([`Endpoint`], mpsc channels) or other OS processes across real TCP
+//! sockets ([`super::tcp::TcpTransport`]).
 
 use super::message::Payload;
 use super::stats::NetStats;
@@ -12,16 +16,70 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
 /// A framed message on the wire.
-struct Frame {
-    from: usize,
-    tag: String,
-    bytes: Vec<u8>,
+pub(crate) struct Frame {
+    pub(crate) from: usize,
+    pub(crate) tag: String,
+    pub(crate) bytes: Vec<u8>,
 }
 
-/// One party's connection to the mesh.
+/// Party-to-party transport: the narrow waist between the protocol layer
+/// and the wire.
+///
+/// Implementations must preserve two invariants the protocol layer
+/// relies on:
+///
+/// 1. **Per-link FIFO**: two messages with the same `(from, tag)` arrive
+///    in send order.
+/// 2. **Exact accounting**: [`Transport::send`] records
+///    `encoded_len + 8 + tag_len` bytes on the `(self, to)` link of the
+///    stats sink — the same formula on every implementation, so comm
+///    numbers are comparable (and testably identical) across transports.
+pub trait Transport: Send {
+    /// This party's id (0 = guest C, 1.. = hosts B_i).
+    fn id(&self) -> usize;
+
+    /// Number of parties in the mesh.
+    fn n_parties(&self) -> usize;
+
+    /// Stats sink (also used for offline accounting from protocol code).
+    /// In-process meshes share one sink across all parties; a socket
+    /// transport counts locally and rows are gathered at the end of a
+    /// run (see [`NetStats::export_row`]).
+    fn stats(&self) -> &Arc<NetStats>;
+
+    /// Deliver pre-encoded payload bytes to `to` **without touching the
+    /// byte counters** — the control-plane escape hatch (key exchange,
+    /// end-of-run stats gathering) whose traffic the paper's comm tables
+    /// do not count. Protocol code must use [`Transport::send`].
+    fn deliver(&mut self, to: usize, tag: &str, bytes: Vec<u8>);
+
+    /// Blocking receive of the next message from `from` tagged `tag`
+    /// (out-of-order frames are buffered, not lost).
+    fn recv(&mut self, from: usize, tag: &str) -> Payload;
+
+    /// Serialize and send `payload` to party `to`, recording its exact
+    /// wire size (framing overhead: 2 ids + tag length, like a slim TCP
+    /// app header).
+    fn send(&mut self, to: usize, tag: &str, payload: &Payload) {
+        let bytes = payload.encode();
+        self.stats().record(self.id(), to, bytes.len() + 8 + tag.len());
+        self.deliver(to, tag, bytes);
+    }
+
+    /// Broadcast to every peer.
+    fn broadcast(&mut self, tag: &str, payload: &Payload) {
+        for to in 0..self.n_parties() {
+            if to != self.id() {
+                self.send(to, tag, payload);
+            }
+        }
+    }
+}
+
+/// One party's connection to the in-process mesh.
 pub struct Endpoint {
     /// This party's id (0 = guest C, 1.. = hosts B_i).
-    pub id: usize,
+    id: usize,
     senders: Vec<Option<Sender<Frame>>>,
     inbox: Receiver<Frame>,
     /// Arrived-but-not-yet-requested frames.
@@ -29,7 +87,8 @@ pub struct Endpoint {
     stats: Arc<NetStats>,
 }
 
-/// Build a fully connected mesh of `n` endpoints sharing one stats sink.
+/// Build a fully connected in-process mesh of `n` endpoints sharing one
+/// stats sink.
 pub fn full_mesh(n: usize) -> (Vec<Endpoint>, Arc<NetStats>) {
     let stats = Arc::new(NetStats::new(n));
     let mut txs: Vec<Sender<Frame>> = Vec::with_capacity(n);
@@ -57,13 +116,55 @@ pub fn full_mesh(n: usize) -> (Vec<Endpoint>, Arc<NetStats>) {
     (endpoints, stats)
 }
 
-impl Endpoint {
-    /// Serialize and send `payload` to party `to`, recording its exact
-    /// wire size.
-    pub fn send(&self, to: usize, tag: &str, payload: &Payload) {
-        let bytes = payload.encode();
-        // framing overhead: 2 ids + tag length, like a slim TCP app header
-        self.stats.record(self.id, to, bytes.len() + 8 + tag.len());
+/// Pop the buffered `(from, tag)` frame if one already arrived — the
+/// matching rule shared by every transport implementation.
+pub(crate) fn take_pending(
+    pending: &mut VecDeque<Frame>,
+    from: usize,
+    tag: &str,
+) -> Option<Payload> {
+    let pos = pending.iter().position(|f| f.from == from && f.tag == tag)?;
+    let f = pending.remove(pos).unwrap();
+    Some(Payload::decode(&f.bytes))
+}
+
+/// Pull the next `(from, tag)` frame out of `pending`/`inbox`, blocking
+/// on the channel (the in-process receive path; the TCP transport adds
+/// per-peer liveness checks on top of [`take_pending`]).
+pub(crate) fn recv_matching(
+    pending: &mut VecDeque<Frame>,
+    inbox: &Receiver<Frame>,
+    from: usize,
+    tag: &str,
+) -> Payload {
+    if let Some(p) = take_pending(pending, from, tag) {
+        return p;
+    }
+    loop {
+        let f = inbox
+            .recv()
+            .expect("all peers disconnected while waiting");
+        if f.from == from && f.tag == tag {
+            return Payload::decode(&f.bytes);
+        }
+        pending.push_back(f);
+    }
+}
+
+impl Transport for Endpoint {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn n_parties(&self) -> usize {
+        self.senders.len()
+    }
+
+    fn stats(&self) -> &Arc<NetStats> {
+        &self.stats
+    }
+
+    fn deliver(&mut self, to: usize, tag: &str, bytes: Vec<u8>) {
         let tx = self.senders[to]
             .as_ref()
             .unwrap_or_else(|| panic!("party {} sending to itself", self.id));
@@ -71,47 +172,8 @@ impl Endpoint {
             .expect("peer hung up");
     }
 
-    /// Blocking receive of the next message from `from` tagged `tag`
-    /// (out-of-order frames are buffered, not lost).
-    pub fn recv(&mut self, from: usize, tag: &str) -> Payload {
-        // check the buffer first
-        if let Some(pos) = self
-            .pending
-            .iter()
-            .position(|f| f.from == from && f.tag == tag)
-        {
-            let f = self.pending.remove(pos).unwrap();
-            return Payload::decode(&f.bytes);
-        }
-        loop {
-            let f = self
-                .inbox
-                .recv()
-                .expect("all peers disconnected while waiting");
-            if f.from == from && f.tag == tag {
-                return Payload::decode(&f.bytes);
-            }
-            self.pending.push_back(f);
-        }
-    }
-
-    /// Broadcast to every peer.
-    pub fn broadcast(&self, tag: &str, payload: &Payload) {
-        for to in 0..self.senders.len() {
-            if to != self.id {
-                self.send(to, tag, payload);
-            }
-        }
-    }
-
-    /// Number of parties in the mesh.
-    pub fn n_parties(&self) -> usize {
-        self.senders.len()
-    }
-
-    /// Shared stats sink (for offline accounting from protocol code).
-    pub fn stats(&self) -> &Arc<NetStats> {
-        &self.stats
+    fn recv(&mut self, from: usize, tag: &str) -> Payload {
+        recv_matching(&mut self.pending, &self.inbox, from, tag)
     }
 }
 
@@ -143,7 +205,7 @@ mod tests {
     fn out_of_order_delivery_buffered() {
         let (mut eps, _) = full_mesh(2);
         let mut b = eps.pop().unwrap();
-        let a = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
         a.send(1, "first", &Payload::Flag(true));
         a.send(1, "second", &Payload::Flag(false));
         // receive in reverse order
@@ -156,7 +218,7 @@ mod tests {
         let (mut eps, stats) = full_mesh(3);
         let mut c = eps.pop().unwrap();
         let mut b = eps.pop().unwrap();
-        let a = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
         a.broadcast("hello", &Payload::Scalar(1.0));
         assert_eq!(b.recv(0, "hello"), Payload::Scalar(1.0));
         assert_eq!(c.recv(0, "hello"), Payload::Scalar(1.0));
@@ -180,7 +242,7 @@ mod tests {
     #[test]
     fn send_to_self_rejected() {
         let (mut eps, _) = full_mesh(2);
-        let a = eps.remove(0);
+        let mut a = eps.remove(0);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             a.send(0, "loop", &Payload::Flag(true))
         }));
@@ -191,12 +253,24 @@ mod tests {
     fn same_tag_fifo_per_link() {
         let (mut eps, _) = full_mesh(2);
         let mut b = eps.pop().unwrap();
-        let a = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
         for i in 0..5u64 {
             a.send(1, "seq", &Payload::Ring(vec![i]));
         }
         for i in 0..5u64 {
             assert_eq!(b.recv(0, "seq"), Payload::Ring(vec![i]));
         }
+    }
+
+    #[test]
+    fn deliver_is_uncounted() {
+        // control-plane traffic must not pollute the comm tables
+        let (mut eps, stats) = full_mesh(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.deliver(1, "ctl", Payload::Flag(true).encode());
+        assert_eq!(b.recv(0, "ctl"), Payload::Flag(true));
+        assert_eq!(stats.total_bytes(), 0);
+        assert_eq!(stats.total_msgs(), 0);
     }
 }

@@ -17,6 +17,7 @@ use super::mpc_online::mpc_mul;
 use super::ProtoCtx;
 use crate::glm::GlmKind;
 use crate::mpc::share::Share;
+use crate::net::Transport;
 
 /// Inputs to Protocol 2, as produced by Protocol 1 on the CPs.
 pub struct GradOpInputs {
@@ -42,7 +43,7 @@ pub struct GradOpOutputs {
 
 /// Chain per-party shares of `e^{c·z_p}` into a share of
 /// `e^{c·WX} = Π_p e^{c·z_p}` (k−1 Beaver rounds between the CPs).
-fn chain_exps(ctx: &mut ProtoCtx, parts: &[Share], tag: &str) -> Share {
+fn chain_exps<T: Transport>(ctx: &mut ProtoCtx<T>, parts: &[Share], tag: &str) -> Share {
     assert!(!parts.is_empty(), "exponential chain needs shares");
     let mut prod = parts[0].clone();
     for (i, e) in parts.iter().enumerate().skip(1) {
@@ -52,8 +53,8 @@ fn chain_exps(ctx: &mut ProtoCtx, parts: &[Share], tag: &str) -> Share {
 }
 
 /// Run Protocol 2 on a CP. `first` arithmetic-role handling is internal.
-pub fn protocol2_grad_operator(
-    ctx: &mut ProtoCtx,
+pub fn protocol2_grad_operator<T: Transport>(
+    ctx: &mut ProtoCtx<T>,
     kind: GlmKind,
     inputs: &GradOpInputs,
 ) -> GradOpOutputs {

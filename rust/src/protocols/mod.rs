@@ -38,13 +38,16 @@ pub mod secure_loss;
 use crate::crypto::paillier::{Keypair, PublicKey};
 use crate::crypto::prng::ChaChaRng;
 use crate::mpc::beaver::TripleDealer;
-use crate::net::Endpoint;
+use crate::net::{Endpoint, Transport};
 use std::sync::Arc;
 
-/// Per-party protocol context for one training run.
-pub struct ProtoCtx {
-    /// This party's mesh endpoint (`id` 0 = C, 1.. = B_i).
-    pub ep: Endpoint,
+/// Per-party protocol context for one training run, generic over the
+/// transport (in-process [`Endpoint`] mesh or a real-socket
+/// [`crate::net::tcp::TcpTransport`] — protocol code cannot tell the
+/// difference).
+pub struct ProtoCtx<T: Transport = Endpoint> {
+    /// This party's mesh endpoint (`id()` 0 = C, 1.. = B_i).
+    pub ep: T,
     /// Party-local randomness.
     pub rng: ChaChaRng,
     /// This party's Paillier key pair.
@@ -60,26 +63,26 @@ pub struct ProtoCtx {
     pub run_seed: u64,
 }
 
-impl ProtoCtx {
+impl<T: Transport> ProtoCtx<T> {
     /// True if this party is one of the current computing parties.
     pub fn is_cp(&self) -> bool {
-        self.ep.id == self.cp.0 || self.ep.id == self.cp.1
+        self.ep.id() == self.cp.0 || self.ep.id() == self.cp.1
     }
 
     /// True if this party is the *first* CP (the `party_is_first` side of
     /// the MPC share arithmetic).
     pub fn is_first_cp(&self) -> bool {
-        self.ep.id == self.cp.0
+        self.ep.id() == self.cp.0
     }
 
     /// The other computing party (panics if self is not a CP).
     pub fn cp_peer(&self) -> usize {
-        if self.ep.id == self.cp.0 {
+        if self.ep.id() == self.cp.0 {
             self.cp.1
-        } else if self.ep.id == self.cp.1 {
+        } else if self.ep.id() == self.cp.1 {
             self.cp.0
         } else {
-            panic!("party {} is not a computing party", self.ep.id)
+            panic!("party {} is not a computing party", self.ep.id())
         }
     }
 

@@ -9,13 +9,13 @@ use super::ProtoCtx;
 use crate::mpc::beaver::{mul_combine, mul_open};
 use crate::mpc::ring;
 use crate::mpc::share::Share;
-use crate::net::Payload;
+use crate::net::{Payload, Transport};
 
-/// Endpoint-level Beaver multiplication between two parties holding
+/// Transport-level Beaver multiplication between two parties holding
 /// shares of `x`, `y` (also used by the SS baselines, which don't carry a
 /// [`ProtoCtx`]). `first` designates the arithmetic "party 0" role.
-pub fn mul_over_wire(
-    ep: &mut crate::net::Endpoint,
+pub fn mul_over_wire<T: Transport>(
+    ep: &mut T,
     peer: usize,
     first: bool,
     dealer: &mut crate::mpc::beaver::TripleDealer,
@@ -43,7 +43,7 @@ pub fn mul_over_wire(
 ///
 /// Panics if called by a non-CP. `tag` must be unique per multiplication
 /// within an iteration.
-pub fn mpc_mul(ctx: &mut ProtoCtx, x: &Share, y: &Share, tag: &str) -> Share {
+pub fn mpc_mul<T: Transport>(ctx: &mut ProtoCtx<T>, x: &Share, y: &Share, tag: &str) -> Share {
     assert!(ctx.is_cp(), "mpc_mul called on a non-computing party");
     let first = ctx.is_first_cp();
     let peer = ctx.cp_peer();

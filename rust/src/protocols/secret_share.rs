@@ -8,19 +8,19 @@
 use super::ProtoCtx;
 use crate::mpc::ring::{self, Elem};
 use crate::mpc::share::Share;
-use crate::net::Payload;
+use crate::net::{Payload, Transport};
 
 /// Run Protocol 1 for the vector `vals` owned by party `owner`.
 ///
 /// `vals` must be `Some` on the owner (ring-encoded, single fixed-point
 /// scale) and is ignored elsewhere. `tag` namespaces concurrent shares.
-pub fn protocol1_share(
-    ctx: &mut ProtoCtx,
+pub fn protocol1_share<T: Transport>(
+    ctx: &mut ProtoCtx<T>,
     tag: &str,
     owner: usize,
     vals: Option<&[Elem]>,
 ) -> Option<Share> {
-    let me = ctx.ep.id;
+    let me = ctx.ep.id();
     let (cp_a, cp_b) = ctx.cp;
 
     if me == owner {
@@ -47,8 +47,8 @@ pub fn protocol1_share(
 /// Share every party's vector under a per-owner tag and, on CPs, return
 /// the *sum of shares* (i.e. a share of `Σ_p Z_p` — the aggregation every
 /// GLM needs for `WX = Σ_p W_p X_p`).
-pub fn share_and_sum(
-    ctx: &mut ProtoCtx,
+pub fn share_and_sum<T: Transport>(
+    ctx: &mut ProtoCtx<T>,
     tag_prefix: &str,
     own_vals: &[Elem],
 ) -> Option<Share> {
@@ -56,7 +56,7 @@ pub fn share_and_sum(
     let mut acc: Option<Share> = None;
     for p in 0..n {
         let tag = format!("{tag_prefix}:{p}");
-        let vals = if p == ctx.ep.id { Some(own_vals) } else { None };
+        let vals = if p == ctx.ep.id() { Some(own_vals) } else { None };
         if let Some(s) = protocol1_share(ctx, &tag, p, vals) {
             acc = Some(match acc {
                 None => s,

@@ -30,7 +30,7 @@ use crate::crypto::he_ops;
 use crate::linalg::Matrix;
 use crate::mpc::ring::Elem;
 use crate::mpc::share::Share;
-use crate::net::Payload;
+use crate::net::{Payload, Transport};
 
 /// Exact integer `X·s` (row side) with the share vector read as signed
 /// i64 — the CAESAR-style baselines' `X·⟨w⟩` local term.
@@ -83,12 +83,12 @@ fn combine_to_gradient(parts: &[Vec<i128>], m: usize) -> Vec<f64> {
 /// Run Protocol 3. `x_own` is this party's feature block for the current
 /// batch; `md_share` is `Some` on CPs. Returns this party's gradient
 /// (length `x_own.cols`).
-pub fn protocol3_gradients(
-    ctx: &mut ProtoCtx,
+pub fn protocol3_gradients<T: Transport>(
+    ctx: &mut ProtoCtx<T>,
     x_own: &Matrix,
     md_share: Option<&Share>,
 ) -> Vec<f64> {
-    let me = ctx.ep.id;
+    let me = ctx.ep.id();
     let n = ctx.ep.n_parties();
     let m = x_own.rows;
     let (cp_a, cp_b) = ctx.cp;

@@ -18,7 +18,7 @@ use super::ProtoCtx;
 use crate::glm::GlmKind;
 use crate::mpc::ring;
 use crate::mpc::share::Share;
-use crate::net::Payload;
+use crate::net::{Payload, Transport};
 
 /// CP-side inputs (all shares at single fixed-point scale).
 pub struct LossInputs {
@@ -34,14 +34,14 @@ pub struct LossInputs {
 /// Run Protocol 4. `inputs` is `Some` on CPs. `lny_sum` is `Σ ln(yᵢ!)`,
 /// computed locally by C from its plaintext labels (0.0 elsewhere /
 /// non-Poisson). Returns the loss on party C, `None` elsewhere.
-pub fn protocol4_loss(
-    ctx: &mut ProtoCtx,
+pub fn protocol4_loss<T: Transport>(
+    ctx: &mut ProtoCtx<T>,
     kind: GlmKind,
     inputs: Option<&LossInputs>,
     m: usize,
     lny_sum: f64,
 ) -> Option<f64> {
-    let me = ctx.ep.id;
+    let me = ctx.ep.id();
     const C: usize = 0;
 
     // CP side: build scalar shares [s1, s2] of the two aggregates.

@@ -1,0 +1,123 @@
+//! Distributed-mode acceptance: a full 3-party LR training over real
+//! 127.0.0.1 TCP sockets must produce *identical* weights (same seed)
+//! and *identical* online byte totals as the in-process mesh — the
+//! bit-compatibility contract of `coordinator::distributed`.
+//!
+//! Each party here is a thread owning its own `TcpTransport` (its own
+//! listener, sockets, reader threads and local `NetStats`), so the only
+//! thing shared with its peers is the loopback wire — the same isolation
+//! a multi-process run has. The CLI's `run-distributed` additionally
+//! covers the real fork/exec path.
+
+use efmvfl::coordinator::{distributed, inference, train, TrainConfig};
+use efmvfl::data::{split_vertical, synthetic};
+use efmvfl::glm::GlmKind;
+use efmvfl::net::tcp::{connect_mesh_with_listener, Roster, TcpTransport};
+use std::net::TcpListener;
+use std::time::Duration;
+
+/// Bind `n` loopback listeners on ephemeral ports and hand each party
+/// its listener plus the agreed roster (no reserve-then-rebind race).
+fn loopback_listeners(n: usize) -> (Roster, Vec<TcpListener>) {
+    let mut listeners = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(format!("127.0.0.1:{}", l.local_addr().unwrap().port()));
+        listeners.push(l);
+    }
+    (Roster::new(addrs), listeners)
+}
+
+fn bootstrap(roster: &Roster, me: usize, listener: TcpListener) -> TcpTransport {
+    connect_mesh_with_listener(roster, me, listener, Duration::from_secs(30))
+        .expect("mesh bootstrap")
+}
+
+#[test]
+fn three_party_lr_over_tcp_matches_in_process() {
+    let n = 3;
+    let mut data = synthetic::credit_default_like(150, 9, 42);
+    data.standardize();
+    let split = split_vertical(&data, n);
+    let cfg = TrainConfig::logistic(n)
+        .with_key_bits(256)
+        .with_iterations(3)
+        .with_batch(Some(64))
+        .with_seed(11);
+
+    // reference: the in-process thread mesh
+    let inproc = train(&split, &cfg).expect("in-process train");
+
+    // distributed: one TcpTransport per party over real loopback sockets
+    let (roster, listeners) = loopback_listeners(n);
+    let mut handles = Vec::with_capacity(n);
+    for (p, listener) in listeners.into_iter().enumerate() {
+        let roster = roster.clone();
+        let cfg = cfg.clone();
+        let x = split.party_block(p).clone();
+        let y = (p == 0).then(|| split.y.clone());
+        handles.push(std::thread::spawn(move || {
+            let transport = bootstrap(&roster, p, listener);
+            distributed::train_party(transport, x, y, &cfg).expect("distributed train")
+        }));
+    }
+    let reports: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // identical weights, bit for bit, on every party
+    for (p, rep) in reports.iter().enumerate() {
+        assert_eq!(rep.party_id, p);
+        assert_eq!(
+            rep.weights, inproc.weights[p],
+            "party {p}: distributed weights diverged from the in-process mesh"
+        );
+    }
+    // identical loss curve on C
+    assert_eq!(reports[0].losses, inproc.losses);
+    assert_eq!(reports[0].iterations_run, inproc.iterations_run);
+
+    // identical communication accounting: party 0's gathered totals vs
+    // the in-process shared sink
+    let comm = reports[0].comm.as_ref().expect("party 0 gathers comm totals");
+    assert!(reports[1].comm.is_none() && reports[2].comm.is_none());
+    assert_eq!(comm.msgs, inproc.msgs, "message totals diverged");
+    assert_eq!(comm.comm_mb, inproc.comm_mb, "online byte totals diverged");
+    assert_eq!(comm.offline_mb, inproc.offline_mb, "offline byte totals diverged");
+    assert!(comm.total_bytes > 0);
+}
+
+#[test]
+fn federated_inference_over_tcp_matches_in_process() {
+    let n = 3;
+    let mut data = synthetic::credit_default_like(80, 9, 7);
+    data.standardize();
+    let split = split_vertical(&data, n);
+    let weights: Vec<Vec<f64>> = (0..n)
+        .map(|p| {
+            (0..split.party_block(p).cols)
+                .map(|j| 0.05 * (p as f64 + 1.0) * (j as f64 - 1.0))
+                .collect()
+        })
+        .collect();
+    let seed = 31;
+
+    let inproc = inference::predict(&split, &weights, GlmKind::Logistic, seed).unwrap();
+
+    let (roster, listeners) = loopback_listeners(n);
+    let mut handles = Vec::with_capacity(n);
+    for (p, listener) in listeners.into_iter().enumerate() {
+        let roster = roster.clone();
+        let x = split.party_block(p).clone();
+        let w = weights[p].clone();
+        handles.push(std::thread::spawn(move || {
+            let mut transport = bootstrap(&roster, p, listener);
+            inference::predict_party(&mut transport, &x, &w, GlmKind::Logistic, seed)
+                .expect("distributed predict")
+        }));
+    }
+    let reports: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let dist = reports[0].as_ref().expect("predictions surface at party 0");
+    assert!(reports[1].is_none() && reports[2].is_none());
+    assert_eq!(dist.predictions, inproc.predictions);
+    assert_eq!(dist.comm_mb, inproc.comm_mb);
+}
