@@ -19,25 +19,33 @@
 //! 0 = "10.0.0.1:7100"
 //! 1 = "10.0.0.2:7100"
 //! 2 = "10.0.0.3:7100"
+//!
+//! # online serving: gateway address + micro-batch flush policy
+//! [serve]
+//! gateway = "10.0.0.1:8100"
+//! max_batch = 64
+//! max_wait_ms = 5
 //! ```
 //!
-//! Only the `[roster]` section is meaningful; other section headers are
-//! ignored (kept for readability), as before.
+//! Only the `[roster]` and `[serve]` sections are meaningful; other
+//! section headers are ignored (kept for readability), as before.
 
 use super::TrainConfig;
 use crate::glm::GlmKind;
 use crate::net::tcp::Roster;
 use crate::protocols::CpSelection;
+use crate::serve::ServeConfig;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 
 /// Parse the TOML-subset text into key/value pairs. Keys inside a
-/// `[roster]` section come back prefixed `roster.`; all other sections
-/// leave keys bare (ignored headers, the pre-roster behavior).
+/// `[roster]` / `[serve]` section come back prefixed `roster.` /
+/// `serve.`; all other sections leave keys bare (ignored headers, the
+/// pre-roster behavior).
 pub fn parse_kv(text: &str) -> Result<HashMap<String, String>> {
     let mut out = HashMap::new();
-    let mut in_roster = false;
+    let mut section: Option<&str> = None;
     for (lineno, raw) in text.lines().enumerate() {
         // strip comments (naive: '#' outside quotes)
         let line = match raw.find('#') {
@@ -51,16 +59,22 @@ pub fn parse_kv(text: &str) -> Result<HashMap<String, String>> {
             continue;
         }
         if line.starts_with('[') && line.ends_with(']') {
-            in_roster = line[1..line.len() - 1].trim().eq_ignore_ascii_case("roster");
+            let name = line[1..line.len() - 1].trim();
+            section = if name.eq_ignore_ascii_case("roster") {
+                Some("roster")
+            } else if name.eq_ignore_ascii_case("serve") {
+                Some("serve")
+            } else {
+                None
+            };
             continue;
         }
         let (key, value) = line
             .split_once('=')
             .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
-        let key = if in_roster {
-            format!("roster.{}", key.trim())
-        } else {
-            key.trim().to_string()
+        let key = match section {
+            Some(prefix) => format!("{prefix}.{}", key.trim()),
+            None => key.trim().to_string(),
         };
         let mut value = value.trim().to_string();
         if value.starts_with('"') && value.ends_with('"') && value.len() >= 2 {
@@ -104,6 +118,33 @@ pub fn roster_of(kv: &HashMap<String, String>) -> Result<Option<Roster>> {
     Ok(Some(Roster::new(addrs)))
 }
 
+/// The serving configuration a config file requests (`None` when there
+/// is no `[serve]` section). Unknown `serve.*` keys are an error, like
+/// unknown training keys.
+pub fn serve_of(kv: &HashMap<String, String>) -> Result<Option<ServeConfig>> {
+    let keys: Vec<&String> = kv.keys().filter(|k| k.starts_with("serve.")).collect();
+    if keys.is_empty() {
+        return Ok(None);
+    }
+    let mut cfg = ServeConfig::default();
+    for key in keys {
+        let value = &kv[key];
+        match &key["serve.".len()..] {
+            "gateway" => cfg.gateway_addr = value.clone(),
+            "max_batch" => cfg.max_batch = value.parse().context("serve.max_batch")?,
+            "max_wait_ms" => cfg.max_wait_ms = value.parse().context("serve.max_wait_ms")?,
+            "max_requests" => {
+                cfg.max_requests = Some(value.parse().context("serve.max_requests")?)
+            }
+            other => bail!("unknown [serve] key {other:?}"),
+        }
+    }
+    if cfg.max_batch == 0 {
+        bail!("serve.max_batch must be at least 1");
+    }
+    Ok(Some(cfg))
+}
+
 /// The number of parties a config file requests (needed by the caller to
 /// split the data before [`super::train`]).
 pub fn parties_of(kv: &HashMap<String, String>) -> Result<usize> {
@@ -131,6 +172,7 @@ pub fn config_from_kv(kv: &HashMap<String, String>) -> Result<TrainConfig> {
         match key.as_str() {
             "model" | "parties" => {}
             k if k.starts_with("roster.") => {} // handled by `roster_of`
+            k if k.starts_with("serve.") => {}  // handled by `serve_of`
             "iterations" => cfg.iterations = value.parse().context("iterations")?,
             "learning_rate" => cfg.learning_rate = value.parse().context("learning_rate")?,
             "loss_threshold" => cfg.loss_threshold = value.parse().context("loss_threshold")?,
@@ -170,14 +212,17 @@ pub struct FileConfig {
     pub parties: usize,
     /// Party-id → address map from the `[roster]` section, if any.
     pub roster: Option<Roster>,
+    /// Serving knobs from the `[serve]` section, if any.
+    pub serve: Option<ServeConfig>,
 }
 
-/// Load a config file, including the `[roster]` section.
+/// Load a config file, including the `[roster]` and `[serve]` sections.
 pub fn load_full(path: &Path) -> Result<FileConfig> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
     let kv = parse_kv(&text)?;
     let roster = roster_of(&kv)?;
+    let serve = serve_of(&kv)?;
     let parties = match (&roster, kv.contains_key("parties")) {
         (Some(r), false) => r.n_parties(),
         _ => parties_of(&kv)?,
@@ -190,7 +235,7 @@ pub fn load_full(path: &Path) -> Result<FileConfig> {
             );
         }
     }
-    Ok(FileConfig { cfg: config_from_kv(&kv)?, parties, roster })
+    Ok(FileConfig { cfg: config_from_kv(&kv)?, parties, roster, serve })
 }
 
 /// Load a config file (training config + party count only).
@@ -298,6 +343,64 @@ mod tests {
         std::fs::write(&q, "parties = 2\n[roster]\n0 = \"h0:1\"\n1 = \"h1:1\"\n2 = \"h2:1\"\n")
             .unwrap();
         assert!(load_full(&q).is_err());
+    }
+
+    #[test]
+    fn serve_section_parses() {
+        let text = r#"
+            model = "lr"
+            [serve]
+            gateway = "10.0.0.1:8100"
+            max_batch = 32
+            max_wait_ms = 3
+            max_requests = 500
+        "#;
+        let kv = parse_kv(text).unwrap();
+        let serve = serve_of(&kv).unwrap().expect("serve section present");
+        assert_eq!(serve.gateway_addr, "10.0.0.1:8100");
+        assert_eq!(serve.max_batch, 32);
+        assert_eq!(serve.max_wait_ms, 3);
+        assert_eq!(serve.max_requests, Some(500));
+        // serve keys must not break the TrainConfig parse
+        assert!(config_from_kv(&kv).is_ok());
+        // absent section → None; partial section → defaults fill in
+        assert!(serve_of(&parse_kv("model = \"lr\"\n").unwrap()).unwrap().is_none());
+        let partial = serve_of(&parse_kv("[serve]\nmax_batch = 8\n").unwrap())
+            .unwrap()
+            .unwrap();
+        assert_eq!(partial.max_batch, 8);
+        assert_eq!(partial.max_wait_ms, ServeConfig::default().max_wait_ms);
+        assert_eq!(partial.max_requests, None);
+    }
+
+    #[test]
+    fn serve_section_errors() {
+        let kv = parse_kv("[serve]\ntypo = 1\n").unwrap();
+        let msg = serve_of(&kv).unwrap_err().to_string();
+        assert!(msg.contains("unknown [serve] key"), "{msg}");
+        let kv = parse_kv("[serve]\nmax_batch = zero\n").unwrap();
+        assert!(serve_of(&kv).is_err());
+        let kv = parse_kv("[serve]\nmax_batch = 0\n").unwrap();
+        let msg = serve_of(&kv).unwrap_err().to_string();
+        assert!(msg.contains("at least 1"), "{msg}");
+    }
+
+    #[test]
+    fn load_full_carries_serve_section() {
+        let dir = std::env::temp_dir().join("efmvfl_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("serve.toml");
+        std::fs::write(
+            &p,
+            "seed = 3\n[roster]\n0 = \"h0:1\"\n1 = \"h1:1\"\n[serve]\ngateway = \"h0:9\"\n",
+        )
+        .unwrap();
+        let fc = load_full(&p).unwrap();
+        assert_eq!(fc.serve.unwrap().gateway_addr, "h0:9");
+        // a config without [serve] loads with serve = None
+        let q = dir.join("noserve.toml");
+        std::fs::write(&q, "model = \"lr\"\n").unwrap();
+        assert!(load_full(&q).unwrap().serve.is_none());
     }
 
     #[test]

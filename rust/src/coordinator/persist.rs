@@ -8,6 +8,13 @@
 //! Binary layout (little-endian):
 //! `b"EFMV" | version u16 | kind u8 | n_parties u16 |
 //!  (block_len u32, f64×block_len)*`
+//!
+//! **Shards** ([`WeightShard`]) are the per-party deployment unit the
+//! serving daemons load: one party's block plus enough topology metadata
+//! (party id, party count, total feature count, GLM kind) to catch a
+//! mis-deployed file before it silently scores garbage. Layout:
+//! `b"EFMS" | version u16 | kind u8 | party u16 | n_parties u16 |
+//!  total_features u32 | block_len u32 | f64×block_len`
 
 use crate::glm::GlmKind;
 use anyhow::{anyhow, bail, Context, Result};
@@ -16,6 +23,8 @@ use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"EFMV";
 const VERSION: u16 = 1;
+const SHARD_MAGIC: &[u8; 4] = b"EFMS";
+const SHARD_VERSION: u16 = 1;
 
 /// A trained model: GLM kind + per-party weight blocks.
 #[derive(Clone, Debug, PartialEq)]
@@ -88,6 +97,154 @@ impl SavedModel {
             bail!("trailing bytes in model file");
         }
         Ok(SavedModel { kind, weights })
+    }
+
+    /// This model's shard for party `p` (deployment view: one party's
+    /// block plus the topology metadata that ties it to this model).
+    pub fn shard(&self, p: usize) -> WeightShard {
+        assert!(p < self.weights.len(), "party {p} outside the model");
+        WeightShard {
+            kind: self.kind,
+            party_id: p,
+            n_parties: self.weights.len(),
+            n_features_total: self.n_features(),
+            weights: self.weights[p].clone(),
+        }
+    }
+
+    /// Write party `p`'s weight shard to `path`.
+    pub fn save_shard(&self, p: usize, path: &Path) -> Result<()> {
+        self.shard(p).save(path)
+    }
+
+    /// Read one party's weight shard from `path`.
+    pub fn load_shard(path: &Path) -> Result<WeightShard> {
+        WeightShard::load(path)
+    }
+
+    /// Reassemble a full model from every party's shard (any order).
+    /// Validates the cross-shard invariants a mixed-up deployment would
+    /// break: all parties present exactly once, one GLM kind, one agreed
+    /// party count, and block lengths summing to each shard's claimed
+    /// feature total.
+    pub fn from_shards(mut shards: Vec<WeightShard>) -> Result<SavedModel> {
+        let first = shards.first().ok_or_else(|| anyhow!("no shards given"))?;
+        let (kind, n_parties, total) = (first.kind, first.n_parties, first.n_features_total);
+        if shards.len() != n_parties {
+            bail!("got {} shards for a {n_parties}-party model", shards.len());
+        }
+        for s in &shards {
+            if s.kind != kind {
+                bail!(
+                    "GLM kind mismatch across shards: party {} is {}, party {} is {}",
+                    first.party_id,
+                    kind.name(),
+                    s.party_id,
+                    s.kind.name()
+                );
+            }
+            if s.n_parties != n_parties || s.n_features_total != total {
+                bail!(
+                    "shard topology mismatch: party {} claims {} parties / {} features, \
+                     party {} claims {} / {}",
+                    first.party_id,
+                    n_parties,
+                    total,
+                    s.party_id,
+                    s.n_parties,
+                    s.n_features_total
+                );
+            }
+        }
+        shards.sort_by_key(|s| s.party_id);
+        for (want, s) in shards.iter().enumerate() {
+            if s.party_id != want {
+                bail!("missing or duplicate shard: expected party {want}, got {}", s.party_id);
+            }
+        }
+        let sum: usize = shards.iter().map(|s| s.weights.len()).sum();
+        if sum != total {
+            bail!("shard blocks sum to {sum} features, shards claim {total}");
+        }
+        Ok(SavedModel { kind, weights: shards.into_iter().map(|s| s.weights).collect() })
+    }
+}
+
+/// One party's slice of a [`SavedModel`]: the deployment unit a serving
+/// daemon loads. Carries the model topology so consistency is checkable
+/// without the other parties' files.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WeightShard {
+    /// Which GLM the weights parameterize.
+    pub kind: GlmKind,
+    /// Which party this block belongs to (0 = C).
+    pub party_id: usize,
+    /// How many parties the full model spans.
+    pub n_parties: usize,
+    /// Total feature count of the full model (all blocks).
+    pub n_features_total: usize,
+    /// This party's weight block.
+    pub weights: Vec<f64>,
+}
+
+impl WeightShard {
+    /// Write to `path` (creates parents).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(SHARD_MAGIC)?;
+        f.write_all(&SHARD_VERSION.to_le_bytes())?;
+        f.write_all(&[kind_tag(self.kind)])?;
+        f.write_all(&(self.party_id as u16).to_le_bytes())?;
+        f.write_all(&(self.n_parties as u16).to_le_bytes())?;
+        f.write_all(&(self.n_features_total as u32).to_le_bytes())?;
+        f.write_all(&(self.weights.len() as u32).to_le_bytes())?;
+        for &w in &self.weights {
+            f.write_all(&w.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Read from `path`.
+    pub fn load(path: &Path) -> Result<WeightShard> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        const HEADER: usize = 4 + 2 + 1 + 2 + 2 + 4 + 4;
+        if buf.len() < HEADER || &buf[..4] != SHARD_MAGIC {
+            bail!("{} is not an EFMVFL weight shard", path.display());
+        }
+        let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+        if version != SHARD_VERSION {
+            bail!("unsupported shard version {version}");
+        }
+        let kind = kind_from_tag(buf[6])?;
+        let party_id = u16::from_le_bytes(buf[7..9].try_into().unwrap()) as usize;
+        let n_parties = u16::from_le_bytes(buf[9..11].try_into().unwrap()) as usize;
+        let n_features_total = u32::from_le_bytes(buf[11..15].try_into().unwrap()) as usize;
+        let len = u32::from_le_bytes(buf[15..19].try_into().unwrap()) as usize;
+        if party_id >= n_parties {
+            bail!("shard claims party {party_id} of a {n_parties}-party model");
+        }
+        if len > n_features_total {
+            bail!("shard block has {len} weights but claims {n_features_total} total features");
+        }
+        if buf.len() < HEADER + len * 8 {
+            bail!("truncated weight shard");
+        }
+        if buf.len() > HEADER + len * 8 {
+            bail!("trailing bytes in weight shard");
+        }
+        let weights = (0..len)
+            .map(|i| {
+                f64::from_le_bytes(buf[HEADER + i * 8..HEADER + i * 8 + 8].try_into().unwrap())
+            })
+            .collect();
+        Ok(WeightShard { kind, party_id, n_parties, n_features_total, weights })
     }
 }
 
@@ -218,5 +375,118 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         let err = SavedModel::load(&p).unwrap_err();
         assert!(err.to_string().contains("unknown GLM tag"), "{err}");
+    }
+
+    fn model3() -> SavedModel {
+        SavedModel {
+            kind: GlmKind::Poisson,
+            weights: vec![vec![0.5, -1.0], vec![2.0], vec![3.0, 4.0, -5.0]],
+        }
+    }
+
+    #[test]
+    fn shard_roundtrip_and_reassembly() {
+        let m = model3();
+        let mut shards = Vec::new();
+        for p in 0..3 {
+            let path = tmp(&format!("shard{p}.efms"));
+            m.save_shard(p, &path).unwrap();
+            let s = SavedModel::load_shard(&path).unwrap();
+            assert_eq!(s, m.shard(p));
+            assert_eq!(s.n_features_total, m.n_features());
+            shards.push(s);
+        }
+        // any order reassembles
+        shards.rotate_left(1);
+        assert_eq!(SavedModel::from_shards(shards).unwrap(), m);
+    }
+
+    #[test]
+    fn shards_reject_glm_kind_mismatch() {
+        let m = model3();
+        let mut shards: Vec<_> = (0..3).map(|p| m.shard(p)).collect();
+        shards[1].kind = GlmKind::Gamma; // party 1 deployed a different model
+        let err = SavedModel::from_shards(shards).unwrap_err();
+        assert!(err.to_string().contains("GLM kind mismatch"), "{err}");
+    }
+
+    #[test]
+    fn shards_reject_feature_count_mismatch() {
+        let m = model3();
+        // a shard whose block disagrees with the claimed feature total
+        let mut shards: Vec<_> = (0..3).map(|p| m.shard(p)).collect();
+        shards[2].weights.push(9.9);
+        let err = SavedModel::from_shards(shards).unwrap_err();
+        assert!(err.to_string().contains("features"), "{err}");
+        // a shard from a model with a different total feature count
+        let mut shards: Vec<_> = (0..3).map(|p| m.shard(p)).collect();
+        shards[0].n_features_total = 7;
+        let err = SavedModel::from_shards(shards).unwrap_err();
+        assert!(err.to_string().contains("topology mismatch"), "{err}");
+    }
+
+    #[test]
+    fn shards_reject_wrong_count_and_duplicates() {
+        let m = model3();
+        let err = SavedModel::from_shards(vec![m.shard(0), m.shard(1)]).unwrap_err();
+        assert!(err.to_string().contains("shards"), "{err}");
+        let err =
+            SavedModel::from_shards(vec![m.shard(0), m.shard(1), m.shard(1)]).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        assert!(SavedModel::from_shards(vec![]).is_err());
+    }
+
+    /// A valid on-disk shard to corrupt (mirrors [`good_bytes`]).
+    fn good_shard_bytes(name: &str) -> Vec<u8> {
+        let path = tmp(name);
+        model3().save_shard(1, &path).unwrap();
+        std::fs::read(&path).unwrap()
+    }
+
+    #[test]
+    fn shard_rejects_corrupt_header() {
+        // bad magic
+        let mut bytes = good_shard_bytes("shard_magic.efms");
+        bytes[0] = b'X';
+        let p = tmp("shard_badmagic.efms");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = WeightShard::load(&p).unwrap_err();
+        assert!(err.to_string().contains("not an EFMVFL weight shard"), "{err}");
+        // bad version
+        let mut bytes = good_shard_bytes("shard_ver.efms");
+        bytes[4..6].copy_from_slice(&77u16.to_le_bytes());
+        let p = tmp("shard_badver.efms");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = WeightShard::load(&p).unwrap_err();
+        assert!(err.to_string().contains("unsupported shard version 77"), "{err}");
+        // bad GLM tag
+        let mut bytes = good_shard_bytes("shard_tag.efms");
+        bytes[6] = 250;
+        let p = tmp("shard_badtag.efms");
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(WeightShard::load(&p).is_err());
+        // party id outside the claimed party count
+        let mut bytes = good_shard_bytes("shard_pid.efms");
+        bytes[7..9].copy_from_slice(&9u16.to_le_bytes());
+        let p = tmp("shard_badpid.efms");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = WeightShard::load(&p).unwrap_err();
+        assert!(err.to_string().contains("party 9"), "{err}");
+    }
+
+    #[test]
+    fn shard_rejects_truncation_and_trailing_junk() {
+        let bytes = good_shard_bytes("shard_trunc.efms");
+        for cut in [3, 10, 18, bytes.len() - 5, bytes.len() - 1] {
+            let p = tmp(&format!("shard_cut{cut}.efms"));
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(WeightShard::load(&p).is_err(), "cut at {cut} must fail");
+        }
+        let mut extended = bytes.clone();
+        extended.push(0);
+        let p = tmp("shard_trailing.efms");
+        std::fs::write(&p, &extended).unwrap();
+        let err = WeightShard::load(&p).unwrap_err();
+        assert!(err.to_string().contains("trailing bytes"), "{err}");
     }
 }

@@ -24,8 +24,11 @@
 //! transport layer: threads on the in-process mpsc full mesh
 //! ([`coordinator::train`]), or separate OS processes over real TCP
 //! sockets ([`net::tcp`] + [`coordinator::distributed`], the CLI's
-//! `party` / `run-distributed` subcommands). See `rust/README.md` for
-//! the workspace layout and build matrix.
+//! `party` / `run-distributed` subcommands). Trained models serve
+//! online traffic through [`serve`]: long-lived party daemons plus a
+//! micro-batching request gateway (the CLI's `serve` / `loadgen`
+//! subcommands). See `rust/README.md` for the workspace layout and
+//! build matrix.
 
 pub mod baselines;
 pub mod benchkit;
@@ -41,6 +44,7 @@ pub mod mpc;
 pub mod net;
 pub mod protocols;
 pub mod runtime;
+pub mod serve;
 pub mod testkit;
 
 /// Commonly used types, re-exported for `use efmvfl::prelude::*`.

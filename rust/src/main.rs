@@ -9,6 +9,10 @@
 //! - `run-distributed` — convenience launcher: spawn every `party`
 //!   process of a roster locally and wait for them
 //! - `predict` — federated inference with a saved model (in-process)
+//! - `serve`  — run one party of an online serving mesh: party 0 is the
+//!   client-facing micro-batching gateway, parties 1.. are daemons
+//! - `loadgen` — closed-loop load against a serving gateway, reporting
+//!   QPS and latency percentiles
 //! - `keygen` — time Paillier key generation at a given size
 //! - `info`   — build/runtime information (artifact status, backends)
 //! - `help`   — this text
@@ -21,6 +25,8 @@
 //! efmvfl train --csv data/credit.csv --label-col 23 --xla
 //! efmvfl party --config exp.toml --id 1
 //! efmvfl run-distributed --config exp.toml
+//! efmvfl serve --config exp.toml --id 0 --load model.efmv
+//! efmvfl loadgen --gateway 127.0.0.1:8100 --requests 1000
 //! efmvfl keygen --key-bits 1024
 //! ```
 
@@ -33,6 +39,7 @@ use efmvfl::data::{csv, split_vertical, synthetic, Dataset};
 use efmvfl::glm::GlmKind;
 use efmvfl::net::tcp;
 use efmvfl::protocols::CpSelection;
+use efmvfl::serve::{self, loadgen::LoadgenConfig, FeatureStore};
 use efmvfl::{linalg, metrics};
 use std::path::Path;
 use std::time::Duration;
@@ -40,7 +47,22 @@ use std::time::Duration;
 const FLAGS: &[&'static str] = &[
     "model", "framework", "parties", "samples", "features", "iters", "lr", "batch",
     "key-bits", "seed", "csv", "label-col", "xla", "rotate-cps", "pool", "threshold",
-    "save", "load", "config", "id", "connect-timeout",
+    "save", "load", "config", "id", "connect-timeout", "shard", "gateway", "max-batch",
+    "max-wait-ms", "max-requests", "clients", "requests", "max-ids", "max-id",
+];
+
+/// Every subcommand the dispatcher accepts — `help` must list each one
+/// (asserted by `help_lists_every_subcommand`).
+const SUBCOMMANDS: &[&'static str] = &[
+    "train",
+    "predict",
+    "party",
+    "run-distributed",
+    "serve",
+    "loadgen",
+    "keygen",
+    "info",
+    "help",
 ];
 
 fn main() {
@@ -55,33 +77,53 @@ fn main() {
     }
 }
 
+fn help_text() -> String {
+    let mut s = String::new();
+    s.push_str("efmvfl — multi-party vertical federated learning without a third party\n\n");
+    s.push_str("USAGE: efmvfl <");
+    s.push_str(&SUBCOMMANDS.join("|"));
+    s.push_str("> [flags]\n\n");
+    s.push_str("train flags:\n");
+    s.push_str("  --model lr|pr|linear     GLM to train               [lr]\n");
+    s.push_str("  --framework efmvfl|tp|ss|ss-he                      [efmvfl]\n");
+    s.push_str("  --parties N              total parties (C + hosts)  [2]\n");
+    s.push_str("  --samples N --features N synthetic data shape       [5000, 23]\n");
+    s.push_str("  --csv PATH --label-col N train on a numeric CSV\n");
+    s.push_str("  --iters N --lr F         GD schedule                [30, 0.15/0.1]\n");
+    s.push_str("  --batch N|full           mini-batch size            [1024]\n");
+    s.push_str("  --key-bits N             Paillier modulus           [512]\n");
+    s.push_str("  --threshold F            stop threshold L           [1e-4]\n");
+    s.push_str("  --seed N                 run seed                   [7]\n");
+    s.push_str("  --rotate-cps             re-select CPs each iteration\n");
+    s.push_str("  --pool N                 pre-generate N obfuscators\n");
+    s.push_str("  --xla                    use the PJRT AOT artifacts\n\n");
+    s.push_str("predict: efmvfl predict --load M.efmv [--csv PATH] (in-process)\n\n");
+    s.push_str("distributed mode (real TCP sockets, one OS process per party):\n");
+    s.push_str("  efmvfl party --config exp.toml --id N [train flags]\n");
+    s.push_str("      run party N of the config's [roster]; --load M.efmv\n");
+    s.push_str("      serves federated inference instead of training\n");
+    s.push_str("  efmvfl run-distributed --config exp.toml [train flags]\n");
+    s.push_str("      spawn every roster party locally and wait\n");
+    s.push_str("  --connect-timeout SECS   mesh bootstrap deadline      [30]\n\n");
+    s.push_str("online serving (long-lived daemons + micro-batching gateway):\n");
+    s.push_str("  efmvfl serve --config exp.toml --id N --load M.efmv\n");
+    s.push_str("      party 0 = client gateway at [serve].gateway, 1.. = daemons;\n");
+    s.push_str("      --shard S.efms loads a per-party weight shard instead\n");
+    s.push_str("  --gateway HOST:PORT      override the gateway address\n");
+    s.push_str("  --max-batch N            flush a round at N records   [64]\n");
+    s.push_str("  --max-wait-ms MS         flush a round after MS       [5]\n");
+    s.push_str("  --max-requests N         stop after N requests        [forever]\n");
+    s.push_str("  efmvfl loadgen --gateway HOST:PORT [--requests N] [--clients N]\n");
+    s.push_str("      closed-loop load; reports QPS + p50/p95/p99 latency\n");
+    s.push_str("  --max-ids K --max-id M   request shape: 1..=K ids from 0..M\n\n");
+    s.push_str("keygen: efmvfl keygen --key-bits N\n");
+    s.push_str("info:   efmvfl info\n");
+    s.push_str("help:   efmvfl help\n");
+    s
+}
+
 fn print_help() {
-    println!("efmvfl — multi-party vertical federated learning without a third party");
-    println!();
-    println!("USAGE: efmvfl <train|predict|party|run-distributed|keygen|info|help> [flags]");
-    println!();
-    println!("train flags:");
-    println!("  --model lr|pr|linear     GLM to train               [lr]");
-    println!("  --framework efmvfl|tp|ss|ss-he                      [efmvfl]");
-    println!("  --parties N              total parties (C + hosts)  [2]");
-    println!("  --samples N --features N synthetic data shape       [5000, 23]");
-    println!("  --csv PATH --label-col N train on a numeric CSV");
-    println!("  --iters N --lr F         GD schedule                [30, 0.15/0.1]");
-    println!("  --batch N|full           mini-batch size            [1024]");
-    println!("  --key-bits N             Paillier modulus           [512]");
-    println!("  --threshold F            stop threshold L           [1e-4]");
-    println!("  --seed N                 run seed                   [7]");
-    println!("  --rotate-cps             re-select CPs each iteration");
-    println!("  --pool N                 pre-generate N obfuscators");
-    println!("  --xla                    use the PJRT AOT artifacts");
-    println!();
-    println!("distributed mode (real TCP sockets, one OS process per party):");
-    println!("  efmvfl party --config exp.toml --id N [train flags]");
-    println!("      run party N of the config's [roster]; --load M.efmv");
-    println!("      serves federated inference instead of training");
-    println!("  efmvfl run-distributed --config exp.toml [train flags]");
-    println!("      spawn every roster party locally and wait");
-    println!("  --connect-timeout SECS   mesh bootstrap deadline      [30]");
+    print!("{}", help_text());
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -91,6 +133,8 @@ fn run(argv: &[String]) -> Result<()> {
         "predict" => cmd_predict(&args),
         "party" => cmd_party(&args),
         "run-distributed" => cmd_run_distributed(&args, argv),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "keygen" => cmd_keygen(&args),
         "info" => cmd_info(),
         other => bail!("unknown subcommand {other}; try `efmvfl help`"),
@@ -115,25 +159,22 @@ fn load_or_synth_data(args: &Args, kind: GlmKind, seed: u64) -> Result<Dataset> 
     })
 }
 
-/// Dataset for scoring with a saved model (shared by the in-process
-/// `predict` and distributed `party --load` paths): an explicit CSV, or
-/// synthetic samples shaped to the model's feature count.
-fn predict_dataset(
-    args: &Args,
-    model: &efmvfl::coordinator::persist::SavedModel,
-    seed: u64,
-) -> Result<Dataset> {
+/// Dataset for scoring with a trained model (shared by the in-process
+/// `predict`, distributed `party --load`, and online `serve` paths): an
+/// explicit CSV, or synthetic samples shaped to the model's feature
+/// count.
+fn predict_dataset(args: &Args, kind: GlmKind, n_features: usize, seed: u64) -> Result<Dataset> {
     if let Some(csv_path) = args.get("csv") {
         let label_col: usize = args.get_or("label-col", 0)?;
         return csv::read_dataset(Path::new(csv_path), label_col);
     }
     let samples: usize = args.get_or("samples", 1000)?;
-    Ok(match model.kind {
-        GlmKind::Poisson => synthetic::dvisits_like(samples, model.n_features(), seed),
+    Ok(match kind {
+        GlmKind::Poisson => synthetic::dvisits_like(samples, n_features, seed),
         GlmKind::Gamma | GlmKind::Tweedie => {
-            synthetic::claims_severity_like(samples, model.n_features(), seed)
+            synthetic::claims_severity_like(samples, n_features, seed)
         }
-        _ => synthetic::credit_default_like(samples, model.n_features(), seed),
+        _ => synthetic::credit_default_like(samples, n_features, seed),
     })
 }
 
@@ -280,7 +321,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let seed: u64 = args.get_or("seed", file_seed)?;
     let parties = model.weights.len();
 
-    let mut data = predict_dataset(args, &model, seed)?;
+    let mut data = predict_dataset(args, model.kind, model.n_features(), seed)?;
     data.standardize();
     let split = split_vertical(&data, parties);
     let rep =
@@ -338,7 +379,7 @@ fn cmd_party(args: &Args) -> Result<()> {
         if model.weights.len() != parties {
             bail!("model has {} weight blocks, roster has {parties} parties", model.weights.len());
         }
-        let mut data = predict_dataset(args, &model, seed)?;
+        let mut data = predict_dataset(args, model.kind, model.n_features(), seed)?;
         data.standardize();
         let split = split_vertical(&data, parties);
         eprintln!("party {id}: joining {parties}-party inference mesh at {}", roster.addr_of(id));
@@ -449,6 +490,155 @@ fn cmd_run_distributed(args: &Args, argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Run ONE party of an online serving mesh: party 0 becomes the
+/// client-facing micro-batching gateway, parties 1.. become daemons.
+/// Weights come from a full model (`--load`, this party keeps its
+/// block) or a per-party shard (`--shard`); every party rebuilds the
+/// same keyed feature store from the shared-seed dataset (or a CSV).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let path = args
+        .get("config")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --config <file> with a [roster] section"))?;
+    let fc = efmvfl::coordinator::config_file::load_full(Path::new(path))?;
+    let roster = fc.roster.ok_or_else(|| {
+        anyhow::anyhow!("{path} has no [roster] section; serving mode needs one")
+    })?;
+    let parties = roster.n_parties();
+    let id: usize = args
+        .get("id")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --id <0..{}>", parties - 1))?
+        .parse()
+        .context("--id")?;
+    if id >= parties {
+        bail!("--id {id} outside the {parties}-party roster");
+    }
+    let seed: u64 = args.get_or("seed", fc.cfg.seed)?;
+    let timeout: u64 = args.get_or("connect-timeout", 30)?;
+
+    // serving knobs: [serve] section as base, flags override
+    let mut serve_cfg = fc.serve.unwrap_or_default();
+    if let Some(addr) = args.get("gateway") {
+        serve_cfg.gateway_addr = addr.to_string();
+    }
+    serve_cfg.max_batch = args.get_or("max-batch", serve_cfg.max_batch)?;
+    serve_cfg.max_wait_ms = args.get_or("max-wait-ms", serve_cfg.max_wait_ms)?;
+    if let Some(v) = args.get("max-requests") {
+        serve_cfg.max_requests = Some(v.parse().context("--max-requests")?);
+    }
+
+    // this party's weight shard + the model topology
+    let (kind, n_features, weights) = match (args.get("load"), args.get("shard")) {
+        (Some(p), None) => {
+            let model = efmvfl::coordinator::persist::SavedModel::load(Path::new(p))?;
+            if model.weights.len() != parties {
+                bail!(
+                    "model has {} weight blocks, roster has {parties} parties",
+                    model.weights.len()
+                );
+            }
+            (model.kind, model.n_features(), model.weights[id].clone())
+        }
+        (None, Some(p)) => {
+            let shard = efmvfl::coordinator::persist::SavedModel::load_shard(Path::new(p))?;
+            if shard.n_parties != parties {
+                bail!("shard is for a {}-party model, roster has {parties}", shard.n_parties);
+            }
+            if shard.party_id != id {
+                bail!("shard belongs to party {}, this is party {id}", shard.party_id);
+            }
+            (shard.kind, shard.n_features_total, shard.weights)
+        }
+        _ => bail!("serve needs exactly one of --load <model.efmv> or --shard <shard.efms>"),
+    };
+
+    // keyed feature store over this party's block (record id = row id)
+    let mut data = predict_dataset(args, kind, n_features, seed)?;
+    data.standardize();
+    let split = split_vertical(&data, parties);
+    let store = FeatureStore::from_block(split.party_block(id).clone());
+
+    eprintln!(
+        "party {id}: joining {parties}-party serving mesh at {} ({} records, {} local features)",
+        roster.addr_of(id),
+        store.len(),
+        store.n_features()
+    );
+    let mut transport = tcp::connect_mesh(&roster, id, Duration::from_secs(timeout))?;
+    if id == 0 {
+        let listener = std::net::TcpListener::bind(&serve_cfg.gateway_addr)
+            .with_context(|| format!("gateway: binding {}", serve_cfg.gateway_addr))?;
+        eprintln!(
+            "gateway: accepting clients on {} (max_batch {}, max_wait {} ms)",
+            listener.local_addr()?,
+            serve_cfg.max_batch,
+            serve_cfg.max_wait_ms
+        );
+        let rep =
+            serve::run_gateway(&mut transport, listener, &store, &weights, kind, seed, &serve_cfg)?;
+        println!(
+            "served {} requests ({} records) in {} rounds",
+            rep.requests, rep.records, rep.rounds
+        );
+        println!(
+            "batch sizes: mean {:.1}  p50 {:.0}  max {:.0}  ({} full / {} timeout flushes)",
+            rep.batch_sizes.mean(),
+            rep.batch_sizes.p50(),
+            rep.batch_sizes.max(),
+            rep.full_flushes,
+            rep.timeout_flushes
+        );
+        println!("serve-plane comm = {:.3} MB", rep.comm_mb);
+    } else {
+        let rep = serve::run_daemon(&mut transport, &store, &weights, seed)?;
+        println!("party {id}: served {} rounds / {} records", rep.rounds, rep.records);
+    }
+    Ok(())
+}
+
+/// Closed-loop load against a running gateway; prints QPS and the
+/// latency percentiles the serving SLO cares about.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let addr = match args.get("gateway") {
+        Some(a) => a.to_string(),
+        None => match args.get("config") {
+            Some(p) => efmvfl::coordinator::config_file::load_full(Path::new(p))?
+                .serve
+                .ok_or_else(|| anyhow::anyhow!("{p} has no [serve] section"))?
+                .gateway_addr,
+            None => bail!("loadgen needs --gateway <host:port> (or --config with [serve])"),
+        },
+    };
+    let cfg = LoadgenConfig {
+        clients: args.get_or("clients", 4)?,
+        requests: args.get_or("requests", 100)?,
+        max_ids_per_req: args.get_or("max-ids", 4)?,
+        max_id: args.get_or("max-id", 1000)?,
+        seed: args.get_or("seed", 7)?,
+    };
+    eprintln!(
+        "loadgen: {} requests over {} closed-loop clients against {addr}",
+        cfg.requests, cfg.clients
+    );
+    let rep = serve::loadgen::run(&addr, &cfg)?;
+    println!(
+        "sent {} requests ({} ok, {} errors) in {:.2} s  →  {:.1} req/s",
+        rep.sent, rep.ok, rep.errors, rep.wall_secs, rep.qps
+    );
+    println!(
+        "latency: p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  (max {:.2} ms)",
+        rep.latency.p50() * 1e3,
+        rep.latency.p95() * 1e3,
+        rep.latency.p99() * 1e3,
+        rep.latency.max() * 1e3
+    );
+    println!(
+        "request sizes: mean {:.1} ids  max {:.0} ids",
+        rep.request_sizes.mean(),
+        rep.request_sizes.max()
+    );
+    Ok(())
+}
+
 fn cmd_keygen(args: &Args) -> Result<()> {
     let bits: usize = args.get_or("key-bits", 1024)?;
     let mut rng = efmvfl::crypto::prng::ChaChaRng::from_entropy();
@@ -461,6 +651,33 @@ fn cmd_keygen(args: &Args) -> Result<()> {
         kp.pk.n.bit_len()
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn help_lists_every_subcommand() {
+        let help = help_text();
+        for sub in SUBCOMMANDS {
+            assert!(help.contains(sub), "`efmvfl help` does not mention {sub:?}");
+        }
+    }
+
+    #[test]
+    fn dispatcher_reaches_new_subcommands() {
+        // probe the subcommands that fail fast on a missing required
+        // flag: reaching that error proves they are dispatched (an
+        // unlisted name hits the unknown-subcommand error instead)
+        for sub in ["predict", "party", "run-distributed", "serve", "loadgen"] {
+            let err = run(&[sub.to_string()]).unwrap_err().to_string();
+            assert!(!err.contains("unknown subcommand"), "{sub} is not dispatched: {err}");
+            assert!(err.contains("needs"), "{sub} should ask for its required flag: {err}");
+        }
+        let err = run(&["bogus".to_string()]).unwrap_err();
+        assert!(err.to_string().contains("unknown subcommand"));
+    }
 }
 
 fn cmd_info() -> Result<()> {

@@ -1,5 +1,131 @@
 //! Evaluation metrics for the paper's tables: AUC + KS (Table 1, LR) and
-//! MAE + RMSE (Table 2, PR).
+//! MAE + RMSE (Table 2, PR) — plus the serving-side instruments
+//! ([`Histogram`] percentiles, [`Throughput`]) that `loadgen` and the
+//! gateway report.
+
+use std::time::Instant;
+
+/// Sample histogram with percentile queries — latency distributions
+/// (loadgen's p50/p95/p99) and batch-size distributions (the gateway's
+/// flush sizes). Stores raw samples; percentile queries sort on demand,
+/// which is fine for the ≤10⁵-sample populations these reports hold.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one sample.
+    pub fn add(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Smallest sample (NaN when empty).
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NAN, f64::min)
+    }
+
+    /// Largest sample (NaN when empty).
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NAN, f64::max)
+    }
+
+    /// Arithmetic mean (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Nearest-rank percentile: the smallest sample such that at least
+    /// `q`% of the population is ≤ it (`q` in [0, 100]). NaN when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        // nearest-rank: ceil(q/100 · n), clamped to [1, n]
+        let rank = ((q / 100.0) * n as f64).ceil() as usize;
+        sorted[rank.clamp(1, n) - 1]
+    }
+
+    /// Median.
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// 95th percentile.
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    /// 99th percentile (the serving SLO figure).
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Fold another histogram's samples into this one (per-client
+    /// latency histograms merge into the loadgen total).
+    pub fn merge(&mut self, other: &Histogram) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+}
+
+/// Event counter with a wall-clock rate — loadgen's QPS figure.
+#[derive(Clone, Debug)]
+pub struct Throughput {
+    count: u64,
+    started: Instant,
+}
+
+impl Throughput {
+    /// Start counting now.
+    pub fn start() -> Throughput {
+        Throughput { count: 0, started: Instant::now() }
+    }
+
+    /// Record `n` completed events.
+    pub fn record(&mut self, n: u64) {
+        self.count += n;
+    }
+
+    /// Total events recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Seconds since [`Throughput::start`].
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Events per second over the given window (the deterministic core
+    /// of [`Throughput::per_sec`], separated out so it is testable).
+    pub fn per_sec_over(&self, secs: f64) -> f64 {
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.count as f64 / secs
+    }
+
+    /// Events per second since [`Throughput::start`].
+    pub fn per_sec(&self) -> f64 {
+        self.per_sec_over(self.elapsed_secs())
+    }
+}
 
 /// Area under the ROC curve via the rank statistic
 /// (equivalent to the Mann-Whitney U estimator; ties get midranks).
@@ -148,6 +274,84 @@ mod tests {
         assert!((mae(&t, &p) - 0.5).abs() < 1e-12);
         assert!((rmse(&t, &p) - (1.25f64 / 3.0 * 3.0 / 3.0).sqrt()).abs() < 1e-9
             || (rmse(&t, &p) - ((0.25 + 0.0 + 1.0) / 3.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentiles_known_values() {
+        let mut h = Histogram::new();
+        for v in 1..=100 {
+            h.add(v as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.p50(), 50.0);
+        assert_eq!(h.p95(), 95.0);
+        assert_eq!(h.p99(), 99.0);
+        assert_eq!(h.percentile(100.0), 100.0);
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 100.0);
+        assert!((h.mean() - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_insertion_order_irrelevant() {
+        let mut fwd = Histogram::new();
+        let mut rev = Histogram::new();
+        for v in 0..37 {
+            fwd.add(v as f64);
+            rev.add((36 - v) as f64);
+        }
+        for q in [1.0, 25.0, 50.0, 75.0, 99.0] {
+            assert_eq!(fwd.percentile(q), rev.percentile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn histogram_small_and_empty() {
+        let empty = Histogram::new();
+        assert!(empty.percentile(50.0).is_nan());
+        assert!(empty.mean().is_nan());
+        assert_eq!(empty.count(), 0);
+        // one sample is every percentile
+        let mut one = Histogram::new();
+        one.add(7.5);
+        for q in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(one.percentile(q), 7.5);
+        }
+        // two samples: p50 is the lower, p99 the upper (nearest rank)
+        let mut two = Histogram::new();
+        two.add(1.0);
+        two.add(2.0);
+        assert_eq!(two.p50(), 1.0);
+        assert_eq!(two.p99(), 2.0);
+    }
+
+    #[test]
+    fn histogram_merge_combines_populations() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in 1..=50 {
+            a.add(v as f64);
+            b.add((v + 50) as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert_eq!(a.p50(), 50.0);
+        assert_eq!(a.max(), 100.0);
+    }
+
+    #[test]
+    fn throughput_counts_and_rates() {
+        let mut t = Throughput::start();
+        t.record(30);
+        t.record(70);
+        assert_eq!(t.count(), 100);
+        // deterministic rate math over an injected window
+        assert!((t.per_sec_over(4.0) - 25.0).abs() < 1e-12);
+        assert_eq!(t.per_sec_over(0.0), 0.0);
+        // real-clock rate is positive once anything was recorded
+        assert!(t.per_sec() > 0.0);
+        assert!(t.elapsed_secs() >= 0.0);
     }
 
     #[test]

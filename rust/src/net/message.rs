@@ -27,6 +27,15 @@ pub enum Payload {
     Flag(bool),
     /// Raw bytes (public keys, misc).
     Bytes(Vec<u8>),
+    /// Serve-plane micro-batch: the gateway's per-round record-id list.
+    /// An empty `ids` list is the shutdown signal (a real round always
+    /// carries at least one record).
+    IdBatch {
+        /// Monotone round counter (also freshens the round's masks).
+        round: u64,
+        /// Record ids to score this round, in request order.
+        ids: Vec<u64>,
+    },
 }
 
 impl Payload {
@@ -126,6 +135,14 @@ impl Payload {
                 out.extend((b.len() as u64).to_le_bytes());
                 out.extend_from_slice(b);
             }
+            Payload::IdBatch { round, ids } => {
+                out.push(6);
+                out.extend(round.to_le_bytes());
+                out.extend((ids.len() as u64).to_le_bytes());
+                for &id in ids {
+                    out.extend(id.to_le_bytes());
+                }
+            }
         }
         out
     }
@@ -169,6 +186,12 @@ impl Payload {
                 let n = read_u64(&mut pos) as usize;
                 Payload::Bytes(bytes[pos..pos + n].to_vec())
             }
+            6 => {
+                let round = read_u64(&mut pos);
+                let n = read_u64(&mut pos) as usize;
+                let ids = (0..n).map(|_| read_u64(&mut pos)).collect();
+                Payload::IdBatch { round, ids }
+            }
             t => panic!("unknown payload tag {t}"),
         }
     }
@@ -202,6 +225,8 @@ mod tests {
             Payload::Bytes(vec![1, 2, 3]),
             Payload::Bytes(vec![]),
             Payload::Bytes(vec![0xff; 300]),
+            Payload::IdBatch { round: 0, ids: vec![0, 1, u64::MAX] },
+            Payload::IdBatch { round: u64::MAX, ids: vec![] },
         ];
         for p in cases {
             assert_eq!(Payload::decode(&p.encode()), p);
@@ -260,5 +285,7 @@ mod tests {
         assert_eq!(p.encode().len(), 1 + 8 + 800);
         let c = Payload::Cipher { width: 32, data: vec![0; 64] };
         assert_eq!(c.encode().len(), 1 + 8 + 8 + 64);
+        let b = Payload::IdBatch { round: 3, ids: vec![0; 10] };
+        assert_eq!(b.encode().len(), 1 + 8 + 8 + 80);
     }
 }

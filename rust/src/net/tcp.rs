@@ -91,6 +91,26 @@ impl Roster {
     }
 }
 
+/// Bind one loopback listener per party on OS-assigned ephemeral ports
+/// (`127.0.0.1:0`) and surface the actual ports back through the
+/// returned [`Roster`] — the `port = 0` topology for same-machine tests
+/// and CI, where fixed base ports collide across parallel runs. Hand
+/// each party its listener via [`connect_mesh_with_listener`]; there is
+/// no reserve-then-rebind race because the sockets in the roster are
+/// the very ones the mesh accepts on.
+pub fn bind_ephemeral_roster(n: usize) -> Result<(Roster, Vec<TcpListener>)> {
+    let mut listeners = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    for p in 0..n {
+        let l = TcpListener::bind("127.0.0.1:0")
+            .with_context(|| format!("party {p}: binding an ephemeral loopback port"))?;
+        let port = l.local_addr().context("reading the assigned port")?.port();
+        addrs.push(format!("127.0.0.1:{port}"));
+        listeners.push(l);
+    }
+    Ok((Roster::new(addrs), listeners))
+}
+
 /// One party's connection to a TCP full mesh. Constructed by
 /// [`connect_mesh`]; implements [`Transport`] so the whole protocol
 /// stack runs over it unchanged.
@@ -114,6 +134,14 @@ pub struct TcpTransport {
 /// and handshake each link in both directions.
 pub fn connect_mesh(roster: &Roster, me: usize, timeout: Duration) -> Result<TcpTransport> {
     let port = roster.port_of(me)?;
+    if port == 0 {
+        // an OS-assigned port is only reachable if the peers learn it —
+        // which needs the resolved-roster flow, not a blind bind
+        bail!(
+            "party {me}: roster says port 0; use bind_ephemeral_roster \
+             (same-machine topologies) so peers learn the assigned port"
+        );
+    }
     let listener = TcpListener::bind(("0.0.0.0", port))
         .with_context(|| format!("party {me}: binding 0.0.0.0:{port}"))?;
     connect_mesh_with_listener(roster, me, listener, timeout)
@@ -423,17 +451,10 @@ mod tests {
     use crate::net::full_mesh;
     use std::thread;
 
-    /// Bind `n` loopback listeners on ephemeral ports and bootstrap a
-    /// mesh over them (one thread per party, as the bootstrap blocks).
+    /// Bootstrap an ephemeral-port loopback mesh (one thread per party,
+    /// as the bootstrap blocks) over [`bind_ephemeral_roster`].
     fn local_mesh(n: usize) -> Vec<TcpTransport> {
-        let mut listeners = Vec::with_capacity(n);
-        let mut addrs = Vec::with_capacity(n);
-        for _ in 0..n {
-            let l = TcpListener::bind("127.0.0.1:0").unwrap();
-            addrs.push(format!("127.0.0.1:{}", l.local_addr().unwrap().port()));
-            listeners.push(l);
-        }
-        let roster = Roster::new(addrs);
+        let (roster, listeners) = bind_ephemeral_roster(n).unwrap();
         let mut handles = Vec::with_capacity(n);
         for (me, l) in listeners.into_iter().enumerate() {
             let roster = roster.clone();
@@ -442,6 +463,24 @@ mod tests {
             }));
         }
         handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn ephemeral_roster_resolves_real_ports() {
+        let (roster, listeners) = bind_ephemeral_roster(3).unwrap();
+        assert_eq!(roster.n_parties(), 3);
+        for (p, l) in listeners.iter().enumerate() {
+            let port = roster.port_of(p).unwrap();
+            assert_ne!(port, 0, "port 0 must be resolved to the assigned port");
+            assert_eq!(port, l.local_addr().unwrap().port());
+        }
+    }
+
+    #[test]
+    fn connect_mesh_rejects_unresolved_port_zero() {
+        let roster = Roster::loopback(2, 0); // both entries say :0
+        let err = connect_mesh(&roster, 0, Duration::from_millis(100)).unwrap_err();
+        assert!(err.to_string().contains("bind_ephemeral_roster"), "{err}");
     }
 
     #[test]

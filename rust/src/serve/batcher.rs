@@ -1,0 +1,192 @@
+//! Adaptive micro-batching: trade a bounded sliver of latency for
+//! round amortization.
+//!
+//! Every federated `WX` round costs one broadcast + `n−1` replies no
+//! matter how many records ride in it, so the gateway coalesces queued
+//! requests into one round. The flush policy is the classic two-trigger
+//! one (cf. TensorFlow Serving's batching layer): flush as soon as
+//! [`Batcher::max_batch`] *records* are pending (throughput bound), or
+//! when the oldest queued request has waited `max_wait` (latency bound).
+//! Under load the batch fills and the wait never expires; at low traffic
+//! a lone request pays at most `max_wait` extra.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Why a batch was flushed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushTrigger {
+    /// `max_batch` records were reached (throughput path).
+    Full,
+    /// The oldest request hit `max_wait` (latency path).
+    Timeout,
+    /// The request source shut down; this is the final batch.
+    Closed,
+}
+
+/// One flushed micro-batch.
+#[derive(Debug)]
+pub struct Batch<T> {
+    /// The coalesced items, in arrival order.
+    pub items: Vec<T>,
+    /// Total records across `items` (the federated round size).
+    pub records: usize,
+    /// Which policy edge flushed it.
+    pub trigger: FlushTrigger,
+}
+
+/// Pulls items off an mpsc queue and groups them under the two-trigger
+/// flush policy. `count` maps an item to its record count (a request
+/// with `k` ids contributes `k` records to the round).
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    max_batch: usize,
+    max_wait: Duration,
+    count: fn(&T) -> usize,
+}
+
+impl<T> Batcher<T> {
+    /// New batcher over `rx`. `max_batch` is clamped to ≥ 1.
+    pub fn new(
+        rx: Receiver<T>,
+        max_batch: usize,
+        max_wait: Duration,
+        count: fn(&T) -> usize,
+    ) -> Batcher<T> {
+        Batcher { rx, max_batch: max_batch.max(1), max_wait, count }
+    }
+
+    /// Block until the next batch is ready (the queue is empty until one
+    /// item arrives, then fills for at most `max_wait`). `None` once
+    /// every sender is gone and the queue is drained.
+    pub fn next_batch(&mut self) -> Option<Batch<T>> {
+        let first = self.rx.recv().ok()?;
+        let mut records = (self.count)(&first);
+        let mut items = vec![first];
+        let deadline = Instant::now() + self.max_wait;
+        let mut trigger = FlushTrigger::Timeout;
+        while records < self.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(item) => {
+                    records += (self.count)(&item);
+                    items.push(item);
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    trigger = FlushTrigger::Closed;
+                    break;
+                }
+            }
+        }
+        if records >= self.max_batch {
+            trigger = FlushTrigger::Full;
+        }
+        Some(Batch { items, records, trigger })
+    }
+
+    /// Drain whatever is queued right now, without blocking — the
+    /// shutdown path, where leftover items get an explicit rejection
+    /// instead of being silently dropped.
+    pub fn drain(&mut self) -> Vec<T> {
+        let mut out = Vec::new();
+        while let Ok(item) = self.rx.try_recv() {
+            out.push(item);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn one(_: &u32) -> usize {
+        1
+    }
+
+    #[test]
+    fn flushes_full_when_queue_holds_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..5u32 {
+            tx.send(i).unwrap();
+        }
+        // items are already queued, so no timing is involved
+        let mut b = Batcher::new(rx, 3, Duration::from_secs(60), one);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.trigger, FlushTrigger::Full);
+        assert_eq!(batch.records, 3);
+        assert_eq!(batch.items, vec![0, 1, 2]);
+        // remaining two flush as the final batch once the sender is gone
+        drop(tx);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.trigger, FlushTrigger::Closed);
+        assert_eq!(batch.items, vec![3, 4]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn flushes_timeout_when_underfull() {
+        let (tx, rx) = channel();
+        tx.send(1u32).unwrap();
+        tx.send(2).unwrap();
+        let mut b = Batcher::new(rx, 100, Duration::from_millis(30), one);
+        let started = Instant::now();
+        let batch = b.next_batch().unwrap(); // sender still alive → must time out
+        assert_eq!(batch.trigger, FlushTrigger::Timeout);
+        assert_eq!(batch.records, 2);
+        assert!(started.elapsed() >= Duration::from_millis(25), "flushed before max_wait");
+        drop(tx);
+    }
+
+    #[test]
+    fn multi_record_items_count_toward_the_batch_bound() {
+        let (tx, rx) = channel();
+        tx.send(vec![1u64, 2, 3]).unwrap();
+        tx.send(vec![4, 5]).unwrap();
+        tx.send(vec![6]).unwrap();
+        let mut b = Batcher::new(rx, 4, Duration::from_secs(60), |v: &Vec<u64>| v.len());
+        let batch = b.next_batch().unwrap();
+        // 3 + 2 = 5 ≥ 4: the second item crosses the bound and flushes
+        assert_eq!(batch.trigger, FlushTrigger::Full);
+        assert_eq!(batch.records, 5);
+        assert_eq!(batch.items.len(), 2);
+        drop(tx);
+    }
+
+    #[test]
+    fn single_oversized_item_flushes_alone() {
+        let (tx, rx) = channel();
+        tx.send(vec![0u64; 10]).unwrap();
+        let mut b = Batcher::new(rx, 4, Duration::from_secs(60), |v: &Vec<u64>| v.len());
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.trigger, FlushTrigger::Full);
+        assert_eq!(batch.records, 10);
+        assert_eq!(batch.items.len(), 1, "a request is never split across rounds");
+        drop(tx);
+    }
+
+    #[test]
+    fn drained_queue_ends_iteration() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let mut b = Batcher::new(rx, 4, Duration::from_millis(1), one);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn drain_empties_the_queue_without_blocking() {
+        let (tx, rx) = channel();
+        for i in 0..3u32 {
+            tx.send(i).unwrap();
+        }
+        let mut b = Batcher::new(rx, 100, Duration::from_secs(60), one);
+        assert_eq!(b.drain(), vec![0, 1, 2]);
+        assert!(b.drain().is_empty(), "second drain finds nothing, instantly");
+        drop(tx);
+    }
+}

@@ -1,0 +1,98 @@
+//! Host-side serving loop: one long-lived daemon per non-gateway party.
+//!
+//! A daemon owns its party's weight shard and feature store, joins the
+//! TCP mesh once, and then answers micro-batch rounds forever: receive
+//! the gateway's id list, materialize the local feature rows, and return
+//! the zero-sum-masked partial `W_p X_p` — the per-party contributions
+//! stay hidden from the gateway exactly as in offline inference. An
+//! empty id batch is the shutdown signal; the daemon then pushes its
+//! byte-count row to the gateway and exits.
+
+use super::feature_store::FeatureStore;
+use crate::coordinator::distributed::gather_stats;
+use crate::coordinator::inference::{masked_partial, round_seed};
+use crate::net::{Payload, Transport, WireModel};
+use anyhow::{bail, Result};
+
+/// What a daemon did over its lifetime.
+#[derive(Clone, Debug)]
+pub struct DaemonReport {
+    /// Federated rounds answered (rounds this party could not serve
+    /// included — matches the gateway's count).
+    pub rounds: u64,
+    /// Total records scored across all successfully served rounds.
+    pub records: u64,
+}
+
+/// Serve micro-batch rounds until the gateway signals shutdown.
+///
+/// `w` is this party's weight shard for the store's feature block;
+/// `seed` is the mesh-wide agreed mask seed (the model/config seed, as
+/// in offline [`crate::coordinator::inference::predict`]).
+pub fn run_daemon<T: Transport>(
+    transport: &mut T,
+    store: &FeatureStore,
+    w: &[f64],
+    seed: u64,
+) -> Result<DaemonReport> {
+    let me = transport.id();
+    if me == 0 {
+        bail!("party 0 is the gateway; run_gateway serves it");
+    }
+    if w.len() != store.n_features() {
+        bail!(
+            "party {me}: weight shard has {} weights but the feature store is {} wide",
+            w.len(),
+            store.n_features()
+        );
+    }
+    let n = transport.n_parties();
+    let mut report = DaemonReport { rounds: 0, records: 0 };
+    loop {
+        let (round, ids) = match transport.recv(0, "serve:batch") {
+            Payload::IdBatch { round, ids } => (round, ids),
+            other => bail!("party {me}: malformed serve-plane batch: {other:?}"),
+        };
+        if ids.is_empty() {
+            break; // shutdown signal
+        }
+        // A record this party does not hold (stores drifted across
+        // parties — a deployment bug) must not take the daemon down:
+        // answer with an empty vector, which the gateway turns into
+        // per-request errors while the mesh keeps serving.
+        let masked = match store.gather(&ids) {
+            Ok(x) => {
+                report.records += ids.len() as u64;
+                masked_partial(&x, w, me, n, round_seed(seed, round))
+            }
+            Err(e) => {
+                eprintln!("party {me}: cannot serve round {round}: {e}");
+                Vec::new()
+            }
+        };
+        transport.send(0, "serve:wx", &Payload::Ring(masked));
+        report.rounds += 1;
+    }
+    // push our outgoing byte-count row to the gateway (uncounted control
+    // plane), mirroring the end-of-run gather in training/inference
+    let gathered = gather_stats(transport, WireModel::default());
+    debug_assert!(gathered.is_none(), "only party 0 assembles totals");
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::net::full_mesh;
+
+    #[test]
+    fn daemon_rejects_gateway_role_and_bad_shard() {
+        let (mut eps, _) = full_mesh(2);
+        let store = FeatureStore::from_block(Matrix::zeros(4, 3));
+        let err = run_daemon(&mut eps[0], &store, &[0.0; 3], 7).unwrap_err();
+        assert!(err.to_string().contains("gateway"), "{err}");
+        let err = run_daemon(&mut eps[1], &store, &[0.0; 2], 7).unwrap_err();
+        assert!(err.to_string().contains("2 weights"), "{err}");
+    }
+}

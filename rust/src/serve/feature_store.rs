@@ -1,0 +1,120 @@
+//! Keyed feature store: record id → this party's local feature row.
+//!
+//! Online inference addresses samples by a shared record id (the VFL
+//! entity-alignment key), not by row position: a request names ids, and
+//! every party materializes *its* feature block for exactly those ids.
+//! The store is the serving-side stand-in for each party's feature
+//! database; rows are held dense ([`Matrix`]) so a gathered batch feeds
+//! straight into the `W_p X_p` round.
+
+use crate::linalg::Matrix;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// One party's keyed feature rows.
+#[derive(Clone, Debug)]
+pub struct FeatureStore {
+    /// Record id → row index in `rows`.
+    index: HashMap<u64, usize>,
+    /// Dense feature rows (this party's vertical block only).
+    rows: Matrix,
+}
+
+impl FeatureStore {
+    /// Build a store mapping `ids[i]` to row `i` of `rows`. Ids must be
+    /// unique and one per row.
+    pub fn new(ids: Vec<u64>, rows: Matrix) -> Result<FeatureStore> {
+        if ids.len() != rows.rows {
+            bail!("{} ids for {} feature rows", ids.len(), rows.rows);
+        }
+        let mut index = HashMap::with_capacity(ids.len());
+        for (i, id) in ids.into_iter().enumerate() {
+            if index.insert(id, i).is_some() {
+                bail!("duplicate record id {id}");
+            }
+        }
+        Ok(FeatureStore { index, rows })
+    }
+
+    /// Store over a party's feature block with implicit ids `0..rows` —
+    /// the shape every `split_vertical` block has, and what the CLI uses
+    /// when no explicit id column exists.
+    pub fn from_block(rows: Matrix) -> FeatureStore {
+        let ids = (0..rows.rows as u64).collect();
+        FeatureStore::new(ids, rows).expect("sequential ids are unique")
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// True when the store holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Width of this party's feature block.
+    pub fn n_features(&self) -> usize {
+        self.rows.cols
+    }
+
+    /// Whether `id` is present.
+    pub fn contains(&self, id: u64) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    /// Materialize the feature rows for `ids`, in order (duplicates
+    /// allowed — two requests may name the same record in one round).
+    pub fn gather(&self, ids: &[u64]) -> Result<Matrix> {
+        let mut out = Matrix::zeros(ids.len(), self.rows.cols);
+        for (i, id) in ids.iter().enumerate() {
+            match self.index.get(id) {
+                Some(&row) => out.row_mut(i).copy_from_slice(self.rows.row(row)),
+                None => bail!("unknown record id {id}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows() -> Matrix {
+        Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]])
+    }
+
+    #[test]
+    fn gather_preserves_order_and_duplicates() {
+        let store = FeatureStore::new(vec![10, 20, 30], rows()).unwrap();
+        assert_eq!(store.len(), 3);
+        assert_eq!(store.n_features(), 2);
+        assert!(store.contains(20) && !store.contains(21));
+        let m = store.gather(&[30, 10, 30]).unwrap();
+        assert_eq!(m.row(0), &[5.0, 6.0]);
+        assert_eq!(m.row(1), &[1.0, 2.0]);
+        assert_eq!(m.row(2), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn from_block_uses_row_positions() {
+        let store = FeatureStore::from_block(rows());
+        let m = store.gather(&[2, 0]).unwrap();
+        assert_eq!(m.row(0), &[5.0, 6.0]);
+        assert_eq!(m.row(1), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn errors_name_the_problem() {
+        let err = FeatureStore::new(vec![1, 1, 2], rows()).unwrap_err();
+        assert!(err.to_string().contains("duplicate record id 1"), "{err}");
+        let err = FeatureStore::new(vec![1, 2], rows()).unwrap_err();
+        assert!(err.to_string().contains("2 ids for 3"), "{err}");
+        let store = FeatureStore::from_block(rows());
+        let err = store.gather(&[0, 99]).unwrap_err();
+        assert!(err.to_string().contains("unknown record id 99"), "{err}");
+        assert!(!store.is_empty());
+    }
+}

@@ -1,0 +1,389 @@
+//! The client-facing gateway (party 0): accept scoring requests over
+//! TCP, micro-batch them, drive one federated `WX` round per batch
+//! across the party mesh, and stream scores back per request.
+//!
+//! Threading shape: an acceptor thread takes client connections and
+//! spawns one reader per connection; readers decode [`ScoreRequest`]s
+//! and push them — each carrying a reply channel to its connection's
+//! writer thread — onto one queue. The gateway's own thread runs the
+//! [`Batcher`] over that queue and owns the mesh [`Transport`]
+//! exclusively, so the federated rounds stay strictly sequential (the
+//! protocol's per-link FIFO) while client I/O overlaps them.
+//!
+//! Privacy is the offline round's: each batch reveals only the summed
+//! `WX` to the gateway, never a party's partial, because every round
+//! draws fresh zero-sum masks from [`round_seed`].
+
+use super::batcher::{Batcher, FlushTrigger};
+use super::feature_store::FeatureStore;
+use super::wire::{read_request, write_response, ScoreRequest, ScoreResponse};
+use super::ServeConfig;
+use crate::coordinator::distributed::gather_stats;
+use crate::coordinator::inference::{masked_partial, round_seed};
+use crate::glm::GlmKind;
+use crate::metrics::Histogram;
+use crate::mpc::ring;
+use crate::net::{Payload, Transport, WireModel};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// What the gateway did over its lifetime.
+#[derive(Clone, Debug)]
+pub struct GatewayReport {
+    /// Federated rounds driven (= flushed batches that held ≥ 1
+    /// record), failed rounds included — matches the daemons' count.
+    pub rounds: u64,
+    /// Client requests answered (scored or rejected).
+    pub requests: u64,
+    /// Records scored across all *successful* rounds.
+    pub records: u64,
+    /// Successful-round sizes in records — the batch-size distribution
+    /// the flush policy produced.
+    pub batch_sizes: Histogram,
+    /// Batches flushed because `max_batch` records were pending.
+    pub full_flushes: u64,
+    /// Batches flushed because the oldest request hit `max_wait_ms`.
+    pub timeout_flushes: u64,
+    /// Serve-plane traffic in MB (every party's sends, gathered at
+    /// shutdown like a training run's comm totals).
+    pub comm_mb: f64,
+}
+
+/// A decoded request plus the path back to its client connection.
+struct PendingRequest {
+    req: ScoreRequest,
+    reply: Sender<ScoreResponse>,
+}
+
+/// Live client connections, tracked for two reasons: shutdown must be
+/// able to unblock every reader (shutting down the read half) and then
+/// wait for every writer to flush its queued responses, and a
+/// long-lived gateway must not accumulate dead fds/handles — readers
+/// remove their own `read_halves` entry on exit, and the acceptor
+/// reaps finished threads as connections come and go.
+#[derive(Default)]
+struct ClientConns {
+    /// Read halves by connection id.
+    read_halves: Mutex<HashMap<u64, TcpStream>>,
+    /// Per-connection reader threads (decode requests onto the queue).
+    readers: Mutex<Vec<JoinHandle<()>>>,
+    /// Per-connection writer threads (own a connection's write half).
+    writers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ClientConns {
+    /// Join and discard every already-finished thread in `which`.
+    fn reap(which: &Mutex<Vec<JoinHandle<()>>>) {
+        let mut ts = which.lock().unwrap();
+        let mut live = Vec::with_capacity(ts.len());
+        for h in ts.drain(..) {
+            if h.is_finished() {
+                let _ = h.join();
+            } else {
+                live.push(h);
+            }
+        }
+        *ts = live;
+    }
+}
+
+/// Serve scoring traffic until `cfg.max_requests` client requests are
+/// answered (forever when `None`). `listener` is the already-bound
+/// client-facing socket; `transport` is this party's mesh endpoint
+/// (id 0), with the daemons already connected. `w` is party 0's weight
+/// shard; `seed` the mesh-wide agreed mask seed.
+///
+/// Requires per-party stats sinks (socket transports) for the shutdown
+/// comm gather, like [`crate::coordinator::distributed::train_party`].
+pub fn run_gateway<T: Transport>(
+    transport: &mut T,
+    listener: TcpListener,
+    store: &FeatureStore,
+    w: &[f64],
+    kind: GlmKind,
+    seed: u64,
+    cfg: &ServeConfig,
+) -> Result<GatewayReport> {
+    if transport.id() != 0 {
+        bail!("the gateway is party 0 by convention; party {} runs run_daemon", transport.id());
+    }
+    if w.len() != store.n_features() {
+        bail!(
+            "gateway weight shard has {} weights but the feature store is {} wide",
+            w.len(),
+            store.n_features()
+        );
+    }
+    let (req_tx, req_rx) = channel::<PendingRequest>();
+    let stop = Arc::new(AtomicBool::new(false));
+    let conns = Arc::new(ClientConns::default());
+    let acceptor = spawn_acceptor(listener, req_tx, stop.clone(), conns.clone())?;
+
+    let mut batcher = Batcher::new(
+        req_rx,
+        cfg.max_batch,
+        Duration::from_millis(cfg.max_wait_ms),
+        |p: &PendingRequest| p.req.ids.len(),
+    );
+    let mut report = GatewayReport {
+        rounds: 0,
+        requests: 0,
+        records: 0,
+        batch_sizes: Histogram::new(),
+        full_flushes: 0,
+        timeout_flushes: 0,
+        comm_mb: 0.0,
+    };
+    let mut round: u64 = 0;
+
+    'serve: while let Some(batch) = batcher.next_batch() {
+        match batch.trigger {
+            FlushTrigger::Full => report.full_flushes += 1,
+            FlushTrigger::Timeout => report.timeout_flushes += 1,
+            FlushTrigger::Closed => {}
+        }
+        // reject requests naming unknown ids up front (the whole request
+        // fails — partial scores would misalign the response); the rest
+        // ride the round
+        let mut live: Vec<PendingRequest> = Vec::with_capacity(batch.items.len());
+        for p in batch.items {
+            report.requests += 1;
+            let unknown = p.req.ids.iter().find(|id| !store.contains(**id)).copied();
+            match unknown {
+                Some(id) => {
+                    let _ = p.reply.send(ScoreResponse::Err {
+                        req_id: p.req.req_id,
+                        message: format!("unknown record id {id}"),
+                    });
+                }
+                None if p.req.ids.is_empty() => {
+                    let _ = p
+                        .reply
+                        .send(ScoreResponse::Ok { req_id: p.req.req_id, scores: vec![] });
+                }
+                None => live.push(p),
+            }
+        }
+        let ids: Vec<u64> = live.iter().flat_map(|p| p.req.ids.iter().copied()).collect();
+        if !ids.is_empty() {
+            round += 1;
+            report.rounds += 1;
+            // a failed round (a daemon could not serve these records —
+            // store drift, a deployment bug) fails its requests, not
+            // the mesh: the daemons stay connected and the next batch
+            // is served normally
+            match drive_round(transport, store, w, kind, seed, round, &ids) {
+                Ok(scores) => {
+                    report.records += ids.len() as u64;
+                    report.batch_sizes.add(ids.len() as f64);
+                    let mut off = 0;
+                    for p in &live {
+                        let k = p.req.ids.len();
+                        let _ = p.reply.send(ScoreResponse::Ok {
+                            req_id: p.req.req_id,
+                            scores: scores[off..off + k].to_vec(),
+                        });
+                        off += k;
+                    }
+                }
+                Err(e) => {
+                    eprintln!("gateway: round {round} failed: {e}");
+                    for p in &live {
+                        let _ = p.reply.send(ScoreResponse::Err {
+                            req_id: p.req.req_id,
+                            message: format!("round failed: {e}"),
+                        });
+                    }
+                }
+            }
+        }
+        if let Some(max) = cfg.max_requests {
+            if report.requests >= max {
+                break 'serve;
+            }
+        }
+    }
+
+    // shutdown: stop accepting, release the daemons, gather comm totals
+    stop.store(true, Ordering::Release);
+    transport.broadcast("serve:batch", &Payload::IdBatch { round, ids: vec![] });
+    let comm = gather_stats(transport, WireModel::default())
+        .expect("party 0 assembles the comm totals");
+    report.comm_mb = comm.comm_mb;
+    acceptor.join().expect("acceptor thread panicked");
+    // unblock every connection reader and wait for them — after this,
+    // nothing new can enter the request queue
+    for (_, s) in conns.read_halves.lock().unwrap().drain() {
+        let _ = s.shutdown(Shutdown::Read);
+    }
+    for h in conns.readers.lock().unwrap().drain(..) {
+        let _ = h.join();
+    }
+    // requests that arrived too late to be served get an explicit
+    // rejection instead of a silent EOF
+    for p in batcher.drain() {
+        report.requests += 1;
+        let _ = p.reply.send(ScoreResponse::Err {
+            req_id: p.req.req_id,
+            message: "gateway shutting down".to_string(),
+        });
+    }
+    drop(batcher);
+    // every reply sender is gone now, so the writers drain their queues
+    // onto the wire and exit — without this join, returning (and the
+    // process exiting) could cut off a client's final response
+    for h in conns.writers.lock().unwrap().drain(..) {
+        let _ = h.join();
+    }
+    Ok(report)
+}
+
+/// One federated micro-batch round: broadcast the id list, fold every
+/// party's masked partial into the local one, reveal `WX`, apply the
+/// inverse link. Bit-identical to the offline round over the same rows.
+fn drive_round<T: Transport>(
+    transport: &mut T,
+    store: &FeatureStore,
+    w: &[f64],
+    kind: GlmKind,
+    seed: u64,
+    round: u64,
+    ids: &[u64],
+) -> Result<Vec<f64>> {
+    let n = transport.n_parties();
+    transport.broadcast("serve:batch", &Payload::IdBatch { round, ids: ids.to_vec() });
+    let x = store.gather(ids)?;
+    let mut total = masked_partial(&x, w, 0, n, round_seed(seed, round));
+    // consume every party's reply before validating any of them — each
+    // round must drain exactly one `serve:wx` per daemon, or a bad
+    // round would leave stale frames that desync every later round
+    let partials: Vec<Vec<u64>> =
+        (1..n).map(|q| transport.recv(q, "serve:wx").into_ring()).collect();
+    let mut bad = Vec::new();
+    for (q, theirs) in partials.iter().enumerate() {
+        if theirs.len() == total.len() {
+            total = ring::add_vec(&total, theirs);
+        } else {
+            bad.push(q + 1); // daemons answer short (empty) on failure
+        }
+    }
+    if !bad.is_empty() {
+        bail!("parties {bad:?} could not serve round {round} ({} records)", ids.len());
+    }
+    Ok(ring::decode_vec(&total).iter().map(|&z| kind.inverse_link(z)).collect())
+}
+
+/// Accept client connections until `stop`; one reader thread per
+/// connection decodes requests onto `req_tx`, one writer thread per
+/// connection owns the write half. Connections register in `conns` so
+/// [`run_gateway`]'s shutdown can unblock and drain them, and finished
+/// threads are reaped as traffic comes and goes.
+fn spawn_acceptor(
+    listener: TcpListener,
+    req_tx: Sender<PendingRequest>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<ClientConns>,
+) -> Result<JoinHandle<()>> {
+    listener
+        .set_nonblocking(true)
+        .context("setting the client listener nonblocking")?;
+    Ok(std::thread::spawn(move || {
+        let mut next_id: u64 = 0;
+        while !stop.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nodelay(true).ok();
+                    // without a registered read half, shutdown could not
+                    // unblock this connection's reader — reject rather
+                    // than spawn an unkillable thread (EMFILE pressure)
+                    let read_half = match stream.try_clone() {
+                        Ok(rh) => rh,
+                        Err(e) => {
+                            eprintln!("gateway: rejecting client (fd clone failed: {e})");
+                            continue;
+                        }
+                    };
+                    let conn_id = next_id;
+                    next_id += 1;
+                    conns.read_halves.lock().unwrap().insert(conn_id, read_half);
+                    let req_tx = req_tx.clone();
+                    let conn_registry = conns.clone();
+                    let handle = std::thread::spawn(move || {
+                        serve_connection(stream, req_tx, conn_registry, conn_id)
+                    });
+                    conns.readers.lock().unwrap().push(handle);
+                    ClientConns::reap(&conns.readers);
+                    ClientConns::reap(&conns.writers);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => {
+                    // transient on a serving endpoint (ECONNABORTED from
+                    // a client resetting mid-handshake, EMFILE under fd
+                    // pressure): keep accepting, never take the gateway
+                    // down over one bad connection
+                    eprintln!("gateway: accept failed: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }))
+}
+
+/// Per-connection reader loop: decode requests, hand each a reply
+/// channel drained by this connection's writer thread. Deregisters its
+/// read half on exit so a long-lived gateway does not leak fds.
+fn serve_connection(
+    stream: TcpStream,
+    req_tx: Sender<PendingRequest>,
+    conns: Arc<ClientConns>,
+    conn_id: u64,
+) {
+    let mut read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("gateway: cloning client stream: {e}");
+            conns.read_halves.lock().unwrap().remove(&conn_id);
+            return;
+        }
+    };
+    let (resp_tx, resp_rx) = channel::<ScoreResponse>();
+    // a client that stops reading must not pin the writer (and with it
+    // the gateway's shutdown join) forever on a full send buffer
+    stream.set_write_timeout(Some(Duration::from_secs(10))).ok();
+    let writer = std::thread::spawn(move || {
+        let mut stream = stream;
+        while let Ok(resp) = resp_rx.recv() {
+            if write_response(&mut stream, &resp).is_err() {
+                return; // client went away or stalled past the timeout
+            }
+        }
+    });
+    conns.writers.lock().unwrap().push(writer);
+    loop {
+        match read_request(&mut read_half) {
+            Ok(Some(req)) => {
+                let pending = PendingRequest { req, reply: resp_tx.clone() };
+                if req_tx.send(pending).is_err() {
+                    break; // gateway shut down
+                }
+            }
+            Ok(None) => break, // clean disconnect
+            Err(e) => {
+                eprintln!("gateway: dropping client: {e}");
+                break;
+            }
+        }
+    }
+    // the writer exits once every reply sender is gone: ours now, and
+    // any clones riding still-queued or in-flight requests later
+    drop(resp_tx);
+    conns.read_halves.lock().unwrap().remove(&conn_id);
+}

@@ -1,0 +1,152 @@
+//! Closed-loop load generator for the serving gateway.
+//!
+//! `clients` threads each hold one connection and issue their share of
+//! `requests` back-to-back (closed loop: the next request leaves only
+//! after the previous response lands), which is how serving benchmarks
+//! conventionally probe the latency/throughput trade-off of a batching
+//! policy. Request shapes are seeded-random: `1..=max_ids_per_req`
+//! record ids drawn from `0..max_id`, so a stream mixes single-record
+//! and batched requests.
+
+use super::wire::{read_response, write_request, ScoreRequest, ScoreResponse};
+use crate::crypto::prng::ChaChaRng;
+use crate::metrics::{Histogram, Throughput};
+use anyhow::{bail, Context, Result};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// Load shape knobs.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Total requests across all clients.
+    pub requests: u64,
+    /// Max record ids per request (min is 1).
+    pub max_ids_per_req: usize,
+    /// Ids are drawn uniformly from `0..max_id`.
+    pub max_id: u64,
+    /// Seed for the request stream (deterministic shapes per seed).
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig { clients: 4, requests: 100, max_ids_per_req: 4, max_id: 1000, seed: 7 }
+    }
+}
+
+/// Aggregated loadgen results.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    /// Requests sent (and answered — the loop is closed).
+    pub sent: u64,
+    /// Requests answered with scores.
+    pub ok: u64,
+    /// Requests answered with an error.
+    pub errors: u64,
+    /// Wall time of the whole run in seconds.
+    pub wall_secs: f64,
+    /// Answered requests per second.
+    pub qps: f64,
+    /// Per-request latency in seconds.
+    pub latency: Histogram,
+    /// Request sizes in record ids (the stream shape actually sent).
+    pub request_sizes: Histogram,
+    /// Every `(record id, score)` pair received, across all clients —
+    /// the parity oracle for tests.
+    pub scored: Vec<(u64, f64)>,
+}
+
+/// Run the closed-loop load against a gateway at `addr`.
+pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    if cfg.clients == 0 || cfg.requests == 0 {
+        bail!("loadgen needs at least one client and one request");
+    }
+    if cfg.max_id == 0 {
+        bail!("loadgen needs a nonempty id space (max_id > 0)");
+    }
+    let mut throughput = Throughput::start();
+    let mut handles = Vec::with_capacity(cfg.clients);
+    for c in 0..cfg.clients {
+        // split `requests` across clients, first clients take the excess
+        let share = cfg.requests / cfg.clients as u64
+            + ((c as u64) < cfg.requests % cfg.clients as u64) as u64;
+        let addr = addr.to_string();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || client_loop(&addr, &cfg, c, share)));
+    }
+    let mut report = LoadgenReport {
+        sent: 0,
+        ok: 0,
+        errors: 0,
+        wall_secs: 0.0,
+        qps: 0.0,
+        latency: Histogram::new(),
+        request_sizes: Histogram::new(),
+        scored: Vec::new(),
+    };
+    for h in handles {
+        let client = h.join().expect("loadgen client panicked")?;
+        throughput.record(client.sent);
+        report.sent += client.sent;
+        report.ok += client.ok;
+        report.errors += client.errors;
+        report.latency.merge(&client.latency);
+        report.request_sizes.merge(&client.request_sizes);
+        report.scored.extend(client.scored);
+    }
+    report.wall_secs = throughput.elapsed_secs();
+    report.qps = throughput.per_sec();
+    Ok(report)
+}
+
+struct ClientResult {
+    sent: u64,
+    ok: u64,
+    errors: u64,
+    latency: Histogram,
+    request_sizes: Histogram,
+    scored: Vec<(u64, f64)>,
+}
+
+fn client_loop(addr: &str, cfg: &LoadgenConfig, c: usize, share: u64) -> Result<ClientResult> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("loadgen client {c}: connecting to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let mut rng = ChaChaRng::from_seed(cfg.seed.wrapping_add(0x10_0000 + c as u64));
+    let mut out = ClientResult {
+        sent: 0,
+        ok: 0,
+        errors: 0,
+        latency: Histogram::new(),
+        request_sizes: Histogram::new(),
+        scored: Vec::new(),
+    };
+    for i in 0..share {
+        let k = 1 + (rng.next_u64() as usize) % cfg.max_ids_per_req.max(1);
+        let ids: Vec<u64> = (0..k).map(|_| rng.next_u64() % cfg.max_id).collect();
+        let req = ScoreRequest { req_id: ((c as u64) << 32) | i, ids: ids.clone() };
+        let sent_at = Instant::now();
+        write_request(&mut stream, &req)?;
+        let resp = read_response(&mut stream)?
+            .with_context(|| format!("loadgen client {c}: gateway hung up mid-run"))?;
+        out.latency.add(sent_at.elapsed().as_secs_f64());
+        out.request_sizes.add(k as f64);
+        out.sent += 1;
+        match resp {
+            ScoreResponse::Ok { req_id, scores } => {
+                if req_id != req.req_id {
+                    bail!("client {c}: response for {req_id}, expected {}", req.req_id);
+                }
+                if scores.len() != ids.len() {
+                    bail!("client {c}: {} scores for {} ids", scores.len(), ids.len());
+                }
+                out.ok += 1;
+                out.scored.extend(ids.into_iter().zip(scores));
+            }
+            ScoreResponse::Err { .. } => out.errors += 1,
+        }
+    }
+    Ok(out)
+}

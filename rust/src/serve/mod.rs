@@ -1,0 +1,63 @@
+//! Online federated inference serving.
+//!
+//! Training produces a model whose weights are sharded across parties;
+//! this module is the system that *answers traffic* with it, without
+//! ever pooling weights or features — the production workload the VFL
+//! literature calls online joint inference. Three roles:
+//!
+//! - **Party daemons** ([`daemon::run_daemon`], parties 1..): load their
+//!   weight shard ([`crate::coordinator::persist::WeightShard`]) and a
+//!   keyed [`FeatureStore`], join the mesh, and answer micro-batch
+//!   rounds until told to stop.
+//! - **The gateway** ([`gateway::run_gateway`], party 0): accepts client
+//!   [`wire`] requests over TCP, coalesces them under the
+//!   [`batcher::Batcher`]'s two-trigger flush policy (`max_batch`
+//!   records / `max_wait_ms`), drives one federated `WX` round per
+//!   batch, and streams scores back per request.
+//! - **The load generator** ([`loadgen`]): closed-loop clients that
+//!   probe QPS and latency percentiles against a live gateway.
+//!
+//! One round here is *the same computation* as offline
+//! [`crate::coordinator::inference::predict`] — both call the shared
+//! masked-partial core, and the zero-sum masks cancel exactly in ring
+//! arithmetic — so served scores are bit-identical to offline
+//! predictions (asserted in `tests/serve_parity.rs`).
+
+pub mod batcher;
+pub mod daemon;
+pub mod feature_store;
+pub mod gateway;
+pub mod loadgen;
+pub mod wire;
+
+pub use batcher::{Batch, Batcher, FlushTrigger};
+pub use daemon::{run_daemon, DaemonReport};
+pub use feature_store::FeatureStore;
+pub use gateway::{run_gateway, GatewayReport};
+pub use wire::{ScoreRequest, ScoreResponse};
+
+/// Serving knobs: the `[serve]` config-file section
+/// ([`crate::coordinator::config_file`]) plus CLI overrides.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Client-facing listen address of the gateway (party 0).
+    pub gateway_addr: String,
+    /// Flush a micro-batch once this many records are pending.
+    pub max_batch: usize,
+    /// Flush a micro-batch once its oldest request has waited this long.
+    pub max_wait_ms: u64,
+    /// Stop after answering this many client requests (`None`: serve
+    /// forever) — the bounded mode tests and smoke runs use.
+    pub max_requests: Option<u64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            gateway_addr: "127.0.0.1:8100".to_string(),
+            max_batch: 64,
+            max_wait_ms: 5,
+            max_requests: None,
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Client ↔ gateway wire protocol: length-prefixed frames over TCP.
+//!
+//! This is the *external* serving API — it is spoken by arbitrary
+//! clients, not by mutually authenticated parties, so unlike
+//! [`crate::net::Payload`] it must reject malformed input instead of
+//! panicking. Layout (little-endian):
+//!
+//! - request:  `len u32 | req_id u64 | n_ids u32 | ids u64×n`
+//! - response: `len u32 | req_id u64 | status u8 | body`, where status 0
+//!   carries `n u32 | scores f64×n` and status 1 carries
+//!   `err_len u32 | utf8 message`
+//!
+//! `len` counts everything after itself; frames beyond [`MAX_FRAME`]
+//! are rejected before any allocation.
+
+use anyhow::{bail, Context, Result};
+use std::io::{ErrorKind, Read, Write};
+
+/// Upper bound on a client frame (1 MiB ≈ 130k ids — far past any sane
+/// micro-batch); guards the gateway against absurd length prefixes.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// A client's scoring request: score these records, in order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScoreRequest {
+    /// Client-chosen correlation id, echoed in the response.
+    pub req_id: u64,
+    /// Record ids to score.
+    pub ids: Vec<u64>,
+}
+
+/// The gateway's answer to one [`ScoreRequest`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScoreResponse {
+    /// Scores, one per requested id, in request order.
+    Ok {
+        /// Echo of the request's correlation id.
+        req_id: u64,
+        /// Predicted mean responses `g⁻¹(WX)`.
+        scores: Vec<f64>,
+    },
+    /// The request could not be served (e.g. an unknown record id).
+    Err {
+        /// Echo of the request's correlation id.
+        req_id: u64,
+        /// Human-readable reason.
+        message: String,
+    },
+}
+
+impl ScoreResponse {
+    /// The correlation id this response answers.
+    pub fn req_id(&self) -> u64 {
+        match self {
+            ScoreResponse::Ok { req_id, .. } | ScoreResponse::Err { req_id, .. } => *req_id,
+        }
+    }
+}
+
+fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> Result<()> {
+    let mut buf = Vec::with_capacity(4 + body.len());
+    buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    buf.extend_from_slice(body);
+    w.write_all(&buf).context("writing frame")?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. `Ok(None)` on clean EOF at a frame
+/// boundary (the peer is done); errors on oversized or torn frames.
+fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    match r.read_exact(&mut len) {
+        Ok(()) => {}
+        Err(e) if e.kind() == ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e).context("reading frame length"),
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME {
+        bail!("frame of {len} bytes exceeds the {MAX_FRAME}-byte limit");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading frame body")?;
+    Ok(Some(body))
+}
+
+/// Send a scoring request.
+pub fn write_request<W: Write>(w: &mut W, req: &ScoreRequest) -> Result<()> {
+    let mut body = Vec::with_capacity(12 + req.ids.len() * 8);
+    body.extend_from_slice(&req.req_id.to_le_bytes());
+    body.extend_from_slice(&(req.ids.len() as u32).to_le_bytes());
+    for &id in &req.ids {
+        body.extend_from_slice(&id.to_le_bytes());
+    }
+    write_frame(w, &body)
+}
+
+/// Receive the next scoring request; `Ok(None)` on clean disconnect.
+pub fn read_request<R: Read>(r: &mut R) -> Result<Option<ScoreRequest>> {
+    let Some(body) = read_frame(r)? else {
+        return Ok(None);
+    };
+    if body.len() < 12 {
+        bail!("request frame too short ({} bytes)", body.len());
+    }
+    let req_id = u64::from_le_bytes(body[..8].try_into().unwrap());
+    let n = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
+    if body.len() != 12 + n * 8 {
+        bail!("request claims {n} ids but carries {} bytes", body.len());
+    }
+    let ids = (0..n)
+        .map(|i| u64::from_le_bytes(body[12 + i * 8..20 + i * 8].try_into().unwrap()))
+        .collect();
+    Ok(Some(ScoreRequest { req_id, ids }))
+}
+
+/// Send a response.
+pub fn write_response<W: Write>(w: &mut W, resp: &ScoreResponse) -> Result<()> {
+    let mut body = Vec::new();
+    body.extend_from_slice(&resp.req_id().to_le_bytes());
+    match resp {
+        ScoreResponse::Ok { scores, .. } => {
+            body.push(0);
+            body.extend_from_slice(&(scores.len() as u32).to_le_bytes());
+            for &s in scores {
+                body.extend_from_slice(&s.to_le_bytes());
+            }
+        }
+        ScoreResponse::Err { message, .. } => {
+            body.push(1);
+            body.extend_from_slice(&(message.len() as u32).to_le_bytes());
+            body.extend_from_slice(message.as_bytes());
+        }
+    }
+    write_frame(w, &body)
+}
+
+/// Receive the next response; `Ok(None)` on clean disconnect.
+pub fn read_response<R: Read>(r: &mut R) -> Result<Option<ScoreResponse>> {
+    let Some(body) = read_frame(r)? else {
+        return Ok(None);
+    };
+    if body.len() < 13 {
+        bail!("response frame too short ({} bytes)", body.len());
+    }
+    let req_id = u64::from_le_bytes(body[..8].try_into().unwrap());
+    let status = body[8];
+    let n = u32::from_le_bytes(body[9..13].try_into().unwrap()) as usize;
+    match status {
+        0 => {
+            if body.len() != 13 + n * 8 {
+                bail!("response claims {n} scores but carries {} bytes", body.len());
+            }
+            let scores = (0..n)
+                .map(|i| f64::from_le_bytes(body[13 + i * 8..21 + i * 8].try_into().unwrap()))
+                .collect();
+            Ok(Some(ScoreResponse::Ok { req_id, scores }))
+        }
+        1 => {
+            if body.len() != 13 + n {
+                bail!("response claims a {n}-byte error but carries {} bytes", body.len());
+            }
+            let message = String::from_utf8(body[13..].to_vec())
+                .context("error message is not UTF-8")?;
+            Ok(Some(ScoreResponse::Err { req_id, message }))
+        }
+        s => bail!("unknown response status {s}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn request_roundtrip() {
+        for req in [
+            ScoreRequest { req_id: 7, ids: vec![1, 2, u64::MAX] },
+            ScoreRequest { req_id: 0, ids: vec![] },
+        ] {
+            let mut buf = Vec::new();
+            write_request(&mut buf, &req).unwrap();
+            let mut r = Cursor::new(buf);
+            assert_eq!(read_request(&mut r).unwrap(), Some(req));
+            assert_eq!(read_request(&mut r).unwrap(), None, "clean EOF after the frame");
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        for resp in [
+            ScoreResponse::Ok { req_id: 3, scores: vec![0.5, -1.25] },
+            ScoreResponse::Ok { req_id: 4, scores: vec![] },
+            ScoreResponse::Err { req_id: 5, message: "unknown record id 99".into() },
+        ] {
+            let mut buf = Vec::new();
+            write_response(&mut buf, &resp).unwrap();
+            assert_eq!(read_response(&mut Cursor::new(buf)).unwrap(), Some(resp));
+        }
+    }
+
+    #[test]
+    fn pipelined_frames_parse_in_order() {
+        let mut buf = Vec::new();
+        for i in 0..5u64 {
+            write_request(&mut buf, &ScoreRequest { req_id: i, ids: vec![i] }).unwrap();
+        }
+        let mut r = Cursor::new(buf);
+        for i in 0..5u64 {
+            assert_eq!(read_request(&mut r).unwrap().unwrap().req_id, i);
+        }
+        assert_eq!(read_request(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn rejects_malformed_frames_without_panicking() {
+        // oversized length prefix: rejected before allocation
+        let huge = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        assert!(read_request(&mut Cursor::new(huge.to_vec())).is_err());
+        // torn frame: length promises more than the stream holds
+        let mut torn = Vec::new();
+        write_request(&mut torn, &ScoreRequest { req_id: 1, ids: vec![2, 3] }).unwrap();
+        torn.truncate(torn.len() - 3);
+        assert!(read_request(&mut Cursor::new(torn)).is_err());
+        // id count disagreeing with the body length
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&9u32.to_le_bytes()); // claims 9 ids, carries 0
+        let mut lying = Vec::new();
+        lying.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        lying.extend_from_slice(&body);
+        assert!(read_request(&mut Cursor::new(lying)).is_err());
+        // unknown response status
+        let mut bad = Vec::new();
+        let mut body = vec![0u8; 13];
+        body[8] = 9;
+        bad.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        bad.extend_from_slice(&body);
+        assert!(read_response(&mut Cursor::new(bad)).is_err());
+    }
+}

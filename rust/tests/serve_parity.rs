@@ -1,0 +1,259 @@
+//! Online-serving acceptance: a 3-party serve mesh (micro-batching
+//! gateway + two daemons over real loopback TCP) must answer a shuffled
+//! stream of single-record and batched requests with scores
+//! **bit-identical** to offline `coordinator::inference::predict`, while
+//! the batcher demonstrably flushes on both of its triggers and loadgen
+//! reports a live QPS + p99.
+
+use efmvfl::coordinator::inference;
+use efmvfl::data::{split_vertical, synthetic};
+use efmvfl::glm::GlmKind;
+use efmvfl::net::tcp::{bind_ephemeral_roster, connect_mesh_with_listener};
+use efmvfl::serve::loadgen::{self, LoadgenConfig};
+use efmvfl::serve::wire::{read_response, write_request, ScoreRequest, ScoreResponse};
+use efmvfl::serve::{run_daemon, run_gateway, FeatureStore, ServeConfig};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+const PARTIES: usize = 3;
+const ROWS: usize = 120;
+const MAX_BATCH: usize = 8;
+
+#[test]
+fn served_scores_match_offline_predict_bit_for_bit() {
+    // the shared-seed dataset every party rebuilds, as in the CLI flow
+    let mut data = synthetic::credit_default_like(ROWS, 9, 42);
+    data.standardize();
+    let split = split_vertical(&data, PARTIES);
+    let weights: Vec<Vec<f64>> = (0..PARTIES)
+        .map(|p| {
+            (0..split.party_block(p).cols)
+                .map(|j| 0.07 * (p as f64 + 1.0) * (j as f64 - 1.5))
+                .collect()
+        })
+        .collect();
+    let kind = GlmKind::Logistic;
+    let seed = 42;
+
+    // offline reference: the one-shot federated round over all rows
+    let offline = inference::predict(&split, &weights, kind, seed).unwrap();
+    assert_eq!(offline.predictions.len(), ROWS);
+
+    // serving mesh over OS-assigned loopback ports
+    let (roster, listeners) = bind_ephemeral_roster(PARTIES).unwrap();
+    let client_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let gateway_addr = format!("127.0.0.1:{}", client_listener.local_addr().unwrap().port());
+
+    // 3 direct probe requests + 40 loadgen requests, then shut down
+    let direct_requests = 3u64;
+    let lg_cfg = LoadgenConfig {
+        clients: 3,
+        requests: 40,
+        max_ids_per_req: 4,
+        max_id: ROWS as u64,
+        seed: 9,
+    };
+    let serve_cfg = ServeConfig {
+        gateway_addr: gateway_addr.clone(),
+        max_batch: MAX_BATCH,
+        max_wait_ms: 20,
+        max_requests: Some(direct_requests + lg_cfg.requests),
+    };
+
+    let mut party_threads = Vec::new();
+    for (p, listener) in listeners.into_iter().enumerate() {
+        let roster = roster.clone();
+        let x = split.party_block(p).clone();
+        let w = weights[p].clone();
+        let cfg = serve_cfg.clone();
+        let client_listener = (p == 0).then(|| {
+            client_listener.try_clone().expect("cloning the client listener")
+        });
+        party_threads.push(std::thread::spawn(move || {
+            let mut transport =
+                connect_mesh_with_listener(&roster, p, listener, Duration::from_secs(30))
+                    .expect("mesh bootstrap");
+            let store = FeatureStore::from_block(x);
+            if p == 0 {
+                let rep = run_gateway(
+                    &mut transport,
+                    client_listener.unwrap(),
+                    &store,
+                    &w,
+                    kind,
+                    seed,
+                    &cfg,
+                )
+                .expect("gateway");
+                (Some(rep), None)
+            } else {
+                let rep = run_daemon(&mut transport, &store, &w, seed).expect("daemon");
+                (None, Some(rep))
+            }
+        }));
+    }
+
+    // --- phase 1: deterministic trigger probes over the raw wire ---
+    let mut conn = TcpStream::connect(gateway_addr.as_str()).expect("connecting to the gateway");
+    // (a) a lone single-record request can only flush via max_wait_ms
+    write_request(&mut conn, &ScoreRequest { req_id: 1, ids: vec![3] }).unwrap();
+    match read_response(&mut conn).unwrap().unwrap() {
+        ScoreResponse::Ok { req_id, scores } => {
+            assert_eq!(req_id, 1);
+            assert_eq!(scores, vec![offline.predictions[3]], "single-record parity");
+        }
+        other => panic!("expected scores, got {other:?}"),
+    }
+    // (b) a request carrying max_batch records flushes Full immediately
+    let ids: Vec<u64> = (0..MAX_BATCH as u64).collect();
+    write_request(&mut conn, &ScoreRequest { req_id: 2, ids: ids.clone() }).unwrap();
+    match read_response(&mut conn).unwrap().unwrap() {
+        ScoreResponse::Ok { req_id, scores } => {
+            assert_eq!(req_id, 2);
+            let want: Vec<f64> =
+                ids.iter().map(|&i| offline.predictions[i as usize]).collect();
+            assert_eq!(scores, want, "batched-request parity");
+        }
+        other => panic!("expected scores, got {other:?}"),
+    }
+    // (c) an unknown record id rejects the whole request, named
+    write_request(&mut conn, &ScoreRequest { req_id: 3, ids: vec![0, 9999] }).unwrap();
+    match read_response(&mut conn).unwrap().unwrap() {
+        ScoreResponse::Err { req_id, message } => {
+            assert_eq!(req_id, 3);
+            assert!(message.contains("9999"), "{message}");
+        }
+        other => panic!("expected an error, got {other:?}"),
+    }
+    drop(conn);
+
+    // --- phase 2: a shuffled concurrent stream through loadgen ---
+    let lg = loadgen::run(&gateway_addr, &lg_cfg).expect("loadgen");
+    assert_eq!(lg.sent, lg_cfg.requests);
+    assert_eq!(lg.errors, 0, "all loadgen ids are in-store");
+    assert!(lg.qps > 0.0, "loadgen must report a live throughput");
+    let p99 = lg.latency.p99();
+    assert!(p99.is_finite() && p99 > 0.0, "p99 latency must be measured");
+    assert!(lg.latency.p50() <= p99);
+    // the stream really carried batched requests (probe (a) above is
+    // the guaranteed single-record case)
+    assert!(lg.request_sizes.min() >= 1.0);
+    assert!(lg.request_sizes.max() > 1.0);
+    // every score across the shuffled stream is bit-identical to offline
+    assert!(!lg.scored.is_empty());
+    for (id, score) in &lg.scored {
+        assert_eq!(
+            *score,
+            offline.predictions[*id as usize],
+            "record {id}: served score diverged from offline predict"
+        );
+    }
+
+    // --- shutdown + flush-policy evidence from the gateway ---
+    let mut gateway_report = None;
+    let mut daemon_rounds = Vec::new();
+    for t in party_threads {
+        match t.join().expect("party thread panicked") {
+            (Some(g), None) => gateway_report = Some(g),
+            (None, Some(d)) => daemon_rounds.push(d.rounds),
+            _ => unreachable!(),
+        }
+    }
+    let g = gateway_report.expect("party 0 reports");
+    assert_eq!(g.requests, direct_requests + lg_cfg.requests);
+    assert!(g.rounds > 0);
+    assert_eq!(g.batch_sizes.count() as u64, g.rounds);
+    // both flush triggers fired: probe (a) guarantees a timeout flush,
+    // probe (b) guarantees a full flush — and the histogram shows a
+    // max_batch-sized round was actually formed
+    assert!(g.timeout_flushes >= 1, "max_wait_ms trigger never fired");
+    assert!(g.full_flushes >= 1, "max_batch trigger never fired");
+    assert!(g.batch_sizes.max() >= MAX_BATCH as f64);
+    assert!(g.comm_mb > 0.0, "serve-plane traffic must be accounted");
+    // every daemon saw every round
+    for rounds in daemon_rounds {
+        assert_eq!(rounds, g.rounds);
+    }
+}
+
+#[test]
+fn drifted_daemon_store_fails_one_request_not_the_mesh() {
+    // A record the gateway holds but a daemon does not (stores drifted —
+    // a deployment bug) must come back as a per-request error, and the
+    // next round must still serve bit-identical scores: one bad id must
+    // not take down the serve plane or desync the round protocol.
+    let mut data = synthetic::credit_default_like(40, 6, 11);
+    data.standardize();
+    let split = split_vertical(&data, 2);
+    let weights = vec![vec![0.3, -0.1, 0.2], vec![0.15, -0.25, 0.05]];
+    let kind = GlmKind::Logistic;
+    let seed = 11;
+    let offline = inference::predict(&split, &weights, kind, seed).unwrap();
+
+    let (roster, listeners) = bind_ephemeral_roster(2).unwrap();
+    let client_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let gateway_addr = format!("127.0.0.1:{}", client_listener.local_addr().unwrap().port());
+    let serve_cfg = ServeConfig {
+        gateway_addr: gateway_addr.clone(),
+        max_batch: 8,
+        max_wait_ms: 10,
+        max_requests: Some(2),
+    };
+
+    let mut threads = Vec::new();
+    for (p, listener) in listeners.into_iter().enumerate() {
+        let roster = roster.clone();
+        let w = weights[p].clone();
+        let cfg = serve_cfg.clone();
+        // the daemon's store is missing rows 30..40
+        let block = split.party_block(p).clone();
+        let client_listener =
+            (p == 0).then(|| client_listener.try_clone().expect("cloning the listener"));
+        threads.push(std::thread::spawn(move || {
+            let mut transport =
+                connect_mesh_with_listener(&roster, p, listener, Duration::from_secs(30))
+                    .expect("mesh bootstrap");
+            if p == 0 {
+                let store = FeatureStore::from_block(block);
+                run_gateway(
+                    &mut transport,
+                    client_listener.unwrap(),
+                    &store,
+                    &w,
+                    kind,
+                    seed,
+                    &cfg,
+                )
+                .expect("gateway");
+            } else {
+                let short = FeatureStore::new((0..30).collect(), block.slice_rows(0, 30))
+                    .expect("drifted store");
+                run_daemon(&mut transport, &short, &w, seed).expect("daemon");
+            }
+        }));
+    }
+
+    let mut conn = TcpStream::connect(gateway_addr.as_str()).expect("connecting");
+    // id 35 exists at the gateway but not at the daemon → request error
+    write_request(&mut conn, &ScoreRequest { req_id: 1, ids: vec![35] }).unwrap();
+    match read_response(&mut conn).unwrap().unwrap() {
+        ScoreResponse::Err { req_id, message } => {
+            assert_eq!(req_id, 1);
+            assert!(message.contains("round"), "{message}");
+        }
+        other => panic!("expected a per-request error, got {other:?}"),
+    }
+    // the mesh survived: the next request is served with exact parity
+    write_request(&mut conn, &ScoreRequest { req_id: 2, ids: vec![5] }).unwrap();
+    match read_response(&mut conn).unwrap().unwrap() {
+        ScoreResponse::Ok { req_id, scores } => {
+            assert_eq!(req_id, 2);
+            assert_eq!(scores, vec![offline.predictions[5]]);
+        }
+        other => panic!("expected scores, got {other:?}"),
+    }
+    drop(conn);
+    for t in threads {
+        t.join().expect("party thread panicked");
+    }
+}

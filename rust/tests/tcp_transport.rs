@@ -12,21 +12,15 @@
 use efmvfl::coordinator::{distributed, inference, train, TrainConfig};
 use efmvfl::data::{split_vertical, synthetic};
 use efmvfl::glm::GlmKind;
-use efmvfl::net::tcp::{connect_mesh_with_listener, Roster, TcpTransport};
+use efmvfl::net::tcp::{bind_ephemeral_roster, connect_mesh_with_listener, Roster, TcpTransport};
 use std::net::TcpListener;
 use std::time::Duration;
 
-/// Bind `n` loopback listeners on ephemeral ports and hand each party
-/// its listener plus the agreed roster (no reserve-then-rebind race).
+/// Bind `n` loopback listeners on OS-assigned (`port = 0`) ports and
+/// hand each party its listener plus the resolved roster — CI cannot
+/// flake on port collisions because no fixed port is ever reserved.
 fn loopback_listeners(n: usize) -> (Roster, Vec<TcpListener>) {
-    let mut listeners = Vec::with_capacity(n);
-    let mut addrs = Vec::with_capacity(n);
-    for _ in 0..n {
-        let l = TcpListener::bind("127.0.0.1:0").unwrap();
-        addrs.push(format!("127.0.0.1:{}", l.local_addr().unwrap().port()));
-        listeners.push(l);
-    }
-    (Roster::new(addrs), listeners)
+    bind_ephemeral_roster(n).expect("ephemeral loopback roster")
 }
 
 fn bootstrap(roster: &Roster, me: usize, listener: TcpListener) -> TcpTransport {
