@@ -6,8 +6,9 @@
 //! MPC share ops, and native-vs-PJRT dense math.
 //! Run with `cargo bench --bench micro`.
 
-use efmvfl::benchkit::{fmt_secs, print_table, time_fn};
+use efmvfl::benchkit::{bench_out_dir, fmt_secs, print_table, time_fn, write_json, Json};
 use efmvfl::bignum::{BigUint, Montgomery, PowTable};
+use efmvfl::crypto::fixed::PackLayout;
 use efmvfl::crypto::he_ops;
 use efmvfl::crypto::paillier::Keypair;
 use efmvfl::crypto::prng::ChaChaRng;
@@ -126,6 +127,142 @@ fn main() {
         );
     }
 
+    // ---- Protocol 3 ciphertext packing: packed vs unpacked (§Perf) ----
+    // The acceptance scale is 2048-bit keys, m=512, f=16;
+    // EFMVFL_BENCH_FAST shrinks to 1024-bit / m=128 for CI smoke runs.
+    let packing_json;
+    {
+        let fast = std::env::var("EFMVFL_BENCH_FAST").is_ok();
+        let (key_bits, m) = if fast { (1024, 128) } else { (2048usize, 512usize) };
+        let f = 16;
+        let runs = if fast { 5 } else { 1 };
+        let kp = Keypair::generate(key_bits, &mut rng);
+        let layout = PackLayout::for_modulus_bits(kp.pk.n.bit_len(), m);
+        assert!(layout.is_packed(), "{key_bits}-bit keys must give a multi-slot layout");
+        let x = Matrix::random(m, f, &mut rng);
+        let share: Vec<u64> = (0..m).map(|_| rng.next_u64()).collect();
+
+        let (t_enc_plain, _) = time_fn(3.0, runs, || {
+            std::hint::black_box(he_ops::encrypt_share_vec(&kp.pk, &share, &mut rng));
+        });
+        let (t_enc_packed, _) = time_fn(3.0, runs, || {
+            std::hint::black_box(he_ops::pack_encrypt_vec(&kp.pk, &share, &layout, &mut rng));
+        });
+        let cts_plain = he_ops::encrypt_share_vec(&kp.pk, &share, &mut rng);
+        let cts_packed = he_ops::pack_encrypt_vec(&kp.pk, &share, &layout, &mut rng);
+
+        // logical ciphertext exponentiations per matvec (counted once)
+        he_ops::perf::reset();
+        std::hint::black_box(he_ops::he_matvec_t_threads(&kp.pk, &cts_plain, &x, 1));
+        let exps_plain = he_ops::perf::ct_exps();
+        he_ops::perf::reset();
+        std::hint::black_box(he_ops::packed_matvec_t_threads(&kp.pk, &cts_packed, &x, &layout, 1));
+        let exps_packed = he_ops::perf::ct_exps();
+        he_ops::perf::reset();
+
+        let (t_mv_plain, _) = time_fn(5.0, runs, || {
+            std::hint::black_box(he_ops::he_matvec_t_threads(&kp.pk, &cts_plain, &x, 1));
+        });
+        let (t_mv_packed, _) = time_fn(5.0, runs, || {
+            std::hint::black_box(he_ops::packed_matvec_t_threads(&kp.pk, &cts_packed, &x, &layout, 1));
+        });
+        let threads = if std::env::var("EFMVFL_THREADS").is_ok() {
+            he_ops::he_threads()
+        } else {
+            he_ops::he_threads().max(4)
+        };
+        let (t_mv_packed_par, _) = time_fn(5.0, runs, || {
+            std::hint::black_box(he_ops::packed_matvec_t_threads(
+                &kp.pk, &cts_packed, &x, &layout, threads,
+            ));
+        });
+
+        // step-1 fanout bytes per CP→party link at this key size
+        let ct_bytes = kp.pk.ciphertext_bytes() as u64;
+        let fanout_plain = cts_plain.len() as u64 * ct_bytes;
+        let fanout_packed = cts_packed.len() as u64 * ct_bytes;
+
+        add(
+            &format!("encrypt_share_vec {m} ({key_bits}b)"),
+            t_enc_plain,
+            &format!("{} cts", cts_plain.len()),
+        );
+        add(
+            &format!("pack_encrypt_vec {m} ({key_bits}b)"),
+            t_enc_packed,
+            &format!("{} cts, {} slots", cts_packed.len(), layout.slots),
+        );
+        add(
+            &format!("he_matvec_t {m}×{f} ({key_bits}b)"),
+            t_mv_plain,
+            &format!("{exps_plain} ct-exps"),
+        );
+        add(
+            &format!("packed_matvec_t {m}×{f} ({key_bits}b)"),
+            t_mv_packed,
+            &format!("{exps_packed} ct-exps"),
+        );
+        add(
+            &format!("packed_matvec_t {m}×{f} ({key_bits}b) {threads} workers"),
+            t_mv_packed_par,
+            &format!("{:.2}x vs serial", t_mv_packed / t_mv_packed_par),
+        );
+        println!(
+            "packing at {key_bits}b/m={m}/f={f}: {} slots/ct, ct-exps {exps_plain}→{exps_packed} \
+             ({:.2}x), fanout {fanout_plain}→{fanout_packed} bytes ({:.2}x)",
+            layout.slots,
+            exps_plain as f64 / exps_packed as f64,
+            fanout_plain as f64 / fanout_packed as f64,
+        );
+
+        packing_json = Json::obj(vec![
+            ("bench", Json::str("micro")),
+            ("schema_version", Json::Int(1)),
+            ("mode", Json::str(if fast { "fast" } else { "full" })),
+            ("key_bits", Json::Int(key_bits as u64)),
+            ("batch_rows", Json::Int(m as u64)),
+            ("features", Json::Int(f as u64)),
+            ("layout", Json::obj(vec![
+                ("slot_bits", Json::Int(layout.slot_bits as u64)),
+                ("value_bits", Json::Int(layout.value_bits as u64)),
+                ("slots", Json::Int(layout.slots as u64)),
+                ("span", Json::Int(layout.span() as u64)),
+                ("blocks", Json::Int(layout.blocks_for(m) as u64)),
+            ])),
+            ("unpacked", Json::obj(vec![
+                ("ct_exps", Json::Int(exps_plain)),
+                ("fanout_bytes", Json::Int(fanout_plain)),
+                ("encrypt_secs", Json::Num(t_enc_plain)),
+                ("matvec_secs", Json::Num(t_mv_plain)),
+            ])),
+            ("packed", Json::obj(vec![
+                ("ct_exps", Json::Int(exps_packed)),
+                ("fanout_bytes", Json::Int(fanout_packed)),
+                ("encrypt_secs", Json::Num(t_enc_packed)),
+                ("matvec_secs", Json::Num(t_mv_packed)),
+                ("matvec_threaded_secs", Json::Num(t_mv_packed_par)),
+                ("threads", Json::Int(threads as u64)),
+            ])),
+            ("ratios", Json::obj(vec![
+                ("ct_exps", Json::Num(exps_plain as f64 / exps_packed as f64)),
+                ("fanout_bytes", Json::Num(fanout_plain as f64 / fanout_packed as f64)),
+                ("encrypt_secs", Json::Num(t_enc_plain / t_enc_packed)),
+                ("serial_over_threaded", Json::Num(t_mv_packed / t_mv_packed_par)),
+            ])),
+        ]);
+        // the acceptance floor holds at full scale (fast mode's narrower
+        // key gives fewer slots, so only sanity-check direction there)
+        let floor = if fast { 1.5 } else { 4.0 };
+        assert!(
+            exps_plain as f64 / exps_packed as f64 >= floor,
+            "ct-exp ratio below {floor}"
+        );
+        assert!(
+            fanout_plain as f64 / fanout_packed as f64 >= floor,
+            "fanout byte ratio below {floor}"
+        );
+    }
+
     // ---- MPC ----
     {
         let vals: Vec<f64> = (0..4096).map(|i| i as f64 * 0.25).collect();
@@ -165,4 +302,8 @@ fn main() {
 
     println!();
     print_table(&["operation", "median", "note"], &rows);
+
+    let out = bench_out_dir().join("BENCH_micro.json");
+    write_json(&out, &packing_json).expect("write BENCH_micro.json");
+    println!("wrote {}", out.display());
 }

@@ -1,0 +1,156 @@
+//! Protocol-3 round bench: one full secure-gradient round on a 3-party
+//! in-process mesh, packed (`PackingPolicy::Auto`) vs unpacked (`Off`).
+//!
+//! Reports wall time, total/ciphertext wire bytes, and the logical
+//! ciphertext-exponentiation count per round, plus the packed/unpacked
+//! ratios — the numbers persisted to `BENCH_p3.json`. Gradients from the
+//! two modes are asserted bit-identical before anything is written.
+//! Run with `cargo bench --bench p3`; `EFMVFL_BENCH_FAST=1` shrinks the
+//! key/batch for CI smoke runs.
+
+use efmvfl::benchkit::{bench_out_dir, fmt_secs, print_table, write_json, Json};
+use efmvfl::coordinator::testutil::mesh_ctxs_keyed;
+use efmvfl::crypto::fixed::PackLayout;
+use efmvfl::crypto::he_ops;
+use efmvfl::crypto::prng::ChaChaRng;
+use efmvfl::linalg::Matrix;
+use efmvfl::mpc::ring;
+use efmvfl::mpc::share::share_vec;
+use efmvfl::net::Transport;
+use efmvfl::protocols::{secure_gradient::protocol3_gradients, PackingPolicy};
+use std::thread;
+use std::time::Instant;
+
+const N_PARTIES: usize = 3;
+
+struct RoundOut {
+    grads: Vec<Vec<f64>>,
+    wall_secs: f64,
+    total_bytes: u64,
+    cipher_bytes: u64,
+    ct_exps: u64,
+}
+
+/// One full Protocol 3 round under `policy` on fresh keys/shares.
+fn run_round(policy: PackingPolicy, key_bits: usize, m: usize, f: usize, seed: u64) -> RoundOut {
+    let mut rng = ChaChaRng::from_seed(seed);
+    let blocks: Vec<Matrix> = (0..N_PARTIES)
+        .map(|_| Matrix::random(m, f, &mut rng))
+        .collect();
+    let md: Vec<f64> = (0..m).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+    let (s0, s1) = share_vec(&ring::encode_vec(&md), &mut rng);
+
+    let ctxs = mesh_ctxs_keyed(N_PARTIES, (0, 1), seed, key_bits);
+    let stats = ctxs[0].ep.stats().clone();
+    he_ops::perf::reset();
+    let started = Instant::now();
+    let mut handles = Vec::new();
+    for (p, mut ctx) in ctxs.into_iter().enumerate() {
+        ctx.packing = policy;
+        let x = blocks[p].clone();
+        let sh = match p {
+            0 => Some(s0.clone()),
+            1 => Some(s1.clone()),
+            _ => None,
+        };
+        handles.push(thread::spawn(move || {
+            protocol3_gradients(&mut ctx, &x, sh.as_ref())
+        }));
+    }
+    let grads: Vec<Vec<f64>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    RoundOut {
+        grads,
+        wall_secs: started.elapsed().as_secs_f64(),
+        total_bytes: stats.total_bytes(),
+        cipher_bytes: stats.cipher_bytes(),
+        ct_exps: he_ops::perf::ct_exps(),
+    }
+}
+
+fn main() {
+    let fast = std::env::var("EFMVFL_BENCH_FAST").is_ok();
+    let (key_bits, m) = if fast { (1024, 128) } else { (2048, 512) };
+    let f = 16;
+    let layout = PackLayout::for_modulus_bits(key_bits, m);
+    assert!(layout.is_packed(), "{key_bits}-bit keys must give a multi-slot layout");
+
+    let packed = run_round(PackingPolicy::Auto, key_bits, m, f, 7);
+    let unpacked = run_round(PackingPolicy::Off, key_bits, m, f, 7);
+
+    // the whole point: same bits, fewer bytes
+    for (p, (a, b)) in packed.grads.iter().zip(&unpacked.grads).enumerate() {
+        for (j, (ga, gb)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                ga.to_bits(),
+                gb.to_bits(),
+                "party {p} gradient[{j}] differs: packed {ga} vs unpacked {gb}"
+            );
+        }
+    }
+
+    let ratio = |plain: u64, pk: u64| plain as f64 / pk as f64;
+    let cipher_ratio = ratio(unpacked.cipher_bytes, packed.cipher_bytes);
+    let exps_ratio = ratio(unpacked.ct_exps, packed.ct_exps);
+    let wall_ratio = unpacked.wall_secs / packed.wall_secs;
+
+    let row = |name: &str, r: &RoundOut| {
+        vec![
+            name.to_string(),
+            fmt_secs(r.wall_secs),
+            r.cipher_bytes.to_string(),
+            r.total_bytes.to_string(),
+            r.ct_exps.to_string(),
+        ]
+    };
+    println!("protocol 3 round: {N_PARTIES} parties, {key_bits}b keys, m={m}, f={f}, {} slots/ct", layout.slots);
+    print_table(
+        &["mode", "wall", "cipher bytes", "total bytes", "ct-exps"],
+        &[row("unpacked", &unpacked), row("packed", &packed)],
+    );
+    println!(
+        "ratios (unpacked/packed): cipher bytes {cipher_ratio:.2}x, ct-exps {exps_ratio:.2}x, wall {wall_ratio:.2}x"
+    );
+
+    // acceptance floor at full scale; fast mode's narrower key packs
+    // fewer slots, so only the direction is checked there
+    let floor = if fast { 1.5 } else { 4.0 };
+    assert!(cipher_ratio >= floor, "cipher byte ratio {cipher_ratio:.2} below {floor}");
+    assert!(exps_ratio >= floor, "ct-exp ratio {exps_ratio:.2} below {floor}");
+
+    let side = |r: &RoundOut| {
+        Json::obj(vec![
+            ("wall_secs", Json::Num(r.wall_secs)),
+            ("cipher_bytes", Json::Int(r.cipher_bytes)),
+            ("total_bytes", Json::Int(r.total_bytes)),
+            ("ct_exps", Json::Int(r.ct_exps)),
+        ])
+    };
+    let report = Json::obj(vec![
+        ("bench", Json::str("p3_round")),
+        ("schema_version", Json::Int(1)),
+        ("mode", Json::str(if fast { "fast" } else { "full" })),
+        ("parties", Json::Int(N_PARTIES as u64)),
+        ("key_bits", Json::Int(key_bits as u64)),
+        ("batch_rows", Json::Int(m as u64)),
+        ("features", Json::Int(f as u64)),
+        ("threads", Json::Int(he_ops::he_threads() as u64)),
+        ("layout", Json::obj(vec![
+            ("slot_bits", Json::Int(layout.slot_bits as u64)),
+            ("value_bits", Json::Int(layout.value_bits as u64)),
+            ("slots", Json::Int(layout.slots as u64)),
+            ("span", Json::Int(layout.span() as u64)),
+            ("blocks", Json::Int(layout.blocks_for(m) as u64)),
+        ])),
+        ("unpacked", side(&unpacked)),
+        ("packed", side(&packed)),
+        ("ratios", Json::obj(vec![
+            ("cipher_bytes", Json::Num(cipher_ratio)),
+            ("ct_exps", Json::Num(exps_ratio)),
+            ("wall", Json::Num(wall_ratio)),
+        ])),
+        ("gradients_bit_identical", Json::Bool(true)),
+    ]);
+    let out = bench_out_dir().join("BENCH_p3.json");
+    write_json(&out, &report).expect("write BENCH_p3.json");
+    println!("wrote {}", out.display());
+}

@@ -1,8 +1,147 @@
 //! Tiny benchmarking harness (criterion substitute for the offline
-//! registry): warmup + repeated timing with median/MAD reporting, and
-//! aligned table printing for the paper-style result tables.
+//! registry): warmup + repeated timing with median/MAD reporting,
+//! aligned table printing for the paper-style result tables, and a
+//! hand-rolled JSON emitter for the persisted `BENCH_*.json` perf
+//! trajectory (no serde offline).
 
 use std::time::Instant;
+
+/// Minimal JSON value for the `BENCH_*.json` reports. Object keys keep
+/// insertion order so emitted files diff cleanly across runs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null` — used for timings a build could not measure.
+    Null,
+    /// Boolean.
+    Bool(bool),
+    /// Exact integer (counters, byte totals).
+    Int(u64),
+    /// Float; non-finite values render as `null` (JSON has no NaN).
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object as ordered key/value pairs.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Convenience string constructor.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Object from pairs (keeps order).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Render as a compact JSON string (no trailing newline).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out, 0);
+        out
+    }
+
+    fn render_into(&self, out: &mut String, indent: usize) {
+        let pad = |out: &mut String, n: usize| {
+            for _ in 0..n {
+                out.push_str("  ");
+            }
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(v) => out.push_str(&v.to_string()),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    // Display round-trips f64; always valid JSON.
+                    out.push_str(&format!("{v}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push_str("[\n");
+                for (i, item) in items.iter().enumerate() {
+                    pad(out, indent + 1);
+                    item.render_into(out, indent + 1);
+                    if i + 1 < items.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, indent);
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                if pairs.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    pad(out, indent + 1);
+                    Json::Str(k.clone()).render_into(out, indent + 1);
+                    out.push_str(": ");
+                    v.render_into(out, indent + 1);
+                    if i + 1 < pairs.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, indent);
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Write a `BENCH_*.json` report (pretty-printed, trailing newline),
+/// creating the parent directory if needed.
+pub fn write_json(path: &std::path::Path, value: &Json) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut s = value.render();
+    s.push('\n');
+    std::fs::write(path, s)
+}
+
+/// Directory for `BENCH_*.json` reports: `$EFMVFL_BENCH_OUT` if set,
+/// else the repository root (one above the crate manifest) — where the
+/// committed perf-trajectory files live, so a real bench run refreshes
+/// them in place.
+pub fn bench_out_dir() -> std::path::PathBuf {
+    match std::env::var("EFMVFL_BENCH_OUT") {
+        Ok(d) => std::path::PathBuf::from(d),
+        Err(_) => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(".."),
+    }
+}
 
 /// CPU time consumed by the *calling thread* (utime + stime from
 /// `/proc/thread-self/stat`), in seconds.
@@ -124,6 +263,56 @@ impl BenchScale {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_renders_valid_nested_report() {
+        let j = Json::obj(vec![
+            ("bench", Json::str("micro")),
+            ("timing_secs", Json::Null),
+            ("packed", Json::Bool(true)),
+            ("ct_exps", Json::Int(8192)),
+            ("ratio", Json::Num(5.95)),
+            ("ops", Json::Arr(vec![
+                Json::obj(vec![("name", Json::str("encrypt"))]),
+                Json::obj(vec![]),
+            ])),
+            ("empty", Json::Arr(vec![])),
+        ]);
+        let s = j.render();
+        assert!(s.starts_with("{\n"));
+        assert!(s.contains("\"bench\": \"micro\""));
+        assert!(s.contains("\"timing_secs\": null"));
+        assert!(s.contains("\"packed\": true"));
+        assert!(s.contains("\"ct_exps\": 8192"));
+        assert!(s.contains("\"ratio\": 5.95"));
+        assert!(s.contains("\"empty\": []"));
+        // key order is insertion order
+        assert!(s.find("bench").unwrap() < s.find("ratio").unwrap());
+    }
+
+    #[test]
+    fn json_escapes_strings_and_nonfinite() {
+        let j = Json::obj(vec![
+            ("s", Json::str("a\"b\\c\nd\te\u{1}")),
+            ("nan", Json::Num(f64::NAN)),
+            ("inf", Json::Num(f64::INFINITY)),
+        ]);
+        let s = j.render();
+        assert!(s.contains(r#""a\"b\\c\nd\te\u0001""#), "{s}");
+        assert!(s.contains("\"nan\": null"));
+        assert!(s.contains("\"inf\": null"));
+    }
+
+    #[test]
+    fn json_writes_report_file() {
+        let dir = std::env::temp_dir().join("efmvfl_benchkit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_json(&path, &Json::obj(vec![("ok", Json::Bool(true))])).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, "{\n  \"ok\": true\n}\n");
+        std::fs::remove_file(&path).unwrap();
+    }
 
     #[test]
     fn median_mad_basics() {

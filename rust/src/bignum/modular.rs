@@ -220,8 +220,11 @@ impl Montgomery {
 /// (the feature row), so the 15-entry table amortizes across the row.
 pub struct PowTable<'a> {
     mont: &'a Montgomery,
-    /// table[i] = base^i in Montgomery form, i in 0..16.
-    table: Vec<Vec<u64>>,
+    /// table[i] = base^i in Montgomery form, i in 0..16. `Cow` so
+    /// long-lived fixed bases (the Paillier obfuscator's `hⁿ` windows,
+    /// cached per public key) serve repeated exponentiations without
+    /// re-copying the ~8 KB table on every call.
+    table: std::borrow::Cow<'a, [Vec<u64>]>,
 }
 
 impl<'a> PowTable<'a> {
@@ -242,7 +245,7 @@ impl<'a> PowTable<'a> {
             let prev = mont.mont_mul_raw(&table[i - 1], &bm);
             table.push(prev);
         }
-        PowTable { mont, table }
+        PowTable { mont, table: std::borrow::Cow::Owned(table) }
     }
 
     /// `base^exp mod m` reusing the precomputed table.
@@ -284,14 +287,15 @@ impl<'a> PowTable<'a> {
     /// Extract the raw Montgomery-form window table (for callers that
     /// cache tables across uses, e.g. the Paillier obfuscator base).
     pub fn into_raw_table(self) -> Vec<Vec<u64>> {
-        self.table
+        self.table.into_owned()
     }
 
-    /// Rebuild a table from raw Montgomery-form windows extracted by
-    /// [`Self::into_raw_table`] (must be for the same modulus).
-    pub fn from_raw_table(mont: &'a Montgomery, table: &[Vec<u64>]) -> PowTable<'a> {
+    /// Wrap a cached raw window table **without copying** (must be for
+    /// the same modulus). This is the per-`pk` table-cache fast path:
+    /// the returned `PowTable` borrows the cache for its lifetime.
+    pub fn from_raw_table(mont: &'a Montgomery, table: &'a [Vec<u64>]) -> PowTable<'a> {
         assert_eq!(table.len(), 16, "window table must have 16 entries");
-        PowTable { mont, table: table.to_vec() }
+        PowTable { mont, table: std::borrow::Cow::Borrowed(table) }
     }
 }
 

@@ -33,7 +33,7 @@
 use super::TrainConfig;
 use crate::glm::GlmKind;
 use crate::net::tcp::Roster;
-use crate::protocols::CpSelection;
+use crate::protocols::{CpSelection, PackingPolicy};
 use crate::serve::ServeConfig;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
@@ -196,6 +196,15 @@ pub fn config_from_kv(kv: &HashMap<String, String>) -> Result<TrainConfig> {
             "obfuscator_pool" => {
                 cfg.obfuscator_pool = value.parse().context("obfuscator_pool")?
             }
+            "packing" => {
+                // must match on every party's config — the layout is
+                // derived, the policy is declared
+                cfg.packing = match value.as_str() {
+                    "auto" => PackingPolicy::Auto,
+                    "off" => PackingPolicy::Off,
+                    other => bail!("unknown packing policy {other:?} (auto|off)"),
+                }
+            }
             other => bail!("unknown config key {other:?}"),
         }
     }
@@ -290,6 +299,18 @@ mod tests {
         assert!(config_from_kv(&kv).is_err());
         assert!(parse_kv("no equals sign here\n").is_err());
         assert!(parse_kv("key =\n").is_err());
+    }
+
+    #[test]
+    fn packing_knob_parses() {
+        // default is Auto
+        let cfg = config_from_kv(&parse_kv("seed = 1\n").unwrap()).unwrap();
+        assert_eq!(cfg.packing, PackingPolicy::Auto);
+        let cfg = config_from_kv(&parse_kv("packing = \"off\"\n").unwrap()).unwrap();
+        assert_eq!(cfg.packing, PackingPolicy::Off);
+        let cfg = config_from_kv(&parse_kv("packing = auto\n").unwrap()).unwrap();
+        assert_eq!(cfg.packing, PackingPolicy::Auto);
+        assert!(config_from_kv(&parse_kv("packing = sideways\n").unwrap()).is_err());
     }
 
     #[test]

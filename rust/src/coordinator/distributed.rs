@@ -159,6 +159,7 @@ pub fn train_party<T: Transport>(
         cp: (0, 1),
         dealer: TripleDealer::new(cfg.seed),
         run_seed: cfg.seed,
+        packing: cfg.packing,
     };
     let input = party::PartyInput { x, y };
     let result = party::run_party(&mut ctx, input, cfg, compute);

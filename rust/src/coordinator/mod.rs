@@ -21,7 +21,7 @@ use crate::data::VerticalSplit;
 use crate::glm::GlmKind;
 use crate::mpc::beaver::TripleDealer;
 use crate::net::{full_mesh, WireModel};
-use crate::protocols::{CpSelection, ProtoCtx};
+use crate::protocols::{CpSelection, PackingPolicy, ProtoCtx};
 use crate::runtime::Compute;
 use anyhow::Result;
 use std::sync::Arc;
@@ -55,6 +55,9 @@ pub struct TrainConfig {
     /// Pre-generate this many Paillier obfuscators per party during setup
     /// (the §Perf encryption-pool optimization; 0 disables it).
     pub obfuscator_pool: usize,
+    /// Protocol 3 ciphertext packing (must match across parties; `Auto`
+    /// falls back to the unpacked path per-CP when the key is narrow).
+    pub packing: PackingPolicy,
 }
 
 impl TrainConfig {
@@ -72,6 +75,7 @@ impl TrainConfig {
             wire: WireModel::default(),
             use_xla: false,
             obfuscator_pool: 0,
+            packing: PackingPolicy::Auto,
         }
     }
 
@@ -105,6 +109,12 @@ impl TrainConfig {
     /// Builder: run seed.
     pub fn with_seed(mut self, s: u64) -> Self {
         self.seed = s;
+        self
+    }
+
+    /// Builder: Protocol 3 packing policy.
+    pub fn with_packing(mut self, p: PackingPolicy) -> Self {
+        self.packing = p;
         self
     }
 }
@@ -222,6 +232,7 @@ pub fn train(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> {
                 cp: (0, 1),
                 dealer: TripleDealer::new(cfg.seed),
                 run_seed: cfg.seed,
+                packing: cfg.packing,
             };
             let input = party::PartyInput {
                 x: data.party_block(p).clone(),

@@ -5,7 +5,7 @@ use crate::crypto::paillier::{Keypair, PublicKey};
 use crate::crypto::prng::ChaChaRng;
 use crate::mpc::beaver::TripleDealer;
 use crate::net::full_mesh;
-use crate::protocols::ProtoCtx;
+use crate::protocols::{PackingPolicy, ProtoCtx};
 use std::sync::Arc;
 
 /// Build `n` connected [`ProtoCtx`]s with the given CP pair and 256-bit
@@ -38,6 +38,10 @@ pub fn mesh_ctxs_keyed(n: usize, cp: (usize, usize), seed: u64, key_bits: usize)
             cp,
             dealer: TripleDealer::new(seed),
             run_seed: seed,
+            // 256-bit test keys fall back to unpacked anyway; Auto keeps
+            // the default path identical to production. Tests that pin a
+            // policy mutate `ctx.packing` before spawning parties.
+            packing: PackingPolicy::Auto,
         })
         .collect()
 }

@@ -65,6 +65,102 @@ pub fn rescale_i128(v: i128) -> i128 {
     v >> FRAC_BITS
 }
 
+// ---------------------------------------------------------------------------
+// Ciphertext packing: slot layout
+// ---------------------------------------------------------------------------
+
+/// Magnitude bound (bits) of a fixed-point-encoded feature value used as
+/// a packed-matvec exponent digit: `|encode(x)| < 2^(SLOT_X_BITS−1)`,
+/// i.e. `|x| < 16` at `FRAC_BITS = 20`. Standardized features satisfy
+/// this with a wide margin; the packed HE path asserts it.
+pub const SLOT_X_BITS: usize = 25;
+
+/// Width (bits) of one packed share value: ring shares travel as signed
+/// i64, so `|d| ≤ 2^(SLOT_SHARE_BITS−1)`.
+pub const SLOT_SHARE_BITS: usize = 64;
+
+/// Statistical-hiding noise width added per garbage digit when a packed
+/// convolution plaintext is sanitized before leaving the decrypting
+/// party (mirrors [`crate::crypto::he_ops::MASK_STAT_BITS`]).
+pub const SLOT_NOISE_BITS: usize = 80;
+
+/// Multi-slot layout for packing fixed-point/ring values into one
+/// Paillier plaintext.
+///
+/// The packed Protocol 3 fanout encodes `slots` share values `d_t` as
+/// base-`B` digits of one plaintext (`B = 2^slot_bits`), and evaluates
+/// `Xᵀ·[[d]]` by raising each packed ciphertext to a *reversed* packed
+/// exponent of feature values — a polynomial convolution whose middle
+/// digit is the exact block inner product `Σ_t x_t·d_t`. One
+/// exponentiation therefore drives a whole `slots`-value stripe.
+///
+/// Slot width math (`value_bits` = max |digit| after accumulation):
+///
+/// ```text
+/// value_bits = (SLOT_X_BITS−1) + (SLOT_SHARE_BITS−1) + ⌈log₂ m⌉
+///              └ scalar-mult growth ┘ └ share value ┘   └ m-deep add ┘
+/// slot_bits  = value_bits + SLOT_NOISE_BITS + 2
+/// ```
+///
+/// The `+2` leaves room for the per-digit sign offset `H = 2^(slot_bits−2)`
+/// plus a `< 2^(slot_bits−1)` sanitizer noise term without inter-digit
+/// carries. A convolution product spans `2·slots − 1` digits, so
+/// `slots` is derived from `⌊(n_bits − 2) / slot_bits⌋` with the span
+/// halved back: packing engages only when at least 3 digit positions fit
+/// (`slots ≥ 2`); narrower keys fall back to the unpacked path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PackLayout {
+    /// Bits per digit position (`B = 2^slot_bits`).
+    pub slot_bits: usize,
+    /// Values carried per packed ciphertext.
+    pub slots: usize,
+    /// Max magnitude (bits) of any convolution digit — drives the sign
+    /// offset and the decoded-value range check.
+    pub value_bits: usize,
+}
+
+impl PackLayout {
+    /// Derive the layout for a Paillier modulus of `n_bits` bits and an
+    /// accumulation depth (batch rows) of `m`. Deterministic in its
+    /// inputs, so every party computes the same layout without
+    /// negotiation.
+    pub fn for_modulus_bits(n_bits: usize, m: usize) -> PackLayout {
+        let acc_bits = ceil_log2(m.max(1));
+        let value_bits = (SLOT_X_BITS - 1) + (SLOT_SHARE_BITS - 1) + acc_bits;
+        assert!(value_bits <= 120, "packing accumulation depth too large for i128 decode");
+        let slot_bits = value_bits + SLOT_NOISE_BITS + 2;
+        let max_span = n_bits.saturating_sub(2) / slot_bits;
+        let slots = if max_span >= 3 { (max_span + 1) / 2 } else { 1 };
+        PackLayout { slot_bits, slots, value_bits }
+    }
+
+    /// Digit positions a packed convolution product occupies.
+    pub fn span(&self) -> usize {
+        2 * self.slots - 1
+    }
+
+    /// Whether this layout actually packs anything (`slots ≥ 2`); when
+    /// false, callers must use the unpacked per-value path.
+    pub fn is_packed(&self) -> bool {
+        self.slots >= 2
+    }
+
+    /// Packed ciphertexts needed to carry `m` values.
+    pub fn blocks_for(&self, m: usize) -> usize {
+        m.div_ceil(self.slots)
+    }
+
+    /// Index of the digit carrying the exact inner product.
+    pub fn mid(&self) -> usize {
+        self.slots - 1
+    }
+}
+
+/// `⌈log₂ v⌉` for `v ≥ 1` (0 for v = 1).
+pub fn ceil_log2(v: usize) -> usize {
+    usize::BITS as usize - (v - 1).leading_zeros() as usize
+}
+
 /// Encode a slice.
 pub fn encode_vec(vs: &[f64]) -> Vec<i128> {
     vs.iter().map(|&v| encode(v)).collect()
@@ -115,6 +211,54 @@ mod tests {
         assert!((decode2(prod) - 0.0).abs() < 1e-5);
         let triple = encode(2.0) * encode(3.0) * encode(0.5);
         assert!((decode3(triple) - 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn pack_layout_2048() {
+        // the acceptance shape: 2048-bit key, m = 512 samples
+        let l = PackLayout::for_modulus_bits(2048, 512);
+        assert_eq!(l.value_bits, 24 + 63 + 9);
+        assert_eq!(l.slot_bits, l.value_bits + SLOT_NOISE_BITS + 2);
+        // span must fit below the modulus with 2 guard bits
+        assert!(l.span() * l.slot_bits <= 2046);
+        assert!(l.is_packed(), "2048-bit keys must pack");
+        assert!(l.slots >= 4, "acceptance needs ≥4 values per ciphertext, got {}", l.slots);
+        assert_eq!(l.blocks_for(512), 512_usize.div_ceil(l.slots));
+        assert_eq!(l.mid(), l.slots - 1);
+    }
+
+    #[test]
+    fn pack_layout_narrow_key_falls_back() {
+        // 256/512-bit test keys cannot hold 3 digits → unpacked fallback
+        for bits in [128usize, 256, 512] {
+            let l = PackLayout::for_modulus_bits(bits, 512);
+            assert!(!l.is_packed(), "{bits}-bit key must not pack");
+            assert_eq!(l.slots, 1);
+            assert_eq!(l.span(), 1);
+        }
+        // 1024-bit keys pack a few slots
+        let l = PackLayout::for_modulus_bits(1024, 512);
+        assert!(l.is_packed());
+    }
+
+    #[test]
+    fn pack_layout_depth_widens_slots() {
+        // deeper accumulation → wider digits → fewer slots
+        let shallow = PackLayout::for_modulus_bits(2048, 8);
+        let deep = PackLayout::for_modulus_bits(2048, 1 << 15);
+        assert!(shallow.slot_bits < deep.slot_bits);
+        assert!(shallow.slots >= deep.slots);
+        // layout is deterministic (party-agreement requirement)
+        assert_eq!(shallow, PackLayout::for_modulus_bits(2048, 8));
+    }
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(512), 9);
+        assert_eq!(ceil_log2(513), 10);
     }
 
     #[test]

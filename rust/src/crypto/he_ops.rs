@@ -20,10 +20,40 @@
 //!   (default: available parallelism, capped at 8).
 
 use crate::bignum::BigUint;
-use crate::crypto::fixed;
+use crate::crypto::fixed::{self, PackLayout};
 use crate::crypto::paillier::{Ciphertext, PublicKey};
 use crate::crypto::prng::ChaChaRng;
 use crate::linalg::Matrix;
+
+/// Global hot-path operation counters backing the `BENCH_*.json` perf
+/// trajectory: relaxed atomics bumped by the HE matvec kernels, read and
+/// reset by the benches to prove packed-vs-unpacked op-count ratios.
+pub mod perf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static CT_EXPS: AtomicU64 = AtomicU64::new(0);
+
+    /// Record `n` ciphertext exponentiations. The unit is one
+    /// (ciphertext, output) pair with a nonzero exponent — the count of
+    /// logical `ct^e` operations a naive evaluator would perform, which
+    /// is what packing shrinks (one packed exponent replaces a whole
+    /// slot stripe of scalar exponents).
+    pub(super) fn add_ct_exps(n: u64) {
+        if n > 0 {
+            CT_EXPS.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Ciphertext exponentiations recorded since the last [`reset`].
+    pub fn ct_exps() -> u64 {
+        CT_EXPS.load(Ordering::Relaxed)
+    }
+
+    /// Zero all counters (bench phase boundaries).
+    pub fn reset() {
+        CT_EXPS.store(0, Ordering::Relaxed);
+    }
+}
 
 /// Upper bound (bits) on any value Protocol 3 decrypts: a double-scale
 /// fixed-point matvec entry `Σᵢ enc(xᵢ)·enc(dᵢ)` for our shapes stays
@@ -126,6 +156,35 @@ pub fn he_matvec_t_threads(
     multi_exp(pk, cts, &exps, x.rows, x.cols, /*outputs_are_cols=*/ true, threads)
 }
 
+/// Build one 16-entry Montgomery window table per base ciphertext —
+/// shared read-only by every accumulation worker. Sharded across
+/// `threads` when the base count is worth the spawn cost.
+fn build_tables(pk: &PublicKey, cts: &[Ciphertext], threads: usize) -> Vec<Vec<Vec<u64>>> {
+    let n_bases = cts.len();
+    if threads <= 1 || n_bases < threads * 2 {
+        return cts.iter().map(|ct| pk.pow_table(ct).into_raw_table()).collect();
+    }
+    let chunk = (n_bases + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = cts
+            .chunks(chunk)
+            .map(|block| {
+                scope.spawn(move || {
+                    block
+                        .iter()
+                        .map(|ct| pk.pow_table(ct).into_raw_table())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let mut all = Vec::with_capacity(n_bases);
+        for h in handles {
+            all.extend(h.join().expect("table worker panicked"));
+        }
+        all
+    })
+}
+
 /// Shared-squaring simultaneous exponentiation (Straus/Shamir-style):
 /// computes, for each output `o`, `Π_b table_b ^ |e(b,o)|` split into
 /// positive/negative accumulators, squaring each accumulator only **once
@@ -158,31 +217,7 @@ fn multi_exp(
     assert_eq!(cts.len(), n_bases);
     let threads = threads.max(1);
 
-    // 16-entry Montgomery window tables, one per base — built once (in
-    // parallel when worth it) and shared read-only by every worker.
-    let tables: Vec<Vec<Vec<u64>>> = if threads == 1 || n_bases < threads * 2 {
-        cts.iter().map(|ct| pk.pow_table(ct).into_raw_table()).collect()
-    } else {
-        let chunk = (n_bases + threads - 1) / threads;
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = cts
-                .chunks(chunk)
-                .map(|block| {
-                    scope.spawn(move || {
-                        block
-                            .iter()
-                            .map(|ct| pk.pow_table(ct).into_raw_table())
-                            .collect::<Vec<_>>()
-                    })
-                })
-                .collect();
-            let mut all = Vec::with_capacity(n_bases);
-            for h in handles {
-                all.extend(h.join().expect("table worker panicked"));
-            }
-            all
-        })
-    };
+    let tables = build_tables(pk, cts, threads);
 
     // exponent of base b for output o
     let exp_at = |b: usize, o: usize| -> i64 {
@@ -192,6 +227,17 @@ fn multi_exp(
             exps[o * cols + b]
         }
     };
+
+    // perf trajectory: one logical ct^e per nonzero (base, output) pair
+    let mut n_ops = 0u64;
+    for o in 0..n_out {
+        for b in 0..n_bases {
+            if exp_at(b, o) != 0 {
+                n_ops += 1;
+            }
+        }
+    }
+    perf::add_ct_exps(n_ops);
 
     // widest exponent drives the window count
     let max_bits = exps
@@ -315,6 +361,344 @@ pub fn unmask_decode(pk: &PublicKey, raw: &BigUint, r: &BigUint) -> i128 {
 /// plaintext, where fixed-point underflow can't bite).
 pub fn decode_gradient(v: i128, m_samples: usize) -> f64 {
     fixed::decode2(v) / m_samples as f64
+}
+
+// ---------------------------------------------------------------------------
+// Ciphertext packing: convolution matvec over multi-slot plaintexts
+// ---------------------------------------------------------------------------
+//
+// A packed ciphertext encrypts `slots` share values as base-B digits
+// (`B = 2^slot_bits`) of one plaintext. Raising it to a *reversed*
+// packed exponent of feature values multiplies the two digit
+// polynomials — a convolution spanning `2·slots − 1` digits whose
+// **middle digit is the exact block inner product** `Σ_t x_t·d_t`. One
+// ciphertext exponentiation therefore evaluates a whole `slots`-value
+// stripe of the matvec; block results accumulate homomorphically.
+//
+// The other convolution digits are garbage cross-terms that leak linear
+// combinations of the CP's share, so the decrypting CP *sanitizes* them
+// with statistical noise before the plaintext travels back
+// ([`sanitize_packed_raw`]); the returning party also hides its own
+// matvec output from the CP with a full-width mask ([`mask_ct_full`] —
+// perfect hiding mod n, since packed values fill most of the plaintext
+// space and the narrow [`mask_bits`] mask would not cover them).
+//
+// Digit extraction is carry-free by construction: every digit is offset
+// by `H = 2^(slot_bits−2)` at decode time, so signed digit values
+// `|c| < 2^value_bits ≤ H` plus sanitizer noise `< 2^(slot_bits−1)`
+// stay inside `[0, 2^slot_bits)`, and the whole span stays below
+// `2^(n_bits−2) < n` (see [`PackLayout`]).
+
+/// True when every entry of `x` fits the packed exponent digit bound
+/// (`|encode(x)| < 2^(SLOT_X_BITS−1)`, i.e. `|x| < 16`).
+pub fn x_fits_packing(x: &Matrix) -> bool {
+    let bound = 1i128 << (fixed::SLOT_X_BITS - 1);
+    x.data.iter().all(|&v| fixed::encode(v).abs() < bound)
+}
+
+/// Panic with a clear message when a feature matrix is too large in
+/// magnitude for the packed exponent digits (standardized features never
+/// are; raw unscaled data might be — the caller should fall back to the
+/// unpacked path or standardize).
+pub fn assert_x_fits_packing(x: &Matrix) {
+    assert!(
+        x_fits_packing(x),
+        "feature magnitude too large for packed exponents (need |x| < {}; standardize \
+         features or disable packing)",
+        (1u64 << (fixed::SLOT_X_BITS - 1)) as f64 / fixed::SCALE
+    );
+}
+
+/// Pack a share vector (ring values viewed as signed i64) into
+/// multi-slot plaintexts and encrypt: ciphertext `k` encrypts
+/// `Σ_t d_{k·slots+t} · B^t` (centered encoding, so negative digits
+/// subtract). The last block may be partial; missing slots are zero.
+pub fn pack_encrypt_vec(
+    pk: &PublicKey,
+    share: &[u64],
+    layout: &PackLayout,
+    rng: &mut ChaChaRng,
+) -> Vec<Ciphertext> {
+    assert!(layout.is_packed(), "pack_encrypt_vec needs a packing layout (slots ≥ 2)");
+    share
+        .chunks(layout.slots)
+        .map(|block| {
+            let mut pos = BigUint::zero();
+            let mut neg = BigUint::zero();
+            for (t, &s) in block.iter().enumerate() {
+                let d = s as i64;
+                if d == 0 {
+                    continue;
+                }
+                let mag = BigUint::from_u64(d.unsigned_abs()).shl_bits(t * layout.slot_bits);
+                if d > 0 {
+                    pos = pos.add(&mag);
+                } else {
+                    neg = neg.add(&mag);
+                }
+            }
+            // pos − neg in the centered embedding (both are < n)
+            let m = pos.add(&pk.n).sub(&neg).rem(&pk.n);
+            pk.encrypt_raw(&m, rng)
+        })
+        .collect()
+}
+
+/// Write a `≤ SLOT_X_BITS`-bit digit into a little-endian limb buffer at
+/// `bit_off`. Digits are ≥ `slot_bits ≥ 128` bits apart, so writes never
+/// collide.
+#[inline]
+fn set_digit(limbs: &mut [u64], bit_off: usize, v: u64) {
+    let li = bit_off / 64;
+    let sh = bit_off % 64;
+    limbs[li] |= v << sh;
+    if sh != 0 {
+        limbs[li + 1] |= v >> (64 - sh);
+    }
+}
+
+/// Read 4-bit window `q` of a little-endian limb buffer.
+#[inline]
+fn window_at(limbs: &[u64], q: usize) -> usize {
+    let bit = q * 4;
+    let li = bit / 64;
+    let sh = bit % 64;
+    let mut v = limbs[li] >> sh;
+    if sh > 60 {
+        if let Some(&next) = limbs.get(li + 1) {
+            v |= next << (64 - sh);
+        }
+    }
+    (v & 15) as usize
+}
+
+/// Packed homomorphic `Xᵀ · [[d]]`: `packed` carries `x.rows` share
+/// values in `blocks_for(x.rows)` ciphertexts ([`pack_encrypt_vec`]);
+/// output `j` encrypts a convolution whose middle digit is the exact
+/// integer `Σᵢ enc(X[i,j]) · dᵢ` — the same value the unpacked
+/// [`he_matvec_t`] path produces, extracted with [`unpack_mid_decode`].
+///
+/// Results are NOT re-randomized and their garbage digits depend on the
+/// shares: callers must mask with [`mask_ct_full`] (not the narrow
+/// [`mask_ct`]) before the ciphertexts leave the party.
+pub fn packed_matvec_t(
+    pk: &PublicKey,
+    packed: &[Ciphertext],
+    x: &Matrix,
+    layout: &PackLayout,
+) -> Vec<Ciphertext> {
+    packed_matvec_t_threads(pk, packed, x, layout, he_threads())
+}
+
+/// [`packed_matvec_t`] with an explicit worker count (1 = serial
+/// reference path; the threaded path is bit-identical).
+pub fn packed_matvec_t_threads(
+    pk: &PublicKey,
+    packed: &[Ciphertext],
+    x: &Matrix,
+    layout: &PackLayout,
+    threads: usize,
+) -> Vec<Ciphertext> {
+    assert!(layout.is_packed(), "packed matvec needs slots ≥ 2");
+    let s = layout.slots;
+    let w = layout.slot_bits;
+    let n_blocks = layout.blocks_for(x.rows);
+    assert_eq!(packed.len(), n_blocks, "packed ciphertext count != block count");
+    assert_x_fits_packing(x);
+    let threads = threads.max(1);
+    let mont = pk.mont();
+    let n_out = x.cols;
+
+    let tables = build_tables(pk, packed, threads);
+    let exps: Vec<i64> = x.data.iter().map(|&v| fixed::encode(v) as i64).collect();
+
+    // Reversed packed exponent: the digit for in-block slot t sits at
+    // B^(slots−1−t), so slot t of the plaintext meets slot (slots−1−t)
+    // of the exponent exactly at convolution digit slots−1 (the middle).
+    let exp_bits = (s - 1) * w + fixed::SLOT_X_BITS;
+    let nwin = (exp_bits + 3) / 4;
+    let exp_limbs = exp_bits / 64 + 2;
+    let one = mont.one_mont();
+
+    let compute_output = |o: usize| -> Ciphertext {
+        // per-block positive/negative exponent limb buffers
+        let mut pos_e = vec![0u64; n_blocks * exp_limbs];
+        let mut neg_e = vec![0u64; n_blocks * exp_limbs];
+        let mut used = vec![false; n_blocks];
+        for (k, u) in used.iter_mut().enumerate() {
+            for t in 0..s {
+                let i = k * s + t;
+                if i >= x.rows {
+                    break;
+                }
+                let e = exps[i * x.cols + o];
+                if e == 0 {
+                    continue;
+                }
+                *u = true;
+                let buf = if e > 0 { &mut pos_e } else { &mut neg_e };
+                set_digit(
+                    &mut buf[k * exp_limbs..(k + 1) * exp_limbs],
+                    (s - 1 - t) * w,
+                    e.unsigned_abs(),
+                );
+            }
+        }
+        perf::add_ct_exps(used.iter().filter(|&&u| u).count() as u64);
+
+        let mut acc_pos = one.clone();
+        let mut acc_neg = one.clone();
+        let mut pos_used = false;
+        let mut neg_used = false;
+        for q in (0..nwin).rev() {
+            if q != nwin - 1 {
+                for _ in 0..4 {
+                    if pos_used {
+                        acc_pos = mont.mul_mont(&acc_pos, &acc_pos);
+                    }
+                    if neg_used {
+                        acc_neg = mont.mul_mont(&acc_neg, &acc_neg);
+                    }
+                }
+            }
+            for (k, &u) in used.iter().enumerate() {
+                if !u {
+                    continue;
+                }
+                let ip = window_at(&pos_e[k * exp_limbs..(k + 1) * exp_limbs], q);
+                if ip != 0 {
+                    acc_pos = mont.mul_mont(&acc_pos, &tables[k][ip]);
+                    pos_used = true;
+                }
+                let im = window_at(&neg_e[k * exp_limbs..(k + 1) * exp_limbs], q);
+                if im != 0 {
+                    acc_neg = mont.mul_mont(&acc_neg, &tables[k][im]);
+                    neg_used = true;
+                }
+            }
+        }
+        let pos = mont.leave_mont(&acc_pos);
+        if !neg_used {
+            return Ciphertext(pos);
+        }
+        let neg = mont.leave_mont(&acc_neg);
+        let inv = crate::bignum::modular::modinv(&neg, &pk.n2)
+            .expect("ciphertext accumulator not a unit");
+        Ciphertext(pos.mul_mod(&inv, &pk.n2))
+    };
+
+    if threads == 1 || n_out < 2 {
+        return (0..n_out).map(compute_output).collect();
+    }
+    let compute_output = &compute_output;
+    let chunk = (n_out + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let start = (t * chunk).min(n_out);
+                let end = ((t + 1) * chunk).min(n_out);
+                scope.spawn(move || (start..end).map(compute_output).collect::<Vec<_>>())
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n_out);
+        for h in handles {
+            out.extend(h.join().expect("packed matvec worker panicked"));
+        }
+        out
+    })
+}
+
+/// Additively mask a ciphertext with `R` uniform in `[0, n)` — *perfect*
+/// hiding mod n, required for packed convolution outputs whose garbage
+/// digits would peek past the narrow [`mask_ct`] mask. Returns the
+/// masked ciphertext and `R`.
+pub fn mask_ct_full(pk: &PublicKey, ct: &Ciphertext, rng: &mut ChaChaRng) -> (Ciphertext, BigUint) {
+    let r = rng.next_biguint_below(&pk.n);
+    let enc_r = pk.encrypt_raw(&r, rng);
+    (pk.add(ct, &enc_r), r)
+}
+
+/// Sanitize a decrypted packed convolution plaintext before it leaves
+/// the decrypting CP: add fresh uniform `< 2^(slot_bits−1)` noise to
+/// every digit except the middle one, statistically hiding the garbage
+/// cross-terms (which are linear in the CP's share) to within
+/// `2^−SLOT_NOISE_BITS`. The middle digit is untouched, so the final
+/// gradient stays bit-identical to the unpacked path.
+pub fn sanitize_packed_raw(
+    pk: &PublicKey,
+    raw: &BigUint,
+    layout: &PackLayout,
+    rng: &mut ChaChaRng,
+) -> BigUint {
+    let bound = BigUint::one().shl_bits(layout.slot_bits - 1);
+    let mut noise = BigUint::zero();
+    for t in 0..layout.span() {
+        if t == layout.mid() {
+            continue;
+        }
+        let v = rng.next_biguint_below(&bound);
+        noise = noise.add(&v.shl_bits(t * layout.slot_bits));
+    }
+    raw.add(&noise).rem(&pk.n)
+}
+
+/// Sign offset `Σ_t H·B^t` over `count` digit positions
+/// (`H = 2^(slot_bits−2)`): added before digit extraction so every
+/// signed digit lands in `[0, 2^slot_bits)` without borrows.
+fn span_offset(layout: &PackLayout, count: usize) -> BigUint {
+    let h = BigUint::one().shl_bits(layout.slot_bits - 2);
+    let mut d = BigUint::zero();
+    for t in 0..count {
+        d = d.add(&h.shl_bits(t * layout.slot_bits));
+    }
+    d
+}
+
+/// Digit `t` (width `w` bits) of a non-negative integer.
+fn digit_at(u: &BigUint, t: usize, w: usize) -> BigUint {
+    let shifted = u.shr_bits(t * w);
+    shifted.sub(&shifted.shr_bits(w).shl_bits(w))
+}
+
+/// Remove the `H` offset from an extracted digit and decode the sign.
+fn signed_digit(digit: &BigUint, h: &BigUint) -> i128 {
+    match digit.checked_sub(h) {
+        Some(mag) => biguint_to_i128(&mag),
+        None => -biguint_to_i128(&h.sub(digit)),
+    }
+}
+
+fn biguint_to_i128(v: &BigUint) -> i128 {
+    assert!(v.bit_len() <= 126, "packed digit exceeds i128 range");
+    let limbs = v.limbs();
+    let lo = limbs.first().copied().unwrap_or(0) as u128;
+    let hi = limbs.get(1).copied().unwrap_or(0) as u128;
+    ((hi << 64) | lo) as i128
+}
+
+/// Extract `count` signed digits from a packed plaintext (mod-n value,
+/// e.g. a decrypted [`pack_encrypt_vec`] block with `count = slots`).
+/// Digits must be noise-free (|value| < 2^value_bits each); sanitized
+/// convolution outputs need [`unpack_mid_decode`] instead.
+pub fn unpack_decode(pk: &PublicKey, value: &BigUint, layout: &PackLayout, count: usize) -> Vec<i128> {
+    let w = layout.slot_bits;
+    let h = BigUint::one().shl_bits(w - 2);
+    let u = value.add(&span_offset(layout, count)).rem(&pk.n);
+    assert!(u.bit_len() <= count * w, "packed value overflows its digit span");
+    (0..count).map(|t| signed_digit(&digit_at(&u, t, w), &h)).collect()
+}
+
+/// Unmask a decrypted packed convolution output ([`mask_ct_full`]'s `R`)
+/// and extract the middle digit — the exact integer
+/// `Σᵢ enc(X[i,j])·dᵢ`, bit-identical to the unpacked path's
+/// [`unmask_decode`] result. Works on sanitized plaintexts: the offset
+/// spans every digit, so noisy garbage digits cannot borrow into the
+/// middle one.
+pub fn unpack_mid_decode(pk: &PublicKey, raw: &BigUint, r: &BigUint, layout: &PackLayout) -> i128 {
+    let v = raw.add(&pk.n).sub(&r.rem(&pk.n)).rem(&pk.n);
+    let u = v.add(&span_offset(layout, layout.span())).rem(&pk.n);
+    let h = BigUint::one().shl_bits(layout.slot_bits - 2);
+    signed_digit(&digit_at(&u, layout.mid(), layout.slot_bits), &h)
 }
 
 #[cfg(test)]
@@ -468,5 +852,180 @@ mod tests {
     fn decode_gradient_scaling() {
         let g = fixed::encode(2.0) * fixed::encode(3.0); // 6.0 double-scale
         assert!((decode_gradient(g, 4) - 1.5).abs() < 1e-6);
+    }
+
+    // ---- packing ----
+
+    /// Smallest key wide enough for a 2-slot layout at shallow depth —
+    /// keeps the packed unit tests fast.
+    fn packing_keypair(rng: &mut ChaChaRng) -> (Keypair, PackLayout) {
+        let kp = Keypair::generate(640, rng);
+        let layout = PackLayout::for_modulus_bits(kp.pk.n.bit_len(), 4);
+        assert!(layout.is_packed(), "640-bit key must pack ≥2 slots");
+        (kp, layout)
+    }
+
+    fn exact_matvec_col(x: &Matrix, share: &[u64], o: usize) -> i128 {
+        (0..x.rows)
+            .map(|i| fixed::encode(x.get(i, o)) * (share[i] as i64 as i128))
+            .sum()
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_extremes() {
+        let mut rng = ChaChaRng::from_seed(110);
+        let (kp, layout) = packing_keypair(&mut rng);
+        // extremes in every slot position: ±max i64, ±1, 0
+        let shares: Vec<u64> = vec![
+            0,
+            1,
+            u64::MAX,               // −1
+            i64::MAX as u64,        // +max
+            1 << 63,                // i64::MIN
+            (-42i64) as u64,
+            12345,
+        ];
+        let cts = pack_encrypt_vec(&kp.pk, &shares, &layout, &mut rng);
+        assert_eq!(cts.len(), layout.blocks_for(shares.len()));
+        let mut got = Vec::new();
+        for ct in &cts {
+            let raw = kp.sk.decrypt_raw(ct);
+            got.extend(unpack_decode(&kp.pk, &raw, &layout, layout.slots));
+        }
+        for (i, &s) in shares.iter().enumerate() {
+            assert_eq!(got[i], s as i64 as i128, "slot {i}");
+        }
+        // padding slots of the partial last block decode to zero
+        for &pad in &got[shares.len()..] {
+            assert_eq!(pad, 0);
+        }
+    }
+
+    #[test]
+    fn packed_matvec_matches_exact_integer() {
+        let mut rng = ChaChaRng::from_seed(111);
+        let (kp, layout) = packing_keypair(&mut rng);
+        let x = Matrix::from_rows(&[
+            &[1.0, -2.0, 0.0],
+            &[0.5, 3.0, -1.5],
+            &[-0.25, 0.0, 2.0],
+            &[1.5, 1.0, -1.0],
+        ]);
+        // negative values at slot borders: signs alternate across the
+        // block boundary (slots=2 → blocks [0,1], [2,3])
+        let shares: Vec<u64> = vec![
+            i64::MAX as u64,
+            1 << 63, // i64::MIN
+            (-7i64) as u64,
+            9,
+        ];
+        let packed = pack_encrypt_vec(&kp.pk, &shares, &layout, &mut rng);
+        let out = packed_matvec_t_threads(&kp.pk, &packed, &x, &layout, 1);
+        assert_eq!(out.len(), x.cols);
+        let zero = BigUint::zero();
+        for o in 0..x.cols {
+            let raw = kp.sk.decrypt_raw(&out[o]);
+            let got = unpack_mid_decode(&kp.pk, &raw, &zero, &layout);
+            assert_eq!(got, exact_matvec_col(&x, &shares, o), "output {o}");
+        }
+    }
+
+    #[test]
+    fn packed_matvec_threaded_bit_identical() {
+        let mut rng = ChaChaRng::from_seed(112);
+        let (kp, layout) = packing_keypair(&mut rng);
+        let x = Matrix::random(6, 5, &mut rng);
+        let shares: Vec<u64> = (0..6).map(|i| (i as i64 * 31 - 77) as u64).collect();
+        let packed = pack_encrypt_vec(&kp.pk, &shares, &layout, &mut rng);
+        let serial = packed_matvec_t_threads(&kp.pk, &packed, &x, &layout, 1);
+        for threads in [2usize, 3, 8] {
+            let par = packed_matvec_t_threads(&kp.pk, &packed, &x, &layout, threads);
+            assert_eq!(serial.len(), par.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.0, b.0, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn slot_overflow_boundary_at_full_depth() {
+        // the layout's worst case: every one of the m=4 accumulation
+        // steps contributes max-magnitude x · max-magnitude share
+        let mut rng = ChaChaRng::from_seed(113);
+        let (kp, layout) = packing_keypair(&mut rng);
+        let x_max = ((1i64 << (fixed::SLOT_X_BITS - 1)) - 1) as f64 / fixed::SCALE;
+        assert!(fixed::encode(x_max).abs() < 1 << (fixed::SLOT_X_BITS - 1));
+        // signs chosen so every product in a column has the same sign:
+        // col 0 accumulates toward −2^value_bits, col 1 toward +2^value_bits
+        let x = Matrix::from_rows(&[&[x_max, -x_max], &[-x_max, x_max], &[x_max, -x_max], &[
+            -x_max, x_max,
+        ]]);
+        let shares: Vec<u64> = vec![1 << 63, i64::MAX as u64, 1 << 63, i64::MAX as u64];
+        let packed = pack_encrypt_vec(&kp.pk, &shares, &layout, &mut rng);
+        let out = packed_matvec_t_threads(&kp.pk, &packed, &x, &layout, 1);
+        let zero = BigUint::zero();
+        for o in 0..x.cols {
+            let raw = kp.sk.decrypt_raw(&out[o]);
+            let expect = exact_matvec_col(&x, &shares, o);
+            // sanity: the boundary really pushes against value_bits
+            assert!(expect.unsigned_abs() < 1u128 << layout.value_bits);
+            assert!(expect.unsigned_abs() > 1u128 << (layout.value_bits - 3));
+            assert_eq!(unpack_mid_decode(&kp.pk, &raw, &zero, &layout), expect, "output {o}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "feature magnitude too large")]
+    fn oversized_x_rejected_by_packed_path() {
+        let mut rng = ChaChaRng::from_seed(114);
+        let (kp, layout) = packing_keypair(&mut rng);
+        let x = Matrix::from_rows(&[&[16.0], &[0.0], &[0.0], &[0.0]]);
+        let packed = pack_encrypt_vec(&kp.pk, &[1, 2, 3, 4], &layout, &mut rng);
+        packed_matvec_t_threads(&kp.pk, &packed, &x, &layout, 1);
+    }
+
+    #[test]
+    fn full_mask_and_sanitize_preserve_middle_digit() {
+        let mut rng = ChaChaRng::from_seed(115);
+        let (kp, layout) = packing_keypair(&mut rng);
+        let x = Matrix::from_rows(&[&[2.5], &[-1.25], &[0.75], &[3.0]]);
+        let shares: Vec<u64> = vec![(-1000i64) as u64, 2000, 123, (-456i64) as u64];
+        let packed = pack_encrypt_vec(&kp.pk, &shares, &layout, &mut rng);
+        let out = packed_matvec_t_threads(&kp.pk, &packed, &x, &layout, 1);
+
+        let (masked, r) = mask_ct_full(&kp.pk, &out[0], &mut rng);
+        // the decrypting CP sees a full-width masked value
+        let raw = kp.sk.decrypt_raw(&masked);
+        let sanitized = sanitize_packed_raw(&kp.pk, &raw, &layout, &mut rng);
+        // sanitizing changed the plaintext (garbage digits got noise)…
+        assert!(sanitized != raw, "sanitizer must perturb garbage digits");
+        // …but the unmasked middle digit is exactly the inner product
+        let expect = exact_matvec_col(&x, &shares, 0);
+        assert_eq!(unpack_mid_decode(&kp.pk, &sanitized, &r, &layout), expect);
+        // and the un-sanitized value agrees too (sanity)
+        assert_eq!(unpack_mid_decode(&kp.pk, &raw, &r, &layout), expect);
+    }
+
+    #[test]
+    fn ct_exps_counter_tracks_both_paths() {
+        let mut rng = ChaChaRng::from_seed(116);
+        let (kp, layout) = packing_keypair(&mut rng);
+        let x = Matrix::random(4, 3, &mut rng);
+        let shares: Vec<u64> = vec![1, 2, 3, 4];
+
+        // unpacked: one ct^e per (sample, output) pair
+        let cts = encrypt_share_vec(&kp.pk, &shares, &mut rng);
+        let before = perf::ct_exps();
+        he_matvec_t_threads(&kp.pk, &cts, &x, 1);
+        let unpacked_ops = perf::ct_exps() - before;
+        // (≥, not ==: other tests bump the global counter concurrently)
+        assert!(unpacked_ops >= (x.rows * x.cols) as u64);
+
+        // packed: one ct^e per (block, output) pair — slots× fewer
+        let packed = pack_encrypt_vec(&kp.pk, &shares, &layout, &mut rng);
+        let before = perf::ct_exps();
+        packed_matvec_t_threads(&kp.pk, &packed, &x, &layout, 1);
+        let packed_ops = perf::ct_exps() - before;
+        assert!(packed_ops >= (layout.blocks_for(x.rows) * x.cols) as u64);
     }
 }

@@ -191,6 +191,7 @@ impl PublicKey {
         // 256 for 1024-bit+ production keys)
         let s_bits = (self.n.bit_len() / 4).clamp(160, 256);
         let s = rng.next_biguint_exact_bits(s_bits);
+        // zero-copy borrow of the per-pk cached hⁿ window table
         let t = crate::bignum::PowTable::from_raw_table(&self.mont_n2, &self.hn_table);
         t.pow(&s)
     }
@@ -220,6 +221,17 @@ impl PublicKey {
     /// Number of pooled obfuscators remaining.
     pub fn pool_len(&self) -> usize {
         self.pool.lock().unwrap().len()
+    }
+
+    /// Top the pool back up to `target` obfuscators (no-op when already
+    /// at or above it). Train/serve loops call this *between* rounds so
+    /// the hot path always pops a precomputed `rⁿ` and
+    /// [`Self::encrypt_raw`] stays two multiplications.
+    pub fn refill_pool(&self, target: usize, rng: &mut ChaChaRng) {
+        let have = self.pool_len();
+        if have < target {
+            self.precompute_pool(target - have, rng);
+        }
     }
 
     /// Encrypt a non-negative plaintext `m < n`.
@@ -460,5 +472,23 @@ mod tests {
         let a = Keypair::generate(128, &mut rng);
         let b = Keypair::generate(128, &mut rng);
         assert_ne!(a.pk.n, b.pk.n);
+    }
+
+    #[test]
+    fn refill_pool_tops_up_between_rounds() {
+        let (kp, mut rng) = small_keypair(39);
+        kp.pk.refill_pool(3, &mut rng);
+        assert_eq!(kp.pk.pool_len(), 3);
+        // drain two, refill back to the target
+        let c = kp.pk.encrypt_i128(7, &mut rng);
+        let _ = kp.pk.encrypt_i128(-7, &mut rng);
+        assert_eq!(kp.pk.pool_len(), 1);
+        kp.pk.refill_pool(3, &mut rng);
+        assert_eq!(kp.pk.pool_len(), 3);
+        // refill at/above target is a no-op
+        kp.pk.refill_pool(2, &mut rng);
+        assert_eq!(kp.pk.pool_len(), 3);
+        // pooled obfuscators decrypt correctly
+        assert_eq!(kp.sk.decrypt_i128(&c, &kp.pk), 7);
     }
 }

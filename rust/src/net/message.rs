@@ -41,23 +41,37 @@ pub enum Payload {
 impl Payload {
     /// Pack a ciphertext vector (big-endian, zero-padded to `width`).
     pub fn from_ciphertexts(cts: &[Ciphertext], width: usize) -> Payload {
+        assert!(width > 0, "ciphertext width must be positive");
         let mut data = Vec::with_capacity(cts.len() * width);
         for ct in cts {
             let bytes = ct.0.to_bytes_be();
-            assert!(bytes.len() <= width, "ciphertext wider than key width");
+            assert!(
+                bytes.len() <= width,
+                "ciphertext wider than key width ({} > {width} bytes)",
+                bytes.len()
+            );
             data.extend(std::iter::repeat(0u8).take(width - bytes.len()));
             data.extend_from_slice(&bytes);
         }
         Payload::Cipher { width, data }
     }
 
-    /// Unpack a ciphertext vector.
+    /// Unpack a ciphertext vector. Asserts the frame is well-formed — a
+    /// ragged trailing chunk means a framing bug on the sending side and
+    /// must not silently decode as a short ciphertext.
     pub fn to_ciphertexts(&self) -> Vec<Ciphertext> {
         match self {
-            Payload::Cipher { width, data } => data
-                .chunks(*width)
-                .map(|c| Ciphertext(BigUint::from_bytes_be(c)))
-                .collect(),
+            Payload::Cipher { width, data } => {
+                assert!(*width > 0, "ciphertext width must be positive");
+                assert!(
+                    data.len() % width == 0,
+                    "ragged ciphertext frame: {} bytes is not a multiple of width {width}",
+                    data.len()
+                );
+                data.chunks(*width)
+                    .map(|c| Ciphertext(BigUint::from_bytes_be(c)))
+                    .collect()
+            }
             other => panic!("expected Cipher payload, got {other:?}"),
         }
     }
@@ -177,6 +191,11 @@ impl Payload {
             2 => {
                 let width = read_u64(&mut pos) as usize;
                 let len = read_u64(&mut pos) as usize;
+                assert!(width > 0, "ciphertext frame with zero width");
+                assert!(
+                    len % width == 0,
+                    "ragged ciphertext frame: {len} bytes is not a multiple of width {width}"
+                );
                 let data = bytes[pos..pos + len].to_vec();
                 Payload::Cipher { width, data }
             }
@@ -257,6 +276,28 @@ mod tests {
     fn overwide_ciphertext_rejected() {
         let ct = Ciphertext(BigUint::from_bytes_be(&[1u8; 9]));
         let _ = Payload::from_ciphertexts(&[ct], 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged ciphertext frame")]
+    fn ragged_cipher_frame_rejected_on_unpack() {
+        // 5 bytes under width 4: the trailing chunk must not silently
+        // decode as a short ciphertext
+        let p = Payload::Cipher { width: 4, data: vec![1, 2, 3, 4, 5] };
+        let _ = p.to_ciphertexts();
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged ciphertext frame")]
+    fn ragged_cipher_frame_rejected_on_decode() {
+        let p = Payload::Cipher { width: 4, data: vec![1, 2, 3, 4, 5] };
+        let _ = Payload::decode(&p.encode());
+    }
+
+    #[test]
+    #[should_panic(expected = "width must be positive")]
+    fn zero_width_cipher_frame_rejected() {
+        let _ = Payload::from_ciphertexts(&[], 0);
     }
 
     #[test]

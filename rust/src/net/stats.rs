@@ -40,6 +40,9 @@ pub struct NetStats {
     msgs: Vec<AtomicU64>,
     /// Offline-phase bytes (Beaver dealing), counted separately.
     offline_bytes: AtomicU64,
+    /// Ciphertext payload bytes (the HE share of the online traffic —
+    /// what ciphertext packing shrinks; also counted in `bytes`).
+    cipher_bytes: AtomicU64,
 }
 
 impl NetStats {
@@ -50,6 +53,7 @@ impl NetStats {
             bytes: (0..n * n).map(|_| AtomicU64::new(0)).collect(),
             msgs: (0..n * n).map(|_| AtomicU64::new(0)).collect(),
             offline_bytes: AtomicU64::new(0),
+            cipher_bytes: AtomicU64::new(0),
         }
     }
 
@@ -62,6 +66,12 @@ impl NetStats {
     /// Record offline-phase (preprocessing) traffic.
     pub fn record_offline(&self, len: usize) {
         self.offline_bytes.fetch_add(len as u64, Ordering::Relaxed);
+    }
+
+    /// Record the ciphertext-data share of a message already counted via
+    /// [`NetStats::record`] (a breakdown, not additional traffic).
+    pub fn record_cipher(&self, len: usize) {
+        self.cipher_bytes.fetch_add(len as u64, Ordering::Relaxed);
     }
 
     /// Total online bytes over all links.
@@ -79,6 +89,11 @@ impl NetStats {
         self.offline_bytes.load(Ordering::Relaxed)
     }
 
+    /// Ciphertext payload bytes (subset of [`NetStats::total_bytes`]).
+    pub fn cipher_bytes(&self) -> u64 {
+        self.cipher_bytes.load(Ordering::Relaxed)
+    }
+
     /// Bytes sent from `from` to `to`.
     pub fn link_bytes(&self, from: usize, to: usize) -> u64 {
         self.bytes[from * self.n + to].load(Ordering::Relaxed)
@@ -90,11 +105,12 @@ impl NetStats {
     }
 
     /// Flatten party `from`'s outgoing row for the end-of-run gather in
-    /// distributed mode: `[bytes to 0.., msgs to 0.., offline_bytes]`.
+    /// distributed mode:
+    /// `[bytes to 0.., msgs to 0.., offline_bytes, cipher_bytes]`.
     /// A socket transport counts only its own sends, so the union of all
     /// parties' rows equals what the in-process shared sink records.
     pub fn export_row(&self, from: usize) -> Vec<u64> {
-        let mut row = Vec::with_capacity(2 * self.n + 1);
+        let mut row = Vec::with_capacity(2 * self.n + 2);
         for to in 0..self.n {
             row.push(self.bytes[from * self.n + to].load(Ordering::Relaxed));
         }
@@ -102,18 +118,20 @@ impl NetStats {
             row.push(self.msgs[from * self.n + to].load(Ordering::Relaxed));
         }
         row.push(self.offline_bytes.load(Ordering::Relaxed));
+        row.push(self.cipher_bytes.load(Ordering::Relaxed));
         row
     }
 
     /// Merge a row produced by [`NetStats::export_row`] on party `from`'s
     /// side into this sink (adds, so local counts are preserved).
     pub fn merge_row(&self, from: usize, row: &[u64]) {
-        assert_eq!(row.len(), 2 * self.n + 1, "malformed stats row");
+        assert_eq!(row.len(), 2 * self.n + 2, "malformed stats row");
         for to in 0..self.n {
             self.bytes[from * self.n + to].fetch_add(row[to], Ordering::Relaxed);
             self.msgs[from * self.n + to].fetch_add(row[self.n + to], Ordering::Relaxed);
         }
         self.offline_bytes.fetch_add(row[2 * self.n], Ordering::Relaxed);
+        self.cipher_bytes.fetch_add(row[2 * self.n + 1], Ordering::Relaxed);
     }
 
     /// Reset all counters (between bench repetitions).
@@ -122,6 +140,7 @@ impl NetStats {
             c.store(0, Ordering::Relaxed);
         }
         self.offline_bytes.store(0, Ordering::Relaxed);
+        self.cipher_bytes.store(0, Ordering::Relaxed);
     }
 }
 
@@ -141,9 +160,12 @@ mod tests {
         assert_eq!(s.total_msgs(), 3);
         s.record_offline(1000);
         assert_eq!(s.offline_bytes(), 1000);
+        s.record_cipher(128);
+        assert_eq!(s.cipher_bytes(), 128);
         s.reset();
         assert_eq!(s.total_bytes(), 0);
         assert_eq!(s.offline_bytes(), 0);
+        assert_eq!(s.cipher_bytes(), 0);
     }
 
     #[test]
@@ -153,6 +175,7 @@ mod tests {
         local.record(1, 0, 100);
         local.record(1, 2, 40);
         local.record_offline(8);
+        local.record_cipher(64);
         // party 0's sink after merging the gathered row
         let sink = NetStats::new(3);
         sink.record(0, 1, 7);
@@ -162,6 +185,7 @@ mod tests {
         assert_eq!(sink.link_bytes(0, 1), 7);
         assert_eq!(sink.total_msgs(), 3);
         assert_eq!(sink.offline_bytes(), 8);
+        assert_eq!(sink.cipher_bytes(), 64);
     }
 
     #[test]

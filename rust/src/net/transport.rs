@@ -59,10 +59,15 @@ pub trait Transport: Send {
 
     /// Serialize and send `payload` to party `to`, recording its exact
     /// wire size (framing overhead: 2 ids + tag length, like a slim TCP
-    /// app header).
+    /// app header). Ciphertext frames additionally feed the
+    /// [`NetStats::cipher_bytes`] breakdown — the component the packing
+    /// benches track.
     fn send(&mut self, to: usize, tag: &str, payload: &Payload) {
         let bytes = payload.encode();
         self.stats().record(self.id(), to, bytes.len() + 8 + tag.len());
+        if let Payload::Cipher { data, .. } = payload {
+            self.stats().record_cipher(data.len());
+        }
         self.deliver(to, tag, bytes);
     }
 
@@ -199,6 +204,22 @@ mod tests {
         assert_eq!(stats.total_msgs(), 2);
         assert!(stats.link_bytes(0, 1) > 24);
         assert!(stats.link_bytes(1, 0) > 8);
+        assert_eq!(stats.cipher_bytes(), 0, "no ciphertexts crossed the wire");
+    }
+
+    #[test]
+    fn cipher_sends_feed_the_breakdown() {
+        let (mut eps, stats) = full_mesh(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let ct = Payload::Cipher { width: 4, data: vec![0u8; 12] };
+        a.send(1, "he", &ct);
+        a.send(1, "flag", &Payload::Flag(true));
+        assert_eq!(b.recv(0, "he"), ct);
+        assert_eq!(b.recv(0, "flag"), Payload::Flag(true));
+        // only the ciphertext *data* counts, and only for Cipher frames
+        assert_eq!(stats.cipher_bytes(), 12);
+        assert!(stats.total_bytes() > 12);
     }
 
     #[test]

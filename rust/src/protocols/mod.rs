@@ -35,11 +35,35 @@ pub mod secret_share;
 pub mod secure_gradient;
 pub mod secure_loss;
 
+use crate::crypto::fixed::PackLayout;
 use crate::crypto::paillier::{Keypair, PublicKey};
 use crate::crypto::prng::ChaChaRng;
 use crate::mpc::beaver::TripleDealer;
 use crate::net::{Endpoint, Transport};
 use std::sync::Arc;
+
+/// Whether Protocol 3 routes its HE fanout through multi-slot ciphertext
+/// packing ([`crate::crypto::he_ops::pack_encrypt_vec`]).
+///
+/// All parties must agree: the layout itself is derived deterministically
+/// from `(pk.n.bit_len(), batch_rows)` on every party, so the policy is
+/// the only coordination point — it travels in the run configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PackingPolicy {
+    /// Pack whenever the CP's key is wide enough ([`PackLayout::is_packed`]);
+    /// narrow keys fall back to the unpacked path per-CP automatically.
+    #[default]
+    Auto,
+    /// Always use the unpacked per-value path (reference/debug).
+    Off,
+}
+
+impl PackingPolicy {
+    /// True when this policy activates packing for `layout`.
+    pub fn active(&self, layout: &PackLayout) -> bool {
+        matches!(self, PackingPolicy::Auto) && layout.is_packed()
+    }
+}
 
 /// Per-party protocol context for one training run, generic over the
 /// transport (in-process [`Endpoint`] mesh or a real-socket
@@ -61,6 +85,8 @@ pub struct ProtoCtx<T: Transport = Endpoint> {
     pub dealer: TripleDealer,
     /// Base seed of the run (drives per-iteration dealer reseeding).
     pub run_seed: u64,
+    /// Protocol 3 ciphertext-packing policy (must match across parties).
+    pub packing: PackingPolicy,
 }
 
 impl<T: Transport> ProtoCtx<T> {

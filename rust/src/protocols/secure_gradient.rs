@@ -22,10 +22,28 @@
 //! product per iteration and a non-CP performs **two** — exactly the cost
 //! structure behind the paper's Figure 2 (runtime jumps from 2→3 parties,
 //! then flattens).
+//!
+//! ## Ciphertext packing
+//!
+//! With [`Auto`](super::PackingPolicy::Auto) packing and a wide enough
+//! CP key, step 1 packs
+//! `slots` share values per ciphertext ([`he_ops::pack_encrypt_vec`]),
+//! step 2 evaluates the matvec as a digit convolution
+//! ([`he_ops::packed_matvec_t`]) masked with a full-width `R`
+//! ([`he_ops::mask_ct_full`]), step 3 sanitizes the garbage convolution
+//! digits after decryption ([`he_ops::sanitize_packed_raw`]), and step 4
+//! extracts the middle digit ([`he_ops::unpack_mid_decode`]) — which is
+//! the **same exact integer** the unpacked path produces, so gradients
+//! are bit-identical while the step-1 fanout shrinks by ~`slots`×.
+//!
+//! Every party derives the same [`PackLayout`] from
+//! `(pk.n.bit_len(), batch_rows)`, so no negotiation happens on the
+//! wire; the policy itself ships in the run configuration and must
+//! match across parties.
 
 use super::ProtoCtx;
 use crate::bignum::BigUint;
-use crate::crypto::fixed;
+use crate::crypto::fixed::{self, PackLayout};
 use crate::crypto::he_ops;
 use crate::linalg::Matrix;
 use crate::mpc::ring::Elem;
@@ -101,11 +119,27 @@ pub fn protocol3_gradients<T: Transport>(
     he_ops::assert_key_wide_enough(&ctx.pks[cp_a]);
     he_ops::assert_key_wide_enough(&ctx.pks[cp_b]);
 
-    // 1. CPs encrypt their md share and fan it out.
+    // Per-CP packing decision, derived identically on every party from
+    // that CP's modulus width and the batch depth (no negotiation).
+    // Captures by value so `ctx` stays mutably borrowable below.
+    let packing = ctx.packing;
+    let key_bits: Vec<usize> = ctx.pks.iter().map(|pk| pk.n.bit_len()).collect();
+    let plan = move |c: usize| -> (PackLayout, bool) {
+        let layout = PackLayout::for_modulus_bits(key_bits[c], m);
+        (layout, packing.active(&layout))
+    };
+
+    // 1. CPs encrypt their md share and fan it out (packed: ~slots×
+    //    fewer ciphertexts on the wire).
     if ctx.is_cp() {
         let share = md_share.expect("CP must hold an md share").clone();
         let pk = ctx.pks[me].clone();
-        let cts = he_ops::encrypt_share_vec(&pk, &share.0, &mut ctx.rng);
+        let (layout, packed) = plan(me);
+        let cts = if packed {
+            he_ops::pack_encrypt_vec(&pk, &share.0, &layout, &mut ctx.rng)
+        } else {
+            he_ops::encrypt_share_vec(&pk, &share.0, &mut ctx.rng)
+        };
         let payload = Payload::from_ciphertexts(&cts, pk.ciphertext_bytes());
         for p in 0..n {
             if p != me {
@@ -115,7 +149,9 @@ pub fn protocol3_gradients<T: Transport>(
     }
 
     // 2. For each CP other than me: HE matvec + mask, send back.
-    //    Keep (cp, masks) to unmask in step 4.
+    //    Keep (cp, masks) to unmask in step 4. Packed convolution
+    //    outputs need the full-width mask — their garbage digits reach
+    //    far past the narrow statistical mask.
     let mut mask_sets: Vec<(usize, Vec<BigUint>)> = Vec::new();
     for &c in &cps {
         if c == me {
@@ -123,11 +159,20 @@ pub fn protocol3_gradients<T: Transport>(
         }
         let cts = ctx.ep.recv(c, "p3:encd").to_ciphertexts();
         let pk = ctx.pks[c].clone();
-        let enc_v = he_ops::he_matvec_t(&pk, &cts, x_own);
+        let (layout, packed) = plan(c);
+        let enc_v = if packed {
+            he_ops::packed_matvec_t(&pk, &cts, x_own, &layout)
+        } else {
+            he_ops::he_matvec_t(&pk, &cts, x_own)
+        };
         let mut masked = Vec::with_capacity(enc_v.len());
         let mut masks = Vec::with_capacity(enc_v.len());
         for ct in &enc_v {
-            let (mct, r) = he_ops::mask_ct(&pk, ct, &mut ctx.rng);
+            let (mct, r) = if packed {
+                he_ops::mask_ct_full(&pk, ct, &mut ctx.rng)
+            } else {
+                he_ops::mask_ct(&pk, ct, &mut ctx.rng)
+            };
             masked.push(mct);
             masks.push(r);
         }
@@ -139,9 +184,13 @@ pub fn protocol3_gradients<T: Transport>(
         mask_sets.push((c, masks));
     }
 
-    // 3. CPs decrypt the masked vectors for every other party.
+    // 3. CPs decrypt the masked vectors for every other party. Packed
+    //    plaintexts get their garbage convolution digits sanitized with
+    //    statistical noise before travelling back (the middle digit —
+    //    the gradient value — is untouched).
     if ctx.is_cp() {
         let pk = ctx.pks[me].clone();
+        let (layout, packed) = plan(me);
         let plain_width = (pk.n.bit_len() + 7) / 8;
         for p in 0..n {
             if p == me {
@@ -151,6 +200,11 @@ pub fn protocol3_gradients<T: Transport>(
             let mut bytes = Vec::with_capacity(masked.len() * plain_width);
             for ct in &masked {
                 let raw = ctx.kp.sk.decrypt_raw(ct);
+                let raw = if packed {
+                    he_ops::sanitize_packed_raw(&pk, &raw, &layout, &mut ctx.rng)
+                } else {
+                    raw
+                };
                 let be = raw.to_bytes_be();
                 assert!(be.len() <= plain_width);
                 bytes.extend(std::iter::repeat(0u8).take(plain_width - be.len()));
@@ -167,15 +221,24 @@ pub fn protocol3_gradients<T: Transport>(
     }
     for (c, masks) in mask_sets {
         let pk = &ctx.pks[c];
+        let (layout, packed) = plan(c);
         let plain_width = (pk.n.bit_len() + 7) / 8;
         let bytes = match ctx.ep.recv(c, "p3:dec") {
             Payload::Bytes(b) => b,
             other => panic!("expected Bytes, got {other:?}"),
         };
+        assert_eq!(bytes.len(), masks.len() * plain_width, "ragged p3:dec frame");
         let vals: Vec<i128> = bytes
             .chunks(plain_width)
             .zip(&masks)
-            .map(|(chunk, r)| he_ops::unmask_decode(pk, &BigUint::from_bytes_be(chunk), r))
+            .map(|(chunk, r)| {
+                let raw = BigUint::from_bytes_be(chunk);
+                if packed {
+                    he_ops::unpack_mid_decode(pk, &raw, r, &layout)
+                } else {
+                    he_ops::unmask_decode(pk, &raw, r)
+                }
+            })
             .collect();
         assert_eq!(vals.len(), x_own.cols);
         parts.push(vals);

@@ -12,6 +12,12 @@
 //! - PR: eq. (3): `L = −(S_{y·wx} − S_{e^{wx}})/m + Σln(y!)/m`;
 //!   one Beaver multiplication, `e^{WX}` shares reused from Protocol 2.
 //! - Linear: `L = S_{r²}/(2m)`, `r = WX − Y`.
+//!
+//! Protocol 4 moves only ring scalars (MPC shares and openings), never
+//! Paillier ciphertexts, so the Protocol 3 packing policy
+//! ([`super::PackingPolicy`]) has no effect here — neither on the values
+//! computed nor on a single byte of its traffic. Asserted in
+//! `loss_is_packing_independent` below.
 
 use super::mpc_online::mpc_mul;
 use super::ProtoCtx;
@@ -195,6 +201,45 @@ mod tests {
         let got = run_loss(2, (0, 1), GlmKind::Linear, wx.clone(), y.clone(), None, 0.0);
         let expect = GlmKind::Linear.loss(&wx, &y);
         assert!((got - expect).abs() < 1e-3);
+    }
+
+    #[test]
+    fn loss_is_packing_independent() {
+        // Protocol 4 carries no HE ciphertexts, so the packing policy
+        // must change neither the loss bits nor the traffic, and the
+        // cipher-byte breakdown must stay at zero.
+        use crate::protocols::PackingPolicy;
+        let wx = vec![0.3, -0.2, 0.1, 0.4];
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let m = wx.len();
+        let mut out = Vec::new();
+        for policy in [PackingPolicy::Auto, PackingPolicy::Off] {
+            let mut rng = ChaChaRng::from_seed(41);
+            let (wx0, wx1) = share_f64(&wx, &mut rng);
+            let (y0, y1) = share_f64(&y, &mut rng);
+            let mut inputs = vec![
+                LossInputs { wx: wx0, y: y0, aux: Vec::new() },
+                LossInputs { wx: wx1, y: y1, aux: Vec::new() },
+            ]
+            .into_iter();
+            let ctxs = mesh_ctxs(3, (1, 2), 42);
+            let stats = ctxs[0].ep.stats().clone();
+            let mut handles = Vec::new();
+            for (p, mut ctx) in ctxs.into_iter().enumerate() {
+                ctx.packing = policy;
+                let inp = (p == 1 || p == 2).then(|| inputs.next().unwrap());
+                handles.push(thread::spawn(move || {
+                    ctx.reseed_dealer(0);
+                    protocol4_loss(&mut ctx, GlmKind::Logistic, inp.as_ref(), m, 0.0)
+                }));
+            }
+            let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            out.push((results[0].unwrap(), stats.total_bytes(), stats.cipher_bytes()));
+        }
+        assert_eq!(out[0].0.to_bits(), out[1].0.to_bits(), "loss depends on packing");
+        assert_eq!(out[0].1, out[1].1, "traffic depends on packing");
+        assert_eq!(out[0].2, 0, "Protocol 4 sent ciphertexts");
+        assert_eq!(out[1].2, 0, "Protocol 4 sent ciphertexts");
     }
 
     #[test]

@@ -1,0 +1,107 @@
+//! Packed-vs-unpacked Protocol 3 parity on a 3-party loopback mesh.
+//!
+//! The packing acceptance bar: with keys wide enough for multi-slot
+//! layouts, `PackingPolicy::Auto` must produce gradients **bit-identical**
+//! to `PackingPolicy::Off` (the packed middle digit is the same exact
+//! integer the unpacked path decodes) while moving strictly fewer
+//! ciphertext bytes. 640-bit keys keep keygen fast and still give a
+//! 2-slot layout at this batch depth.
+
+use efmvfl::coordinator::testutil::mesh_ctxs_keyed;
+use efmvfl::crypto::fixed::PackLayout;
+use efmvfl::crypto::prng::ChaChaRng;
+use efmvfl::linalg::Matrix;
+use efmvfl::mpc::ring;
+use efmvfl::mpc::share::share_vec;
+use efmvfl::net::Transport;
+use efmvfl::protocols::{secure_gradient::protocol3_gradients, PackingPolicy};
+use std::thread;
+
+const KEY_BITS: usize = 640;
+const M: usize = 12; // batch rows
+const N_PARTIES: usize = 3;
+
+/// One full Protocol 3 round under `policy`; returns every party's
+/// gradient plus the mesh's (total, cipher) byte counts.
+fn run_round(policy: PackingPolicy, seed: u64) -> (Vec<Vec<f64>>, u64, u64) {
+    let mut rng = ChaChaRng::from_seed(seed);
+    let blocks: Vec<Matrix> = (0..N_PARTIES)
+        .map(|_| Matrix::random(M, 3, &mut rng))
+        .collect();
+    let md: Vec<f64> = (0..M).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+    let (s0, s1) = share_vec(&ring::encode_vec(&md), &mut rng);
+
+    let ctxs = mesh_ctxs_keyed(N_PARTIES, (0, 1), seed, KEY_BITS);
+    let stats = ctxs[0].ep.stats().clone();
+    let mut handles = Vec::new();
+    for (p, mut ctx) in ctxs.into_iter().enumerate() {
+        ctx.packing = policy;
+        let x = blocks[p].clone();
+        let sh = match p {
+            0 => Some(s0.clone()),
+            1 => Some(s1.clone()),
+            _ => None,
+        };
+        handles.push(thread::spawn(move || {
+            protocol3_gradients(&mut ctx, &x, sh.as_ref())
+        }));
+    }
+    let grads: Vec<Vec<f64>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (grads, stats.total_bytes(), stats.cipher_bytes())
+}
+
+#[test]
+fn packed_gradients_bit_identical_to_unpacked() {
+    // the test is only meaningful if Auto actually engages packing here
+    let layout = PackLayout::for_modulus_bits(KEY_BITS, M);
+    assert!(layout.is_packed(), "640-bit key must give a multi-slot layout");
+
+    let (packed, packed_total, packed_cipher) = run_round(PackingPolicy::Auto, 77);
+    let (plain, plain_total, plain_cipher) = run_round(PackingPolicy::Off, 77);
+
+    assert_eq!(packed.len(), N_PARTIES);
+    for (p, (a, b)) in packed.iter().zip(&plain).enumerate() {
+        assert_eq!(a.len(), b.len());
+        for (j, (ga, gb)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                ga.to_bits(),
+                gb.to_bits(),
+                "party {p} gradient[{j}] differs: packed {ga} vs unpacked {gb}"
+            );
+        }
+    }
+
+    // comm shrinks: the step-1 fanout carries ~slots× fewer ciphertexts
+    assert!(
+        packed_cipher < plain_cipher,
+        "packed round moved {packed_cipher} cipher bytes, unpacked {plain_cipher}"
+    );
+    assert!(
+        packed_total < plain_total,
+        "packed round moved {packed_total} bytes, unpacked {plain_total}"
+    );
+    assert!(plain_cipher > 0, "unpacked round must move ciphertexts");
+}
+
+#[test]
+fn off_policy_forces_unpacked_even_on_wide_keys() {
+    // Off must behave exactly like a narrow-key fallback: correct
+    // gradients (vs the plaintext reference), full-size cipher traffic.
+    let (grads, _, cipher) = run_round(PackingPolicy::Off, 78);
+    let mut rng = ChaChaRng::from_seed(78);
+    let blocks: Vec<Matrix> = (0..N_PARTIES)
+        .map(|_| Matrix::random(M, 3, &mut rng))
+        .collect();
+    let md: Vec<f64> = (0..M).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+    for (p, g) in grads.iter().enumerate() {
+        for (j, got) in g.iter().enumerate() {
+            let want: f64 = (0..M)
+                .map(|i| blocks[p].get(i, j) * md[i] / M as f64)
+                .sum();
+            assert!((got - want).abs() < 1e-3, "party {p}[{j}]: {got} vs {want}");
+        }
+    }
+    // every CP fans out M ciphertexts + every party returns cols masked
+    // ciphertexts per foreign CP — all at full ciphertext width
+    assert!(cipher > 0);
+}
