@@ -1,0 +1,225 @@
+//! Training-plane bench: pipelined vs serial wall-clock per Protocol-3
+//! iteration on a 3-party mesh.
+//!
+//! **Serial arm** — cold obfuscator pools: every `r^n` blinding
+//! exponentiation runs inline in the online round (the pre-plane
+//! behaviour). **Pipelined arm** — before each timed round the pools are
+//! refilled to the round's exact demand via the same
+//! [`obfuscator_demand`]/`refill_pool` path the offline plane's thread
+//! runs, so the online phase pays two multiplications per draw and zero
+//! obfuscator exponentiations. The refill happens outside the timer —
+//! that is precisely the offline/online split the plane buys on a real
+//! deployment, where preprocessing for iteration `t+depth` overlaps
+//! iteration `t`'s network wait.
+//!
+//! Also proves the planes never change the math: gradients from the two
+//! arms are asserted bit-identical, and a full mini-batch training run
+//! (shuffle on) with the pipeline on vs off must produce bit-identical
+//! weights and losses. Results persist to `BENCH_train.json`.
+//! Run with `cargo bench --bench train`; `EFMVFL_BENCH_FAST=1` shrinks
+//! the key/batch for CI smoke runs.
+
+use efmvfl::benchkit::{bench_out_dir, fmt_secs, print_table, write_json, Json};
+use efmvfl::coordinator::testutil::mesh_ctxs_keyed;
+use efmvfl::coordinator::{train, TrainConfig};
+use efmvfl::crypto::fixed::PackLayout;
+use efmvfl::crypto::prng::ChaChaRng;
+use efmvfl::data::{split_vertical, synthetic};
+use efmvfl::linalg::Matrix;
+use efmvfl::mpc::ring;
+use efmvfl::mpc::share::share_vec;
+use efmvfl::protocols::plane::{obfuscator_demand, PoolSizing};
+use efmvfl::protocols::{secure_gradient::protocol3_gradients, PackingPolicy};
+use std::thread;
+use std::time::Instant;
+
+const N_PARTIES: usize = 3;
+/// Timed Protocol-3 rounds per arm (per-iteration figures are means).
+const ROUNDS: usize = 3;
+
+struct ArmOut {
+    grads: Vec<Vec<f64>>,
+    wall_secs_per_iter: f64,
+    /// Online obfuscator exponentiations per round: the full demand when
+    /// the pools are cold, zero when the plane prefilled them.
+    online_obf_exps: usize,
+}
+
+/// `ROUNDS` full Protocol 3 rounds on fresh keys/shares; with `prefill`,
+/// each round's obfuscator demand is pooled before its timer starts.
+fn run_arm(prefill: bool, key_bits: usize, m: usize, f: usize, seed: u64) -> ArmOut {
+    let mut rng = ChaChaRng::from_seed(seed);
+    let blocks: Vec<Matrix> = (0..N_PARTIES)
+        .map(|_| Matrix::random(m, f, &mut rng))
+        .collect();
+    let md: Vec<f64> = (0..m).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+    let (s0, s1) = share_vec(&ring::encode_vec(&md), &mut rng);
+
+    let mut ctxs = mesh_ctxs_keyed(N_PARTIES, (0, 1), seed, key_bits);
+    let pks = ctxs[0].pks.clone();
+    // the whole mesh's per-round demand: both CPs' step-1 fanout plus
+    // every masked return — what the in-process Shared sizing pools
+    let demand = obfuscator_demand(
+        0,
+        (0, 1),
+        m,
+        &PoolSizing::Shared { features: vec![f; N_PARTIES] },
+        &pks,
+        PackingPolicy::Auto,
+    );
+    let demand_total: usize = demand.iter().map(|&(_, c)| c).sum();
+    // same stream the offline plane draws from (party-0 plane seed)
+    let mut obf_rng = ChaChaRng::from_seed(seed.wrapping_add(7000));
+
+    let mut wall = 0.0;
+    let mut grads: Vec<Vec<f64>> = Vec::new();
+    for round in 0..ROUNDS {
+        if prefill {
+            for &(owner, count) in &demand {
+                pks[owner].refill_pool(count, &mut obf_rng);
+            }
+        }
+        let started = Instant::now();
+        let round_grads: Vec<Vec<f64>> = thread::scope(|s| {
+            let handles: Vec<_> = ctxs
+                .iter_mut()
+                .enumerate()
+                .map(|(p, ctx)| {
+                    let x = &blocks[p];
+                    let sh = match p {
+                        0 => Some(s0.clone()),
+                        1 => Some(s1.clone()),
+                        _ => None,
+                    };
+                    s.spawn(move || protocol3_gradients(ctx, x, sh.as_ref()))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        wall += started.elapsed().as_secs_f64();
+        if prefill {
+            // the demand model must match the round's draws exactly —
+            // a leftover means the plane over-generates (wasted offline
+            // work) and would hide an under-prediction elsewhere
+            let leftover: usize = pks.iter().map(|pk| pk.pool_len()).sum();
+            assert_eq!(leftover, 0, "round {round}: {leftover} pooled obfuscators unused");
+        }
+        if round == 0 {
+            grads = round_grads;
+        } else {
+            // same inputs each round → same gradients (masks cancel)
+            for (a, b) in grads.iter().zip(&round_grads) {
+                assert_eq!(a, b, "round {round} gradients drifted");
+            }
+        }
+    }
+    ArmOut {
+        grads,
+        wall_secs_per_iter: wall / ROUNDS as f64,
+        online_obf_exps: if prefill { 0 } else { demand_total },
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("EFMVFL_BENCH_FAST").is_ok();
+    let (key_bits, m) = if fast { (1024, 128) } else { (2048, 512) };
+    let f = 16;
+    let layout = PackLayout::for_modulus_bits(key_bits, m);
+
+    // -- full-train parity: pipeline on/off must not change one bit --
+    // (small keys: this checks scheduling, not crypto throughput)
+    let mut data = synthetic::credit_default_like(96, 6, 13);
+    data.standardize();
+    let split = split_vertical(&data, N_PARTIES);
+    let base = TrainConfig::logistic(N_PARTIES)
+        .with_key_bits(256)
+        .with_iterations(6)
+        .with_batch(Some(32))
+        .with_seed(13);
+    eprintln!("train parity (pipeline on vs off) ...");
+    let piped = train(&split, &base.clone().with_pipeline(true))?;
+    let serial_run = train(&split, &base.clone().with_pipeline(false))?;
+    for (p, (a, b)) in piped.weights.iter().zip(&serial_run.weights).enumerate() {
+        for (j, (wa, wb)) in a.iter().zip(b).enumerate() {
+            assert_eq!(wa.to_bits(), wb.to_bits(), "party {p} weight[{j}] differs");
+        }
+    }
+    for (t, (a, b)) in piped.losses.iter().zip(&serial_run.losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "loss[{t}] differs");
+    }
+
+    // -- timed Protocol 3 rounds: cold pools vs plane-prefilled pools --
+    eprintln!("serial rounds ({key_bits}b keys, m={m}) ...");
+    let serial = run_arm(false, key_bits, m, f, 7);
+    eprintln!("pipelined rounds ...");
+    let pipelined = run_arm(true, key_bits, m, f, 7);
+
+    for (p, (a, b)) in pipelined.grads.iter().zip(&serial.grads).enumerate() {
+        for (j, (ga, gb)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                ga.to_bits(),
+                gb.to_bits(),
+                "party {p} gradient[{j}] differs: pipelined {ga} vs serial {gb}"
+            );
+        }
+    }
+
+    let wall_ratio = pipelined.wall_secs_per_iter / serial.wall_secs_per_iter;
+    let row = |name: &str, a: &ArmOut| {
+        vec![
+            name.to_string(),
+            fmt_secs(a.wall_secs_per_iter),
+            a.online_obf_exps.to_string(),
+        ]
+    };
+    println!(
+        "protocol 3 iteration: {N_PARTIES} parties, {key_bits}b keys, m={m}, f={f}, {ROUNDS} rounds/arm"
+    );
+    print_table(
+        &["mode", "wall/iter", "online obf-exps"],
+        &[row("serial", &serial), row("pipelined", &pipelined)],
+    );
+    println!("wall ratio (pipelined/serial): {wall_ratio:.2}x");
+
+    // acceptance ceiling at full scale; fast mode's narrower key makes
+    // each obfuscator exponentiation ~8x cheaper, so only the direction
+    // is checked there
+    let ceiling = if fast { 0.95 } else { 0.85 };
+    assert!(
+        wall_ratio <= ceiling,
+        "pipelined/serial wall ratio {wall_ratio:.2} above {ceiling}"
+    );
+
+    let side = |a: &ArmOut| {
+        Json::obj(vec![
+            ("wall_secs_per_iter", Json::Num(a.wall_secs_per_iter)),
+            ("online_obfuscator_exps", Json::Int(a.online_obf_exps as u64)),
+        ])
+    };
+    let report = Json::obj(vec![
+        ("bench", Json::str("train_planes")),
+        ("schema_version", Json::Int(1)),
+        ("mode", Json::str(if fast { "fast" } else { "full" })),
+        ("parties", Json::Int(N_PARTIES as u64)),
+        ("key_bits", Json::Int(key_bits as u64)),
+        ("batch_rows", Json::Int(m as u64)),
+        ("features", Json::Int(f as u64)),
+        ("rounds_per_arm", Json::Int(ROUNDS as u64)),
+        ("layout", Json::obj(vec![
+            ("slot_bits", Json::Int(layout.slot_bits as u64)),
+            ("value_bits", Json::Int(layout.value_bits as u64)),
+            ("slots", Json::Int(layout.slots as u64)),
+            ("span", Json::Int(layout.span() as u64)),
+            ("blocks", Json::Int(layout.blocks_for(m) as u64)),
+        ])),
+        ("serial", side(&serial)),
+        ("pipelined", side(&pipelined)),
+        ("ratios", Json::obj(vec![("wall", Json::Num(wall_ratio))])),
+        ("gradients_bit_identical", Json::Bool(true)),
+        ("train_parity_bit_identical", Json::Bool(true)),
+    ]);
+    let out = bench_out_dir().join("BENCH_train.json");
+    write_json(&out, &report).expect("write BENCH_train.json");
+    println!("wrote {}", out.display());
+    Ok(())
+}

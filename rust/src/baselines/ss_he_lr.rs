@@ -23,7 +23,7 @@ use crate::crypto::prng::ChaChaRng;
 use crate::data::VerticalSplit;
 use crate::glm::{to_pm1, GlmKind};
 use crate::linalg::Matrix;
-use crate::mpc::beaver::TripleDealer;
+use crate::mpc::beaver::TripleSource;
 use crate::mpc::ring::{self, Elem};
 use crate::mpc::share::{share_vec, Share};
 use crate::net::{full_mesh, Endpoint, Payload, Transport};
@@ -178,6 +178,7 @@ pub fn train_ss_he(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainRepor
         iterations_run: res_c.0 .2,
         comm_mb: stats.total_mb(),
         offline_mb: stats.offline_bytes() as f64 / 1e6,
+        triple_mb: stats.triple_bytes() as f64 / 1e6,
         msgs: stats.total_msgs(),
         wall_secs,
         party_cpu_secs: vec![res_c.1, res_b.1],
@@ -227,7 +228,7 @@ fn run_party(
         let mb = xb.rows;
         let yb = Share(rows.iter().map(|&i| y_share.0[i]).collect());
         let x_enc: Vec<Elem> = xb.data.iter().map(|&v| ring::encode(v)).collect();
-        let mut dealer = TripleDealer::new(
+        let mut dealer = TripleSource::inline(
             cfg.seed ^ (t as u64 + 1).wrapping_mul(0x2545_f491_4f6c_dd1d),
         );
 

@@ -13,7 +13,7 @@ use crate::crypto::prng::ChaChaRng;
 use crate::data::VerticalSplit;
 use crate::glm::{to_pm1, GlmKind};
 use crate::linalg::Matrix;
-use crate::mpc::beaver::TripleDealer;
+use crate::mpc::beaver::TripleSource;
 use crate::mpc::ring::{self, Elem};
 use crate::mpc::share::{share_vec, Share};
 use crate::net::{full_mesh, Endpoint, Payload, Transport};
@@ -188,6 +188,7 @@ pub fn train_ss(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> 
         iterations_run: res_c.0 .2,
         comm_mb: stats.total_mb(),
         offline_mb: stats.offline_bytes() as f64 / 1e6,
+        triple_mb: stats.triple_bytes() as f64 / 1e6,
         msgs: stats.total_msgs(),
         wall_secs,
         party_cpu_secs: vec![res_c.1, res_b.1],
@@ -263,7 +264,7 @@ fn run_ss_party(
         let mut trip_rng = ChaChaRng::from_seed(
             cfg.seed ^ (t as u64 + 1).wrapping_mul(0xa076_1d64_78bd_642f),
         );
-        let mut dealer = TripleDealer::new(
+        let mut dealer = TripleSource::inline(
             cfg.seed ^ (t as u64 + 1).wrapping_mul(0xe703_7ed1_a0b4_28db),
         );
 

@@ -111,6 +111,7 @@ pub fn train_tp(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> 
         iterations_run: guest_res.2,
         comm_mb: stats.total_mb(),
         offline_mb: stats.offline_bytes() as f64 / 1e6,
+        triple_mb: stats.triple_bytes() as f64 / 1e6,
         msgs: stats.total_msgs(),
         wall_secs,
         party_cpu_secs: cpus,

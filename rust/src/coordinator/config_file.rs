@@ -196,6 +196,15 @@ pub fn config_from_kv(kv: &HashMap<String, String>) -> Result<TrainConfig> {
             "obfuscator_pool" => {
                 cfg.obfuscator_pool = value.parse().context("obfuscator_pool")?
             }
+            "shuffle" => cfg.shuffle = value.parse().context("shuffle")?,
+            "pipeline" => cfg.pipeline = value.parse().context("pipeline")?,
+            "offline_depth" => {
+                cfg.offline_depth = value.parse().context("offline_depth")?
+            }
+            "checkpoint_dir" => cfg.checkpoint_dir = Some(value.clone()),
+            "checkpoint_every" => {
+                cfg.checkpoint_every = value.parse().context("checkpoint_every")?
+            }
             "packing" => {
                 // must match on every party's config — the layout is
                 // derived, the policy is declared
@@ -311,6 +320,32 @@ mod tests {
         let cfg = config_from_kv(&parse_kv("packing = auto\n").unwrap()).unwrap();
         assert_eq!(cfg.packing, PackingPolicy::Auto);
         assert!(config_from_kv(&parse_kv("packing = sideways\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn training_plane_knobs_parse() {
+        // defaults: shuffle + pipeline on, no checkpoints
+        let cfg = config_from_kv(&parse_kv("seed = 1\n").unwrap()).unwrap();
+        assert!(cfg.shuffle);
+        assert!(cfg.pipeline);
+        assert_eq!(cfg.offline_depth, 2);
+        assert_eq!(cfg.checkpoint_dir, None);
+        assert_eq!(cfg.checkpoint_every, 0);
+        let text = r#"
+            shuffle = false
+            pipeline = false
+            offline_depth = 4
+            checkpoint_dir = "ckpts/run1"
+            checkpoint_every = 5
+        "#;
+        let cfg = config_from_kv(&parse_kv(text).unwrap()).unwrap();
+        assert!(!cfg.shuffle);
+        assert!(!cfg.pipeline);
+        assert_eq!(cfg.offline_depth, 4);
+        assert_eq!(cfg.checkpoint_dir.as_deref(), Some("ckpts/run1"));
+        assert_eq!(cfg.checkpoint_every, 5);
+        assert!(config_from_kv(&parse_kv("shuffle = sideways\n").unwrap()).is_err());
+        assert!(config_from_kv(&parse_kv("checkpoint_every = no\n").unwrap()).is_err());
     }
 
     #[test]

@@ -19,16 +19,18 @@
 //!   row, and rows are gathered to party 0 at end of run (also
 //!   uncounted), so party 0's totals equal the in-process shared sink.
 
+use super::persist::{checkpoint_path, TrainCheckpoint};
 use super::{party, TrainConfig};
 use crate::bignum::BigUint;
 use crate::crypto::he_ops;
 use crate::crypto::paillier::{Keypair, PublicKey};
 use crate::crypto::prng::ChaChaRng;
 use crate::linalg::Matrix;
-use crate::mpc::beaver::TripleDealer;
+use crate::mpc::beaver::TripleSource;
 use crate::net::{Payload, Transport, WireModel};
+use crate::protocols::plane::{BatchSchedule, OfflinePlane, PlaneSpec, PoolSizing};
 use crate::protocols::ProtoCtx;
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
 /// Communication totals over the whole mesh, assembled on party 0 after
@@ -39,8 +41,11 @@ pub struct CommReport {
     pub total_bytes: u64,
     /// Online MB (the tables' `comm` column).
     pub comm_mb: f64,
-    /// Offline/preprocessing MB (Beaver triples).
+    /// Offline/preprocessing MB (triples + matrix triples).
     pub offline_mb: f64,
+    /// The Beaver-triple slice of `offline_mb` (the offline plane's
+    /// triple dealing, counted at consumption time).
+    pub triple_mb: f64,
     /// Total online messages.
     pub msgs: u64,
     /// What the [`WireModel`] *would* charge for this traffic — reported
@@ -149,6 +154,62 @@ pub fn train_party<T: Transport>(
         }
     }
 
+    // Resume: load this party's checkpoint shard, then agree on the
+    // restart iteration over the uncounted control plane — a party with
+    // a stale or missing checkpoint must fail loudly *before* training.
+    let resume = if cfg.resume {
+        let r = load_resume(cfg, me, n, x.cols)?;
+        let next = r.next_iter as u64;
+        if me == 0 {
+            for p in 1..n {
+                let theirs = match transport.recv(p, "resume:iter") {
+                    Payload::Ring(v) if v.len() == 1 => v[0],
+                    other => bail!("party {p} sent a malformed resume frame: {other:?}"),
+                };
+                if theirs != next {
+                    bail!(
+                        "checkpoints disagree: party 0 resumes at {next}, party {p} at {theirs}"
+                    );
+                }
+            }
+            for to in 1..n {
+                transport.deliver(to, "resume:ok", Payload::Ring(vec![next]).encode());
+            }
+        } else {
+            transport.deliver(0, "resume:iter", Payload::Ring(vec![next]).encode());
+            let agreed = match transport.recv(0, "resume:ok") {
+                Payload::Ring(v) if v.len() == 1 => v[0],
+                other => bail!("party 0 sent a malformed resume frame: {other:?}"),
+            };
+            if agreed != next {
+                bail!("checkpoints disagree: mesh resumes at {agreed}, party {me} at {next}");
+            }
+        }
+        Some(r)
+    } else {
+        None
+    };
+    let start_iter = resume.as_ref().map(|r| r.next_iter).unwrap_or(0);
+
+    // Offline plane: per-process pools, so refill only this party's own
+    // draws (its step-1 fanout when CP, its mask encryptions otherwise).
+    let plane = cfg.pipeline.then(|| {
+        OfflinePlane::spawn(PlaneSpec {
+            me,
+            n_parties: n,
+            kind: cfg.kind,
+            run_seed: cfg.seed,
+            cp_selection: cfg.cp_selection,
+            start_iter,
+            iterations: cfg.iterations,
+            schedule: BatchSchedule::new(x.rows, cfg.batch_size, cfg.shuffle, cfg.seed),
+            sizing: PoolSizing::Own { features: x.cols },
+            pks: pks.clone(),
+            packing: cfg.packing,
+            depth: cfg.offline_depth,
+        })
+    });
+
     let compute = crate::runtime::default_compute(cfg.use_xla);
     let started = std::time::Instant::now();
     let mut ctx = ProtoCtx {
@@ -157,11 +218,12 @@ pub fn train_party<T: Transport>(
         kp,
         pks,
         cp: (0, 1),
-        dealer: TripleDealer::new(cfg.seed),
+        triples: TripleSource::inline(cfg.seed),
         run_seed: cfg.seed,
         packing: cfg.packing,
+        plane,
     };
-    let input = party::PartyInput { x, y };
+    let input = party::PartyInput { x, y, resume };
     let result = party::run_party(&mut ctx, input, cfg, compute);
     let wall_secs = started.elapsed().as_secs_f64();
     let mut transport = ctx.ep;
@@ -176,6 +238,61 @@ pub fn train_party<T: Transport>(
         cpu_secs: result.cpu_secs,
         wall_secs,
         comm,
+    })
+}
+
+/// Load and validate one party's [`TrainCheckpoint`] for a resume of
+/// `cfg`: every run parameter that shapes the iteration stream (GLM,
+/// seed, batch schedule, learning rate, topology) must match — resuming
+/// a checkpoint into a different run would silently train garbage.
+/// Shared by the distributed and in-process trainers.
+pub(crate) fn load_resume(
+    cfg: &TrainConfig,
+    me: usize,
+    n: usize,
+    features: usize,
+) -> Result<party::ResumeState> {
+    let dir = cfg
+        .checkpoint_dir
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("resume requested but no checkpoint dir configured"))?;
+    let path = checkpoint_path(std::path::Path::new(dir), me);
+    let ck = TrainCheckpoint::load(&path)
+        .with_context(|| format!("resuming party {me}"))?;
+    if ck.party_id != me || ck.n_parties != n {
+        bail!(
+            "checkpoint {} is for party {} of {} (this run: party {me} of {n})",
+            path.display(),
+            ck.party_id,
+            ck.n_parties
+        );
+    }
+    if ck.kind != cfg.kind {
+        bail!("checkpoint trains {}, config says {}", ck.kind.name(), cfg.kind.name());
+    }
+    if ck.seed != cfg.seed {
+        bail!("checkpoint has run seed {}, config says {}", ck.seed, cfg.seed);
+    }
+    if ck.batch != cfg.batch_size || ck.shuffle != cfg.shuffle {
+        bail!("checkpoint batch schedule differs from the config's");
+    }
+    if ck.learning_rate != cfg.learning_rate {
+        bail!(
+            "checkpoint learning rate {} differs from the config's {}",
+            ck.learning_rate,
+            cfg.learning_rate
+        );
+    }
+    if ck.weights.len() != features {
+        bail!(
+            "checkpoint holds {} weights, this party's block has {features} features",
+            ck.weights.len()
+        );
+    }
+    Ok(party::ResumeState {
+        next_iter: ck.next_iter,
+        weights: ck.weights,
+        losses: ck.losses,
     })
 }
 
@@ -201,6 +318,7 @@ pub(crate) fn gather_stats<T: Transport>(transport: &mut T, wire: WireModel) -> 
             total_bytes: stats.total_bytes(),
             comm_mb: stats.total_mb(),
             offline_mb: stats.offline_bytes() as f64 / 1e6,
+            triple_mb: stats.triple_bytes() as f64 / 1e6,
             msgs: stats.total_msgs(),
             net_secs: wire.transfer_secs(stats.total_bytes(), stats.total_msgs()),
         })

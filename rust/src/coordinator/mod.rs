@@ -19,11 +19,12 @@ use crate::crypto::paillier::Keypair;
 use crate::crypto::prng::ChaChaRng;
 use crate::data::VerticalSplit;
 use crate::glm::GlmKind;
-use crate::mpc::beaver::TripleDealer;
+use crate::mpc::beaver::TripleSource;
 use crate::net::{full_mesh, WireModel};
+use crate::protocols::plane::{BatchSchedule, OfflinePlane, PlaneSpec, PoolSizing};
 use crate::protocols::{CpSelection, PackingPolicy, ProtoCtx};
 use crate::runtime::Compute;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::sync::Arc;
 
 /// Training configuration (defaults follow the paper's §5.2 where they
@@ -58,6 +59,26 @@ pub struct TrainConfig {
     /// Protocol 3 ciphertext packing (must match across parties; `Auto`
     /// falls back to the unpacked path per-CP when the key is narrow).
     pub packing: PackingPolicy,
+    /// Per-epoch secure shuffling: each epoch's mini-batches partition a
+    /// seed-agreed permutation (every party derives the same one without
+    /// communication). `false` = the legacy cyclic windows.
+    pub shuffle: bool,
+    /// Run the offline plane (background triple pre-dealing + obfuscator
+    /// pool refills) and the double-buffered prepare stage. Pipelined
+    /// and serial runs are bit-identical — this only moves work off the
+    /// timed online path.
+    pub pipeline: bool,
+    /// How many iterations the offline plane may run ahead of the online
+    /// rounds (bounded queue depth).
+    pub offline_depth: usize,
+    /// Directory for per-party training checkpoints (`None` = no
+    /// checkpoints; see [`persist::TrainCheckpoint`]).
+    pub checkpoint_dir: Option<String>,
+    /// Write a checkpoint every N iterations (0 = never).
+    pub checkpoint_every: usize,
+    /// Resume from the checkpoints in `checkpoint_dir` instead of
+    /// starting at iteration 0.
+    pub resume: bool,
 }
 
 impl TrainConfig {
@@ -76,6 +97,12 @@ impl TrainConfig {
             use_xla: false,
             obfuscator_pool: 0,
             packing: PackingPolicy::Auto,
+            shuffle: true,
+            pipeline: true,
+            offline_depth: 2,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            resume: false,
         }
     }
 
@@ -117,6 +144,31 @@ impl TrainConfig {
         self.packing = p;
         self
     }
+
+    /// Builder: per-epoch shuffling on/off.
+    pub fn with_shuffle(mut self, on: bool) -> Self {
+        self.shuffle = on;
+        self
+    }
+
+    /// Builder: offline/online pipelining on/off.
+    pub fn with_pipeline(mut self, on: bool) -> Self {
+        self.pipeline = on;
+        self
+    }
+
+    /// Builder: checkpoint directory + cadence.
+    pub fn with_checkpoints(mut self, dir: &str, every: usize) -> Self {
+        self.checkpoint_dir = Some(dir.to_string());
+        self.checkpoint_every = every;
+        self
+    }
+
+    /// Builder: resume from the configured checkpoint directory.
+    pub fn with_resume(mut self, on: bool) -> Self {
+        self.resume = on;
+        self
+    }
 }
 
 /// Result of a federated training run.
@@ -131,8 +183,11 @@ pub struct TrainReport {
     pub iterations_run: usize,
     /// Online communication in MB (the tables' `comm` column).
     pub comm_mb: f64,
-    /// Offline/preprocessing bytes (Beaver triples), MB.
+    /// Offline/preprocessing bytes (triples + matrix triples), MB.
     pub offline_mb: f64,
+    /// The Beaver-triple slice of `offline_mb` (what the offline plane's
+    /// triple dealing accounts for, as opposed to other preprocessing).
+    pub triple_mb: f64,
     /// Total online messages.
     pub msgs: u64,
     /// Measured wall-time of the whole run on this box (all parties
@@ -219,24 +274,65 @@ pub fn train(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> {
 
     let compute: Arc<dyn Compute> = crate::runtime::default_compute(cfg.use_xla);
 
+    // resume: every party loads its checkpoint shard; the shared files
+    // must agree on where to pick up (a mixed set trains garbage)
+    let mut resumes: Vec<Option<party::ResumeState>> = (0..n).map(|_| None).collect();
+    if cfg.resume {
+        for (p, r) in resumes.iter_mut().enumerate() {
+            *r = Some(distributed::load_resume(cfg, p, n, data.party_block(p).cols)?);
+        }
+        let next = resumes[0].as_ref().unwrap().next_iter;
+        for (p, r) in resumes.iter().enumerate() {
+            let ni = r.as_ref().unwrap().next_iter;
+            if ni != next {
+                bail!("checkpoints disagree: party 0 resumes at {next}, party {p} at {ni}");
+            }
+        }
+    }
+
+    let schedule = BatchSchedule::new(data.n_samples(), cfg.batch_size, cfg.shuffle, cfg.seed);
+    let feature_widths: Vec<usize> = (0..n).map(|p| data.party_block(p).cols).collect();
+
     let started = std::time::Instant::now();
     let mut results: Vec<Option<party::PartyResult>> = (0..n).map(|_| None).collect();
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(n);
-        for (p, ep) in endpoints.into_iter().enumerate() {
+        for ((p, ep), resume) in endpoints.into_iter().enumerate().zip(resumes) {
+            let start_iter = resume.as_ref().map(|r| r.next_iter).unwrap_or(0);
+            // offline plane: pools are shared Arc<PublicKey>s in-process,
+            // so each party's plane refills to the whole mesh's demand
+            // (top-up semantics make the concurrent refills idempotent)
+            let plane = cfg.pipeline.then(|| {
+                OfflinePlane::spawn(PlaneSpec {
+                    me: p,
+                    n_parties: n,
+                    kind: cfg.kind,
+                    run_seed: cfg.seed,
+                    cp_selection: cfg.cp_selection,
+                    start_iter,
+                    iterations: cfg.iterations,
+                    schedule: schedule.clone(),
+                    sizing: PoolSizing::Shared { features: feature_widths.clone() },
+                    pks: pks.clone(),
+                    packing: cfg.packing,
+                    depth: cfg.offline_depth,
+                })
+            });
             let mut ctx = ProtoCtx {
                 ep,
                 rng: ChaChaRng::from_seed(cfg.seed.wrapping_add(3000 + p as u64)),
                 kp: keypairs[p].clone(),
                 pks: pks.clone(),
                 cp: (0, 1),
-                dealer: TripleDealer::new(cfg.seed),
+                triples: TripleSource::inline(cfg.seed),
                 run_seed: cfg.seed,
                 packing: cfg.packing,
+                plane,
             };
             let input = party::PartyInput {
                 x: data.party_block(p).clone(),
                 y: (p == 0).then(|| data.y.clone()),
+                resume,
             };
             let cfg = cfg.clone();
             let compute = compute.clone();
@@ -261,6 +357,7 @@ pub fn train(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> {
         iterations_run,
         comm_mb: stats.total_mb(),
         offline_mb: stats.offline_bytes() as f64 / 1e6,
+        triple_mb: stats.triple_bytes() as f64 / 1e6,
         msgs: stats.total_msgs(),
         wall_secs,
         party_cpu_secs,

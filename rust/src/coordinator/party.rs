@@ -1,9 +1,30 @@
-//! The per-party state machine of Algorithm 1.
+//! The per-party state machine of Algorithm 1, decomposed into the
+//! staged **online round pipeline**.
 //!
 //! Every party runs the same loop; role branches (C vs B_i, CP vs
 //! bystander) mirror the paper's pseudocode lines. Weights never leave
 //! the party — only shares, ciphertexts and masked values do.
+//!
+//! Each iteration walks four stages:
+//!
+//! 1. **prepare-batch** — gather the batch rows, `Z = W_p·X_p`, and the
+//!    exponential intermediates (pure local compute, no network, no
+//!    randomness). With `cfg.pipeline` this runs on a worker thread:
+//!    iteration `t+1`'s prepare is submitted right after iteration `t`'s
+//!    weight update, overlapping the loss round's network wait.
+//! 2. **mask/encrypt** — Protocol 1: mask the intermediates and share
+//!    them toward the CPs.
+//! 3. **exchange** — Protocols 2+3: the CPs' MPC round and the HE
+//!    gradient fanout/return.
+//! 4. **combine** — local weight update, Protocol 4's loss reveal, the
+//!    stop-flag broadcast, and (when configured) a training checkpoint.
+//!
+//! The stage boundaries are pure refactoring: serial (`pipeline =
+//! false`) and pipelined runs execute bit-identically, because prepare
+//! is deterministic in `(weights, t)` and all randomness is reseeded per
+//! iteration ([`crate::protocols::iter_rng_seed`]).
 
+use super::persist::{checkpoint_path, TrainCheckpoint};
 use super::TrainConfig;
 use crate::glm::{ln_factorial, to_pm1, GlmKind};
 use crate::linalg::Matrix;
@@ -11,11 +32,13 @@ use crate::mpc::ring;
 use crate::mpc::share::Share;
 use crate::net::{Payload, Transport};
 use crate::protocols::grad_operator::{protocol2_grad_operator, GradOpInputs};
-use crate::protocols::secret_share::protocol1_share;
+use crate::protocols::plane::BatchSchedule;
+use crate::protocols::secret_share::{protocol1_share, share_and_sum};
 use crate::protocols::secure_gradient::protocol3_gradients;
 use crate::protocols::secure_loss::{protocol4_loss, LossInputs};
 use crate::protocols::ProtoCtx;
 use crate::runtime::Compute;
+use std::sync::mpsc;
 use std::sync::Arc;
 
 /// Linear predictors are clamped to this band before `exp`/encode so the
@@ -23,12 +46,25 @@ use std::sync::Arc;
 /// 2²⁰ ⇒ products stay far below 2⁶³).
 const Z_CLAMP: f64 = 15.0;
 
+/// Restart state recovered from a [`TrainCheckpoint`]: the loop resumes
+/// at `next_iter` as if it had never stopped.
+pub struct ResumeState {
+    /// First iteration to execute.
+    pub next_iter: usize,
+    /// This party's weight block after `next_iter` iterations.
+    pub weights: Vec<f64>,
+    /// Loss curve so far (C only).
+    pub losses: Vec<f64>,
+}
+
 /// One party's inputs: its feature block and (for C) the labels.
 pub struct PartyInput {
     /// Local feature block (training rows).
     pub x: Matrix,
     /// Labels, present on party 0 (= C) only.
     pub y: Option<Vec<f64>>,
+    /// Checkpointed state to resume from (`None` = fresh run).
+    pub resume: Option<ResumeState>,
 }
 
 /// One party's outputs.
@@ -37,14 +73,16 @@ pub struct PartyResult {
     pub weights: Vec<f64>,
     /// Loss curve (non-empty on C only).
     pub losses: Vec<f64>,
-    /// Iterations executed.
+    /// Iterations executed (including checkpointed ones when resuming).
     pub iterations_run: usize,
     /// CPU seconds this party spent (its "own server's" compute time).
     pub cpu_secs: f64,
 }
 
-/// Rows of the cyclic mini-batch for iteration `t` (shared by the EFMVFL
-/// trainer and all baselines so comparisons see identical batches).
+/// Rows of the cyclic mini-batch for iteration `t` — the legacy
+/// (`shuffle = false`) schedule, shared with all baselines so
+/// comparisons see identical batches. Shuffled runs go through
+/// [`BatchSchedule::rows_at`] instead.
 pub fn batch_rows(m_total: usize, batch: Option<usize>, t: usize) -> Vec<usize> {
     match batch {
         None => (0..m_total).collect(),
@@ -53,6 +91,144 @@ pub fn batch_rows(m_total: usize, batch: Option<usize>, t: usize) -> Vec<usize> 
             let start = (t * b) % m_total;
             (0..b).map(|i| (start + i) % m_total).collect()
         }
+    }
+}
+
+/// Stage 1 output: everything about iteration `t` that is a pure local
+/// function of `(weights, t)` — safe to compute ahead on a worker
+/// thread while the previous iteration is still on the wire.
+struct PreparedRound {
+    t: usize,
+    /// This iteration's batch rows (the seed-agreed schedule).
+    rows: Vec<usize>,
+    /// The gathered local feature block.
+    xb: Matrix,
+    /// Clamped linear predictor `Z = W_p·X_p` over the batch.
+    z: Vec<f64>,
+    /// `e^{c·z}` per exponential multiplier `c` of the GLM.
+    exps: Vec<Vec<f64>>,
+}
+
+/// Stage 1: prepare-batch (deterministic — no RNG, no network).
+fn prepare_round(
+    x: &Matrix,
+    schedule: &BatchSchedule,
+    kind: GlmKind,
+    compute: &dyn Compute,
+    t: usize,
+    w: &[f64],
+) -> PreparedRound {
+    let rows = schedule.rows_at(t);
+    let xb = x.gather_rows(&rows);
+    let z_raw = compute.gemv(&xb, w);
+    let z: Vec<f64> = z_raw.iter().map(|&v| v.clamp(-Z_CLAMP, Z_CLAMP)).collect();
+    let exps = kind
+        .exp_multipliers()
+        .iter()
+        .map(|&c| {
+            let scaled: Vec<f64> = z.iter().map(|&v| c * v).collect();
+            compute.exp(&scaled)
+        })
+        .collect();
+    PreparedRound { t, rows, xb, z, exps }
+}
+
+/// Stage 2 output: the iteration's Protocol 1 shares.
+struct SharedRound {
+    /// Share of `ΣW_pX_p` (CPs only).
+    wx: Option<Share>,
+    /// Share of the batch labels (CPs only).
+    y: Option<Share>,
+    /// Per-multiplier, per-party shares of `e^{c·z_p}` (CPs only).
+    exps: Vec<Vec<Share>>,
+}
+
+/// Stage 2: mask/encrypt — Protocol 1 shares z (all parties), y (C) and
+/// the exponential intermediates toward the CPs.
+fn stage_mask_encrypt<T: Transport>(
+    ctx: &mut ProtoCtx<T>,
+    t: usize,
+    prep: &PreparedRound,
+    y_all: Option<&Vec<f64>>,
+) -> SharedRound {
+    let me = ctx.ep.id();
+    let n = ctx.ep.n_parties();
+    let wx = share_and_sum(ctx, &format!("z{t}"), &ring::encode_vec(&prep.z));
+    let y = {
+        let yb: Option<Vec<f64>> =
+            y_all.map(|y| prep.rows.iter().map(|&i| y[i]).collect());
+        let enc = yb.as_ref().map(|y| ring::encode_vec(y));
+        protocol1_share(ctx, &format!("y{t}"), 0, enc.as_deref())
+    };
+    // one chain per multiplier c, each party sharing e^{c·z_p}
+    // (paper §4.2 / DESIGN §7)
+    let mut exps: Vec<Vec<Share>> = Vec::new();
+    for (ci, e) in prep.exps.iter().enumerate() {
+        let enc = ring::encode_vec(e);
+        let shares: Vec<Share> = (0..n)
+            .filter_map(|p| {
+                let vals = (p == me).then_some(enc.as_slice());
+                protocol1_share(ctx, &format!("e{t}:{ci}:{p}"), p, vals)
+            })
+            .collect();
+        exps.push(shares);
+    }
+    SharedRound { wx, y, exps }
+}
+
+/// Stage 3: exchange — Protocol 2 on the CPs (shares of `m·d`), then
+/// Protocol 3's HE round giving every party its plaintext gradient.
+/// Returns the gradient and (on CPs) the inputs Protocol 4 needs.
+fn stage_exchange<T: Transport>(
+    ctx: &mut ProtoCtx<T>,
+    kind: GlmKind,
+    xb: &Matrix,
+    shared: SharedRound,
+) -> (Vec<f64>, Option<LossInputs>) {
+    let (md_share, loss_inputs) = if ctx.is_cp() {
+        let wx = shared.wx.expect("CP has wx share");
+        let y = shared.y.expect("CP has y share");
+        let inputs = GradOpInputs { wx: wx.clone(), y: y.clone(), exps: shared.exps };
+        let out = protocol2_grad_operator(ctx, kind, &inputs);
+        (Some(out.md), Some(LossInputs { wx, y, aux: out.loss_aux }))
+    } else {
+        (None, None)
+    };
+    let g = protocol3_gradients(ctx, xb, md_share.as_ref());
+    (g, loss_inputs)
+}
+
+/// The prepare stage's lanes when double-buffering is on: requests carry
+/// `(t, weights)`, results come back in submission order.
+struct RoundPipeline<'a> {
+    x: &'a Matrix,
+    schedule: &'a BatchSchedule,
+    kind: GlmKind,
+    compute: Arc<dyn Compute>,
+    lanes: Option<(mpsc::Sender<(usize, Vec<f64>)>, mpsc::Receiver<PreparedRound>)>,
+}
+
+impl RoundPipeline<'_> {
+    /// Hand iteration `t`'s prepare to the worker (no-op in serial mode,
+    /// where [`RoundPipeline::obtain`] computes it inline).
+    fn submit(&self, t: usize, w: &[f64]) {
+        if let Some((tx, _)) = &self.lanes {
+            // a dead worker is handled at obtain time (inline fallback)
+            let _ = tx.send((t, w.to_vec()));
+        }
+    }
+
+    /// Iteration `t`'s prepared batch: the worker's result when
+    /// pipelined (falling back inline if the worker died), a fresh
+    /// inline computation otherwise — identical either way.
+    fn obtain(&self, t: usize, w: &[f64]) -> PreparedRound {
+        if let Some((_, rx)) = &self.lanes {
+            if let Ok(prep) = rx.recv() {
+                assert_eq!(prep.t, t, "prepare worker out of step");
+                return prep;
+            }
+        }
+        prepare_round(self.x, self.schedule, self.kind, &*self.compute, t, w)
     }
 }
 
@@ -74,9 +250,26 @@ pub fn run_party<T: Transport>(
     let n = ctx.ep.n_parties();
     let is_c = me == 0;
     let m_total = input.x.rows;
-    let mut w = vec![0.0; input.x.cols]; // line 2: W_p := 0
+    let schedule = BatchSchedule::new(m_total, cfg.batch_size, cfg.shuffle, cfg.seed);
+
+    // line 2: W_p := 0 — or the checkpointed state when resuming
+    let mut w = vec![0.0; input.x.cols];
     let mut losses = Vec::new();
-    let mut iterations_run = 0;
+    let mut start = 0;
+    if let Some(r) = &input.resume {
+        assert_eq!(r.weights.len(), w.len(), "checkpoint weight width mismatch");
+        w = r.weights.clone();
+        losses = r.losses.clone();
+        start = r.next_iter;
+    }
+    let mut iterations_run = start;
+
+    let ckpt_path = match &cfg.checkpoint_dir {
+        Some(dir) if cfg.checkpoint_every > 0 => {
+            Some(checkpoint_path(std::path::Path::new(dir), me))
+        }
+        _ => None,
+    };
 
     // Label preprocessing on C: ±1 encoding for LR, counts otherwise.
     let y_all: Option<Vec<f64>> = input.y.as_ref().map(|y| match cfg.kind {
@@ -84,101 +277,102 @@ pub fn run_party<T: Transport>(
         _ => y.clone(),
     });
 
-    for t in 0..cfg.iterations {
-        // line 4: select the computing parties (all parties agree by seed)
-        ctx.cp = cfg.cp_selection.pick(n, cfg.seed, t);
-        ctx.reseed_dealer(t);
-
-        let rows = batch_rows(m_total, cfg.batch_size, t);
-        let xb = input.x.gather_rows(&rows);
-        let m = xb.rows;
-
-        // line 5: local intermediates Z = W_p X_p (the L2/L1 hot path)
-        let z_raw = compute.gemv(&xb, &w);
-        let z: Vec<f64> = z_raw.iter().map(|&v| v.clamp(-Z_CLAMP, Z_CLAMP)).collect();
-
-        // Protocol 1: share z (all parties), y (C), exp(z) per party (PR)
-        let wx_share = crate::protocols::secret_share::share_and_sum(
-            ctx,
-            &format!("z{t}"),
-            &ring::encode_vec(&z),
-        );
-        let y_share = {
-            let yb: Option<Vec<f64>> =
-                y_all.as_ref().map(|y| rows.iter().map(|&i| y[i]).collect());
-            let enc = yb.as_ref().map(|y| ring::encode_vec(y));
-            protocol1_share(ctx, &format!("y{t}"), 0, enc.as_deref())
+    std::thread::scope(|scope| {
+        let mut pipeline = RoundPipeline {
+            x: &input.x,
+            schedule: &schedule,
+            kind: cfg.kind,
+            compute: compute.clone(),
+            lanes: None,
         };
-        // exponential intermediates: one chain per multiplier c, each
-        // party sharing e^{c·z_p} (paper §4.2 / DESIGN §7)
-        let mut exp_shares: Vec<Vec<Share>> = Vec::new();
-        for (ci, &c) in cfg.kind.exp_multipliers().iter().enumerate() {
-            let scaled: Vec<f64> = z.iter().map(|&v| c * v).collect();
-            let e = compute.exp(&scaled);
-            let enc = ring::encode_vec(&e);
-            let shares: Vec<Share> = (0..n)
-                .filter_map(|p| {
-                    let vals = (p == me).then_some(enc.as_slice());
-                    protocol1_share(ctx, &format!("e{t}:{ci}:{p}"), p, vals)
-                })
-                .collect();
-            exp_shares.push(shares);
+        if cfg.pipeline && start < cfg.iterations {
+            let (req_tx, req_rx) = mpsc::channel::<(usize, Vec<f64>)>();
+            let (res_tx, res_rx) = mpsc::channel::<PreparedRound>();
+            let (x, schedule, kind) = (&input.x, &schedule, cfg.kind);
+            let worker_compute = compute.clone();
+            scope.spawn(move || {
+                for (t, w) in req_rx {
+                    let prep = prepare_round(x, schedule, kind, &*worker_compute, t, &w);
+                    if res_tx.send(prep).is_err() {
+                        return; // online loop finished
+                    }
+                }
+            });
+            pipeline.lanes = Some((req_tx, res_rx));
+            pipeline.submit(start, &w);
         }
 
-        // Protocol 2 (CPs): shares of m·d
-        let (md_share, loss_aux) = if ctx.is_cp() {
-            let inputs = GradOpInputs {
-                wx: wx_share.clone().expect("CP has wx share"),
-                y: y_share.clone().expect("CP has y share"),
-                exps: exp_shares,
+        for t in start..cfg.iterations {
+            // stage 1: prepare-batch (from the worker when pipelined)
+            let prep = pipeline.obtain(t, &w);
+            let m = prep.xb.rows;
+
+            // line 4: select the computing parties (all agree by seed)
+            // and enter the iteration's PRNG/triple streams
+            ctx.cp = cfg.cp_selection.pick(n, cfg.seed, t);
+            ctx.begin_iteration(t);
+
+            // stage 2: mask/encrypt — Protocol 1
+            let shared = stage_mask_encrypt(ctx, t, &prep, y_all.as_ref());
+
+            // stage 3: exchange — Protocols 2 + 3
+            let (g, loss_inputs) = stage_exchange(ctx, cfg.kind, &prep.xb, shared);
+
+            // stage 4: combine — line 23 / eq. 6: local weight update
+            for (wi, gi) in w.iter_mut().zip(&g) {
+                *wi -= cfg.learning_rate * gi;
+            }
+            // double-buffer: iteration t+1's prepare only needs the new
+            // weights — start it before Protocol 4's network round
+            if t + 1 < cfg.iterations {
+                pipeline.submit(t + 1, &w);
+            }
+
+            // Protocol 4: loss revealed to C (pre-update loss of batch)
+            let lny_sum = if is_c && cfg.kind == GlmKind::Poisson {
+                let y = y_all.as_ref().unwrap();
+                prep.rows.iter().map(|&i| ln_factorial(y[i])).sum()
+            } else {
+                0.0
             };
-            let out = protocol2_grad_operator(ctx, cfg.kind, &inputs);
-            (Some(out.md), out.loss_aux)
-        } else {
-            (None, Vec::new())
-        };
+            let loss = protocol4_loss(ctx, cfg.kind, loss_inputs.as_ref(), m, lny_sum);
 
-        // Protocol 3: every party gets its plaintext gradient
-        let g = protocol3_gradients(ctx, &xb, md_share.as_ref());
+            // lines 24-31: stop-flag decision on C, broadcast to all
+            iterations_run = t + 1;
+            let stop = if is_c {
+                let l = loss.expect("C learns the loss");
+                losses.push(l);
+                let flag = l < cfg.loss_threshold || !l.is_finite();
+                ctx.ep.broadcast(&format!("stop{t}"), &Payload::Flag(flag));
+                flag
+            } else {
+                ctx.ep.recv(0, &format!("stop{t}")).into_flag()
+            };
 
-        // line 23 / eq. 6: local weight update
-        for (wi, gi) in w.iter_mut().zip(&g) {
-            *wi -= cfg.learning_rate * gi;
+            if let Some(path) = &ckpt_path {
+                if (t + 1) % cfg.checkpoint_every == 0 {
+                    TrainCheckpoint {
+                        kind: cfg.kind,
+                        party_id: me,
+                        n_parties: n,
+                        seed: cfg.seed,
+                        next_iter: t + 1,
+                        batch: cfg.batch_size,
+                        shuffle: cfg.shuffle,
+                        learning_rate: cfg.learning_rate,
+                        weights: w.clone(),
+                        losses: losses.clone(),
+                    }
+                    .save(path)
+                    .expect("write training checkpoint");
+                }
+            }
+            if stop {
+                break;
+            }
         }
-
-        // Protocol 4: loss revealed to C (pre-update loss of this batch)
-        let loss_inputs = if ctx.is_cp() {
-            Some(LossInputs {
-                wx: wx_share.unwrap(),
-                y: y_share.unwrap(),
-                aux: loss_aux,
-            })
-        } else {
-            None
-        };
-        let lny_sum = if is_c && cfg.kind == GlmKind::Poisson {
-            let y = y_all.as_ref().unwrap();
-            rows.iter().map(|&i| ln_factorial(y[i])).sum()
-        } else {
-            0.0
-        };
-        let loss = protocol4_loss(ctx, cfg.kind, loss_inputs.as_ref(), m, lny_sum);
-
-        // lines 24-31: stop-flag decision on C, broadcast to everyone
-        iterations_run = t + 1;
-        let stop = if is_c {
-            let l = loss.expect("C learns the loss");
-            losses.push(l);
-            let flag = l < cfg.loss_threshold || !l.is_finite();
-            ctx.ep.broadcast(&format!("stop{t}"), &Payload::Flag(flag));
-            flag
-        } else {
-            ctx.ep.recv(0, &format!("stop{t}")).into_flag()
-        };
-        if stop {
-            break;
-        }
-    }
+        // dropping `pipeline` closes the request lane; the worker exits
+    });
 
     PartyResult {
         weights: w,

@@ -248,6 +248,152 @@ impl WeightShard {
     }
 }
 
+const CKPT_MAGIC: &[u8; 4] = b"EFMC";
+const CKPT_VERSION: u16 = 1;
+
+/// One party's resumable training state — the third member of the EFM*
+/// shard family (model `EFMV`, weight shard `EFMS`, checkpoint `EFMC`).
+///
+/// Because every iteration is a pure function of `(weights, t, run_seed)`
+/// (per-iteration PRNG/dealer reseeding, seed-agreed batch schedule), the
+/// checkpoint only needs the weights, the loss curve so far, and the next
+/// iteration index — plus enough run metadata to reject resuming into a
+/// *different* run, which would silently train garbage.
+///
+/// Layout (little-endian):
+/// `b"EFMC" | version u16 | kind u8 | party u16 | n_parties u16 |
+///  seed u64 | next_iter u32 | batch u32 (0 = full) | flags u8
+///  (bit 0 = shuffle) | learning_rate f64 |
+///  w_len u32 | f64×w_len | loss_len u32 | f64×loss_len`
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainCheckpoint {
+    /// Which GLM is being trained.
+    pub kind: GlmKind,
+    /// The party this checkpoint belongs to (0 = C).
+    pub party_id: usize,
+    /// Mesh size of the run.
+    pub n_parties: usize,
+    /// The run seed (all PRNG streams and the batch schedule derive from
+    /// it — resuming under a different seed is meaningless).
+    pub seed: u64,
+    /// First iteration the resumed run executes.
+    pub next_iter: usize,
+    /// Mini-batch size of the run (`None` = full batch).
+    pub batch: Option<usize>,
+    /// Whether the run shuffles per epoch (changes the batch schedule).
+    pub shuffle: bool,
+    /// Gradient-descent step size.
+    pub learning_rate: f64,
+    /// This party's weight block after `next_iter` iterations.
+    pub weights: Vec<f64>,
+    /// Loss curve so far (non-empty on C only).
+    pub losses: Vec<f64>,
+}
+
+/// The canonical checkpoint path for one party under a checkpoint dir.
+pub fn checkpoint_path(dir: &Path, party: usize) -> std::path::PathBuf {
+    dir.join(format!("party{party}.efmc"))
+}
+
+impl TrainCheckpoint {
+    /// Write to `path` **atomically** (temp file + rename), creating
+    /// parent directories: a crash mid-write leaves the previous
+    /// checkpoint intact, never a truncated one.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut buf = Vec::new();
+        buf.extend_from_slice(CKPT_MAGIC);
+        buf.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        buf.push(kind_tag(self.kind));
+        buf.extend_from_slice(&(self.party_id as u16).to_le_bytes());
+        buf.extend_from_slice(&(self.n_parties as u16).to_le_bytes());
+        buf.extend_from_slice(&self.seed.to_le_bytes());
+        buf.extend_from_slice(&(self.next_iter as u32).to_le_bytes());
+        buf.extend_from_slice(&(self.batch.unwrap_or(0) as u32).to_le_bytes());
+        buf.push(self.shuffle as u8);
+        buf.extend_from_slice(&self.learning_rate.to_le_bytes());
+        buf.extend_from_slice(&(self.weights.len() as u32).to_le_bytes());
+        for &w in &self.weights {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        buf.extend_from_slice(&(self.losses.len() as u32).to_le_bytes());
+        for &l in &self.losses {
+            buf.extend_from_slice(&l.to_le_bytes());
+        }
+        let tmp = path.with_extension("efmc.tmp");
+        std::fs::write(&tmp, &buf)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("replacing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Read from `path`.
+    pub fn load(path: &Path) -> Result<TrainCheckpoint> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        const HEADER: usize = 4 + 2 + 1 + 2 + 2 + 8 + 4 + 4 + 1 + 8;
+        if buf.len() < HEADER || &buf[..4] != CKPT_MAGIC {
+            bail!("{} is not an EFMVFL training checkpoint", path.display());
+        }
+        let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+        if version != CKPT_VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let kind = kind_from_tag(buf[6])?;
+        let party_id = u16::from_le_bytes(buf[7..9].try_into().unwrap()) as usize;
+        let n_parties = u16::from_le_bytes(buf[9..11].try_into().unwrap()) as usize;
+        let seed = u64::from_le_bytes(buf[11..19].try_into().unwrap());
+        let next_iter = u32::from_le_bytes(buf[19..23].try_into().unwrap()) as usize;
+        let batch_raw = u32::from_le_bytes(buf[23..27].try_into().unwrap()) as usize;
+        let flags = buf[27];
+        if flags > 1 {
+            bail!("unknown checkpoint flags {flags:#x}");
+        }
+        let learning_rate = f64::from_le_bytes(buf[28..36].try_into().unwrap());
+        if party_id >= n_parties {
+            bail!("checkpoint claims party {party_id} of a {n_parties}-party run");
+        }
+        let mut pos = HEADER;
+        let mut read_f64s = |buf: &[u8], pos: &mut usize| -> Result<Vec<f64>> {
+            if *pos + 4 > buf.len() {
+                bail!("truncated checkpoint");
+            }
+            let len = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap()) as usize;
+            *pos += 4;
+            if *pos + len * 8 > buf.len() {
+                bail!("truncated checkpoint");
+            }
+            let out = (0..len)
+                .map(|i| {
+                    f64::from_le_bytes(buf[*pos + i * 8..*pos + i * 8 + 8].try_into().unwrap())
+                })
+                .collect();
+            *pos += len * 8;
+            Ok(out)
+        };
+        let weights = read_f64s(&buf, &mut pos)?;
+        let losses = read_f64s(&buf, &mut pos)?;
+        if pos != buf.len() {
+            bail!("trailing bytes in checkpoint");
+        }
+        Ok(TrainCheckpoint {
+            kind,
+            party_id,
+            n_parties,
+            seed,
+            next_iter,
+            batch: (batch_raw > 0).then_some(batch_raw),
+            shuffle: flags & 1 != 0,
+            learning_rate,
+            weights,
+            losses,
+        })
+    }
+}
+
 fn kind_tag(kind: GlmKind) -> u8 {
     match kind {
         GlmKind::Logistic => 0,
@@ -472,6 +618,109 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         let err = WeightShard::load(&p).unwrap_err();
         assert!(err.to_string().contains("party 9"), "{err}");
+    }
+
+    fn ckpt() -> TrainCheckpoint {
+        TrainCheckpoint {
+            kind: GlmKind::Logistic,
+            party_id: 1,
+            n_parties: 3,
+            seed: 42,
+            next_iter: 6,
+            batch: Some(128),
+            shuffle: true,
+            learning_rate: 0.15,
+            weights: vec![0.25, -1.5, 3.0],
+            losses: vec![],
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let c = ckpt();
+        let p = tmp("party1.efmc");
+        c.save(&p).unwrap();
+        assert_eq!(TrainCheckpoint::load(&p).unwrap(), c);
+        // full-batch + loss curve + shuffle off
+        let c2 = TrainCheckpoint {
+            batch: None,
+            shuffle: false,
+            party_id: 0,
+            losses: vec![0.693, 0.641],
+            ..ckpt()
+        };
+        let q = tmp("party0.efmc");
+        c2.save(&q).unwrap();
+        assert_eq!(TrainCheckpoint::load(&q).unwrap(), c2);
+        // overwriting is atomic-replace, not append
+        c.save(&q).unwrap();
+        assert_eq!(TrainCheckpoint::load(&q).unwrap(), c);
+    }
+
+    #[test]
+    fn checkpoint_path_is_per_party() {
+        let dir = std::path::Path::new("/ckpts");
+        assert_eq!(checkpoint_path(dir, 0), dir.join("party0.efmc"));
+        assert_eq!(checkpoint_path(dir, 12), dir.join("party12.efmc"));
+    }
+
+    fn good_ckpt_bytes(name: &str) -> Vec<u8> {
+        let p = tmp(name);
+        ckpt().save(&p).unwrap();
+        std::fs::read(&p).unwrap()
+    }
+
+    #[test]
+    fn checkpoint_rejects_corrupt_header() {
+        let mut bytes = good_ckpt_bytes("ck_magic.efmc");
+        bytes[0] = b'X';
+        let p = tmp("ck_badmagic.efmc");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = TrainCheckpoint::load(&p).unwrap_err();
+        assert!(err.to_string().contains("not an EFMVFL training checkpoint"), "{err}");
+
+        let mut bytes = good_ckpt_bytes("ck_ver.efmc");
+        bytes[4..6].copy_from_slice(&9u16.to_le_bytes());
+        let p = tmp("ck_badver.efmc");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = TrainCheckpoint::load(&p).unwrap_err();
+        assert!(err.to_string().contains("unsupported checkpoint version 9"), "{err}");
+
+        let mut bytes = good_ckpt_bytes("ck_tag.efmc");
+        bytes[6] = 123; // GLM tag
+        let p = tmp("ck_badtag.efmc");
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(TrainCheckpoint::load(&p).is_err());
+
+        let mut bytes = good_ckpt_bytes("ck_pid.efmc");
+        bytes[7..9].copy_from_slice(&7u16.to_le_bytes()); // party 7 of 3
+        let p = tmp("ck_badpid.efmc");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = TrainCheckpoint::load(&p).unwrap_err();
+        assert!(err.to_string().contains("party 7"), "{err}");
+
+        let mut bytes = good_ckpt_bytes("ck_flags.efmc");
+        bytes[27] = 0xfe;
+        let p = tmp("ck_badflags.efmc");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = TrainCheckpoint::load(&p).unwrap_err();
+        assert!(err.to_string().contains("unknown checkpoint flags"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_rejects_truncation_and_trailing_junk() {
+        let bytes = good_ckpt_bytes("ck_trunc.efmc");
+        for cut in [3, 20, 35, bytes.len() - 9, bytes.len() - 1] {
+            let p = tmp(&format!("ck_cut{cut}.efmc"));
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(TrainCheckpoint::load(&p).is_err(), "cut at {cut} must fail");
+        }
+        let mut extended = bytes.clone();
+        extended.push(0);
+        let p = tmp("ck_trailing.efmc");
+        std::fs::write(&p, &extended).unwrap();
+        let err = TrainCheckpoint::load(&p).unwrap_err();
+        assert!(err.to_string().contains("trailing bytes"), "{err}");
     }
 
     #[test]

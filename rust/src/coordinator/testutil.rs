@@ -3,7 +3,7 @@
 
 use crate::crypto::paillier::{Keypair, PublicKey};
 use crate::crypto::prng::ChaChaRng;
-use crate::mpc::beaver::TripleDealer;
+use crate::mpc::beaver::TripleSource;
 use crate::net::full_mesh;
 use crate::protocols::{PackingPolicy, ProtoCtx};
 use std::sync::Arc;
@@ -36,12 +36,13 @@ pub fn mesh_ctxs_keyed(n: usize, cp: (usize, usize), seed: u64, key_bits: usize)
             kp: keypairs[p].clone(),
             pks: pks.clone(),
             cp,
-            dealer: TripleDealer::new(seed),
+            triples: TripleSource::inline(seed),
             run_seed: seed,
             // 256-bit test keys fall back to unpacked anyway; Auto keeps
             // the default path identical to production. Tests that pin a
             // policy mutate `ctx.packing` before spawning parties.
             packing: PackingPolicy::Auto,
+            plane: None,
         })
         .collect()
 }

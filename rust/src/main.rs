@@ -49,6 +49,8 @@ const FLAGS: &[&'static str] = &[
     "key-bits", "seed", "csv", "label-col", "xla", "rotate-cps", "pool", "threshold",
     "save", "load", "config", "id", "connect-timeout", "shard", "gateway", "max-batch",
     "max-wait-ms", "max-requests", "clients", "requests", "max-ids", "max-id",
+    "no-shuffle", "no-pipeline", "offline-depth", "checkpoint-dir", "checkpoint-every",
+    "resume",
 ];
 
 /// Every subcommand the dispatcher accepts — `help` must list each one
@@ -96,7 +98,13 @@ fn help_text() -> String {
     s.push_str("  --seed N                 run seed                   [7]\n");
     s.push_str("  --rotate-cps             re-select CPs each iteration\n");
     s.push_str("  --pool N                 pre-generate N obfuscators\n");
-    s.push_str("  --xla                    use the PJRT AOT artifacts\n\n");
+    s.push_str("  --xla                    use the PJRT AOT artifacts\n");
+    s.push_str("  --no-shuffle             keep the epoch batch order fixed\n");
+    s.push_str("  --no-pipeline            serial rounds (no offline plane)\n");
+    s.push_str("  --offline-depth N        offline plane queue depth    [2]\n");
+    s.push_str("  --checkpoint-dir DIR --checkpoint-every N\n");
+    s.push_str("      write .efmc checkpoints every N iterations\n");
+    s.push_str("  --resume                 continue from the checkpoints\n\n");
     s.push_str("predict: efmvfl predict --load M.efmv [--csv PATH] (in-process)\n\n");
     s.push_str("distributed mode (real TCP sockets, one OS process per party):\n");
     s.push_str("  efmvfl party --config exp.toml --id N [train flags]\n");
@@ -203,6 +211,20 @@ fn apply_train_overrides(args: &Args, cfg: &mut TrainConfig) -> Result<()> {
         cfg.use_xla = true;
     }
     cfg.obfuscator_pool = args.get_or("pool", cfg.obfuscator_pool)?;
+    if args.has("no-shuffle") {
+        cfg.shuffle = false;
+    }
+    if args.has("no-pipeline") {
+        cfg.pipeline = false;
+    }
+    cfg.offline_depth = args.get_or("offline-depth", cfg.offline_depth)?;
+    if let Some(dir) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(dir.to_string());
+    }
+    cfg.checkpoint_every = args.get_or("checkpoint-every", cfg.checkpoint_every)?;
+    if args.has("resume") {
+        cfg.resume = true;
+    }
     Ok(())
 }
 

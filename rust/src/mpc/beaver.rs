@@ -68,6 +68,66 @@ impl TripleDealer {
     }
 }
 
+/// Where the online round gets its triples: a queue of batches pre-dealt
+/// by the offline plane, backed by the dealer that produced them.
+///
+/// The offline plane deals the *predicted* triple sequence for an
+/// iteration from a fresh per-iteration dealer, then hands over both the
+/// queue and the advanced dealer. Because dealing is a pure function of
+/// the dealer's PRNG stream, popping pre-dealt batches and then
+/// continuing from the carried dealer yields **exactly** the sequence an
+/// inline dealer would have produced — over- or under-prediction changes
+/// scheduling, never values. That prefix property is what makes the
+/// offline/online split bit-transparent to training.
+pub struct TripleSource {
+    pre: std::collections::VecDeque<(Triple, Triple)>,
+    dealer: TripleDealer,
+}
+
+impl TripleSource {
+    /// Inline source: no pre-dealt queue, every `deal` runs the dealer on
+    /// the calling thread (the serial/legacy behavior).
+    pub fn inline(seed: u64) -> Self {
+        TripleSource::from_dealer(TripleDealer::new(seed))
+    }
+
+    /// Wrap an existing dealer (baselines and tests that manage their own
+    /// dealer seeds).
+    pub fn from_dealer(dealer: TripleDealer) -> Self {
+        TripleSource { pre: std::collections::VecDeque::new(), dealer }
+    }
+
+    /// Source fed by the offline plane: `pre` holds the pre-dealt
+    /// batches, `dealer` is the same dealer advanced past them.
+    pub fn prefilled(
+        pre: std::collections::VecDeque<(Triple, Triple)>,
+        dealer: TripleDealer,
+    ) -> Self {
+        TripleSource { pre, dealer }
+    }
+
+    /// Number of pre-dealt batches still queued.
+    pub fn pooled(&self) -> usize {
+        self.pre.len()
+    }
+
+    /// Next triple batch of length `n`: pops the pre-dealt queue when
+    /// available, else deals inline from the carried dealer.
+    pub fn deal(&mut self, n: usize) -> (Triple, Triple) {
+        match self.pre.pop_front() {
+            Some(t) => {
+                assert_eq!(
+                    t.0.a.len(),
+                    n,
+                    "offline plane pre-dealt a triple batch of the wrong length"
+                );
+                t
+            }
+            None => self.dealer.deal(n),
+        }
+    }
+}
+
 /// Step 1 of online multiplication: compute this party's masked openings
 /// `(e, f) = (⟨x⟩ − ⟨a⟩, ⟨y⟩ − ⟨b⟩)` to send to the peer.
 pub fn mul_open(x: &Share, y: &Share, t: &Triple) -> (Vec<Elem>, Vec<Elem>) {
@@ -167,6 +227,34 @@ mod tests {
                 .zip(&z)
                 .all(|((a, b), c)| (a * b - c).abs() < 0.05)
         });
+    }
+
+    #[test]
+    fn prefilled_source_matches_inline_dealing() {
+        // same seed, three scenarios: pure inline, exact prediction, and
+        // under-prediction (queue drains, carried dealer continues) — all
+        // must produce the identical triple sequence
+        let lens = [8usize, 8, 8, 8];
+        let reference: Vec<_> = {
+            let mut src = TripleSource::inline(91);
+            lens.iter().map(|&n| src.deal(n)).collect()
+        };
+        for predicted in [4usize, 2] {
+            let mut bg = TripleDealer::new(91);
+            let pre: std::collections::VecDeque<_> =
+                (0..predicted).map(|_| bg.deal(8)).collect();
+            let mut src = TripleSource::prefilled(pre, bg);
+            assert_eq!(src.pooled(), predicted);
+            for (i, &n) in lens.iter().enumerate() {
+                let (t0, t1) = src.deal(n);
+                let (r0, r1) = &reference[i];
+                assert_eq!(t0.a, r0.a);
+                assert_eq!(t0.c, r0.c);
+                assert_eq!(t1.b, r1.b);
+                assert_eq!(t1.c, r1.c);
+            }
+            assert_eq!(src.pooled(), 0);
+        }
     }
 
     #[test]

@@ -38,8 +38,12 @@ pub struct NetStats {
     bytes: Vec<AtomicU64>,
     /// msgs[from * n + to]
     msgs: Vec<AtomicU64>,
-    /// Offline-phase bytes (Beaver dealing), counted separately.
+    /// Offline-phase bytes (preprocessing traffic), counted separately.
     offline_bytes: AtomicU64,
+    /// Beaver-triple bytes dealt by the offline plane (a breakdown of
+    /// `offline_bytes`, so distributed stat rows can attribute how much
+    /// of the preprocessing traffic is triple material).
+    triple_bytes: AtomicU64,
     /// Ciphertext payload bytes (the HE share of the online traffic —
     /// what ciphertext packing shrinks; also counted in `bytes`).
     cipher_bytes: AtomicU64,
@@ -53,6 +57,7 @@ impl NetStats {
             bytes: (0..n * n).map(|_| AtomicU64::new(0)).collect(),
             msgs: (0..n * n).map(|_| AtomicU64::new(0)).collect(),
             offline_bytes: AtomicU64::new(0),
+            triple_bytes: AtomicU64::new(0),
             cipher_bytes: AtomicU64::new(0),
         }
     }
@@ -66,6 +71,15 @@ impl NetStats {
     /// Record offline-phase (preprocessing) traffic.
     pub fn record_offline(&self, len: usize) {
         self.offline_bytes.fetch_add(len as u64, Ordering::Relaxed);
+    }
+
+    /// Record Beaver-triple material dealt by the offline plane: counts
+    /// toward `offline_bytes` *and* the distinct triple counter, so the
+    /// per-party rows gathered in distributed mode carry the dealer's
+    /// traffic instead of leaving it on a side counter.
+    pub fn record_offline_triples(&self, len: usize) {
+        self.offline_bytes.fetch_add(len as u64, Ordering::Relaxed);
+        self.triple_bytes.fetch_add(len as u64, Ordering::Relaxed);
     }
 
     /// Record the ciphertext-data share of a message already counted via
@@ -89,6 +103,11 @@ impl NetStats {
         self.offline_bytes.load(Ordering::Relaxed)
     }
 
+    /// Beaver-triple bytes (subset of [`NetStats::offline_bytes`]).
+    pub fn triple_bytes(&self) -> u64 {
+        self.triple_bytes.load(Ordering::Relaxed)
+    }
+
     /// Ciphertext payload bytes (subset of [`NetStats::total_bytes`]).
     pub fn cipher_bytes(&self) -> u64 {
         self.cipher_bytes.load(Ordering::Relaxed)
@@ -106,11 +125,12 @@ impl NetStats {
 
     /// Flatten party `from`'s outgoing row for the end-of-run gather in
     /// distributed mode:
-    /// `[bytes to 0.., msgs to 0.., offline_bytes, cipher_bytes]`.
-    /// A socket transport counts only its own sends, so the union of all
-    /// parties' rows equals what the in-process shared sink records.
+    /// `[bytes to 0.., msgs to 0.., offline_bytes, triple_bytes,
+    /// cipher_bytes]`. A socket transport counts only its own sends, so
+    /// the union of all parties' rows equals what the in-process shared
+    /// sink records.
     pub fn export_row(&self, from: usize) -> Vec<u64> {
-        let mut row = Vec::with_capacity(2 * self.n + 2);
+        let mut row = Vec::with_capacity(2 * self.n + 3);
         for to in 0..self.n {
             row.push(self.bytes[from * self.n + to].load(Ordering::Relaxed));
         }
@@ -118,6 +138,7 @@ impl NetStats {
             row.push(self.msgs[from * self.n + to].load(Ordering::Relaxed));
         }
         row.push(self.offline_bytes.load(Ordering::Relaxed));
+        row.push(self.triple_bytes.load(Ordering::Relaxed));
         row.push(self.cipher_bytes.load(Ordering::Relaxed));
         row
     }
@@ -125,13 +146,14 @@ impl NetStats {
     /// Merge a row produced by [`NetStats::export_row`] on party `from`'s
     /// side into this sink (adds, so local counts are preserved).
     pub fn merge_row(&self, from: usize, row: &[u64]) {
-        assert_eq!(row.len(), 2 * self.n + 2, "malformed stats row");
+        assert_eq!(row.len(), 2 * self.n + 3, "malformed stats row");
         for to in 0..self.n {
             self.bytes[from * self.n + to].fetch_add(row[to], Ordering::Relaxed);
             self.msgs[from * self.n + to].fetch_add(row[self.n + to], Ordering::Relaxed);
         }
         self.offline_bytes.fetch_add(row[2 * self.n], Ordering::Relaxed);
-        self.cipher_bytes.fetch_add(row[2 * self.n + 1], Ordering::Relaxed);
+        self.triple_bytes.fetch_add(row[2 * self.n + 1], Ordering::Relaxed);
+        self.cipher_bytes.fetch_add(row[2 * self.n + 2], Ordering::Relaxed);
     }
 
     /// Reset all counters (between bench repetitions).
@@ -140,6 +162,7 @@ impl NetStats {
             c.store(0, Ordering::Relaxed);
         }
         self.offline_bytes.store(0, Ordering::Relaxed);
+        self.triple_bytes.store(0, Ordering::Relaxed);
         self.cipher_bytes.store(0, Ordering::Relaxed);
     }
 }
@@ -160,11 +183,15 @@ mod tests {
         assert_eq!(s.total_msgs(), 3);
         s.record_offline(1000);
         assert_eq!(s.offline_bytes(), 1000);
+        s.record_offline_triples(24);
+        assert_eq!(s.offline_bytes(), 1024, "triples count as offline bytes");
+        assert_eq!(s.triple_bytes(), 24);
         s.record_cipher(128);
         assert_eq!(s.cipher_bytes(), 128);
         s.reset();
         assert_eq!(s.total_bytes(), 0);
         assert_eq!(s.offline_bytes(), 0);
+        assert_eq!(s.triple_bytes(), 0);
         assert_eq!(s.cipher_bytes(), 0);
     }
 
@@ -175,6 +202,7 @@ mod tests {
         local.record(1, 0, 100);
         local.record(1, 2, 40);
         local.record_offline(8);
+        local.record_offline_triples(16);
         local.record_cipher(64);
         // party 0's sink after merging the gathered row
         let sink = NetStats::new(3);
@@ -184,7 +212,8 @@ mod tests {
         assert_eq!(sink.link_bytes(1, 2), 40);
         assert_eq!(sink.link_bytes(0, 1), 7);
         assert_eq!(sink.total_msgs(), 3);
-        assert_eq!(sink.offline_bytes(), 8);
+        assert_eq!(sink.offline_bytes(), 24);
+        assert_eq!(sink.triple_bytes(), 16);
         assert_eq!(sink.cipher_bytes(), 64);
     }
 

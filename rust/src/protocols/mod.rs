@@ -31,6 +31,7 @@
 
 pub mod grad_operator;
 pub mod mpc_online;
+pub mod plane;
 pub mod secret_share;
 pub mod secure_gradient;
 pub mod secure_loss;
@@ -38,7 +39,7 @@ pub mod secure_loss;
 use crate::crypto::fixed::PackLayout;
 use crate::crypto::paillier::{Keypair, PublicKey};
 use crate::crypto::prng::ChaChaRng;
-use crate::mpc::beaver::TripleDealer;
+use crate::mpc::beaver::TripleSource;
 use crate::net::{Endpoint, Transport};
 use std::sync::Arc;
 
@@ -80,13 +81,40 @@ pub struct ProtoCtx<T: Transport = Endpoint> {
     pub pks: Vec<Arc<PublicKey>>,
     /// The computing parties for the current iteration.
     pub cp: (usize, usize),
-    /// Shared-seed triple dealer for the current iteration (both CPs
-    /// advance it in lockstep; see [`reseed_dealer`]).
-    pub dealer: TripleDealer,
+    /// Shared-seed triple source for the current iteration (both CPs
+    /// advance it in lockstep; see [`ProtoCtx::reseed_dealer`]). Either
+    /// an inline dealer or a queue pre-dealt by the offline plane — the
+    /// values are identical either way (see
+    /// [`crate::mpc::beaver::TripleSource`]).
+    pub triples: TripleSource,
     /// Base seed of the run (drives per-iteration dealer reseeding).
     pub run_seed: u64,
     /// Protocol 3 ciphertext-packing policy (must match across parties).
     pub packing: PackingPolicy,
+    /// Handle to this party's background offline plane, when training
+    /// runs pipelined ([`plane::OfflinePlane::spawn`]). `None` outside
+    /// training (inference/serving) and in serial mode.
+    pub plane: Option<plane::PlaneHandle>,
+}
+
+/// The shared per-iteration dealer seed: every party derives the same
+/// stream for iteration `t`, so the two CPs (whichever pair is selected)
+/// stay in lockstep, and the offline plane can pre-deal iteration `t`'s
+/// triples without observing the online rounds before it.
+pub fn iter_dealer_seed(run_seed: u64, t: usize) -> u64 {
+    run_seed.wrapping_add((t as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+}
+
+/// The per-party, per-iteration protocol RNG seed. Reseeding at every
+/// iteration start makes iteration `t` a pure function of
+/// `(weights, t, run_seed)` — no PRNG history crosses iterations — which
+/// is what lets a checkpoint restore bit-identical training from just
+/// `(t, weights, losses)`, and lets the offline plane run ahead without
+/// perturbing online draws.
+pub fn iter_rng_seed(run_seed: u64, party: usize, t: usize) -> u64 {
+    run_seed
+        .wrapping_add(3000 + party as u64)
+        .wrapping_add((t as u64 + 1).wrapping_mul(0xa24b_aed4_963e_e407))
 }
 
 impl<T: Transport> ProtoCtx<T> {
@@ -112,14 +140,26 @@ impl<T: Transport> ProtoCtx<T> {
         }
     }
 
-    /// Re-seed the triple dealer for iteration `t` — every party derives
-    /// the same stream, so the two CPs stay in lockstep regardless of
-    /// which pair is selected this round.
+    /// Re-seed the triple source for iteration `t` with an inline dealer
+    /// (serial mode; see [`iter_dealer_seed`]).
     pub fn reseed_dealer(&mut self, t: usize) {
-        let seed = self
-            .run_seed
-            .wrapping_add((t as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
-        self.dealer = TripleDealer::new(seed);
+        self.triples = TripleSource::inline(iter_dealer_seed(self.run_seed, t));
+    }
+
+    /// Enter iteration `t` of a training run: reseed the protocol RNG on
+    /// the per-iteration schedule ([`iter_rng_seed`]) and install the
+    /// iteration's triples — the offline plane's pre-dealt pack when one
+    /// is attached (falling back to inline dealing if the plane is gone),
+    /// an inline dealer otherwise. Serial and pipelined runs execute
+    /// bit-identically through here.
+    pub fn begin_iteration(&mut self, t: usize) {
+        let me = self.ep.id();
+        self.rng = ChaChaRng::from_seed(iter_rng_seed(self.run_seed, me, t));
+        let pack = self.plane.as_ref().and_then(|p| p.take(t));
+        self.triples = match pack {
+            Some(pack) => pack.into_source(),
+            None => TripleSource::inline(iter_dealer_seed(self.run_seed, t)),
+        };
     }
 }
 

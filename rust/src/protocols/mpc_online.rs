@@ -1,12 +1,16 @@
 //! Online Beaver multiplication between the two CPs.
 //!
 //! Both CPs hold shares of `x` and `y`, pull the next triple from their
-//! lockstep dealers, exchange the masked openings `(e, f)` in a single
-//! round, and combine locally. Offline triple bytes are recorded once (by
-//! the first CP) against the offline counter.
+//! lockstep [`crate::mpc::beaver::TripleSource`]s (pre-dealt by the
+//! offline plane, or dealt inline in serial mode — same values either
+//! way), exchange the masked openings `(e, f)` in a single round, and
+//! combine locally. Triple bytes are recorded once (by the first CP)
+//! against the distinct offline triple counter
+//! ([`crate::net::NetStats::record_offline_triples`]) at *consumption*
+//! time, so pooled and inline dealing account identically.
 
 use super::ProtoCtx;
-use crate::mpc::beaver::{mul_combine, mul_open};
+use crate::mpc::beaver::{mul_combine, mul_open, TripleSource};
 use crate::mpc::ring;
 use crate::mpc::share::Share;
 use crate::net::{Payload, Transport};
@@ -18,16 +22,16 @@ pub fn mul_over_wire<T: Transport>(
     ep: &mut T,
     peer: usize,
     first: bool,
-    dealer: &mut crate::mpc::beaver::TripleDealer,
+    triples: &mut TripleSource,
     x: &Share,
     y: &Share,
     tag: &str,
 ) -> Share {
     assert_eq!(x.len(), y.len());
-    // lockstep dealing: both sides generate the same (t0, t1), take their half
-    let (t0, t1) = dealer.deal(x.len());
+    // lockstep source: both sides hold the same (t0, t1), take their half
+    let (t0, t1) = triples.deal(x.len());
     if first {
-        ep.stats().record_offline(t0.byte_len() + t1.byte_len());
+        ep.stats().record_offline_triples(t0.byte_len() + t1.byte_len());
     }
     let t = if first { t0 } else { t1 };
 
@@ -47,9 +51,9 @@ pub fn mpc_mul<T: Transport>(ctx: &mut ProtoCtx<T>, x: &Share, y: &Share, tag: &
     assert!(ctx.is_cp(), "mpc_mul called on a non-computing party");
     let first = ctx.is_first_cp();
     let peer = ctx.cp_peer();
-    let mut dealer = std::mem::replace(&mut ctx.dealer, crate::mpc::beaver::TripleDealer::new(0));
-    let out = mul_over_wire(&mut ctx.ep, peer, first, &mut dealer, x, y, tag);
-    ctx.dealer = dealer;
+    let mut triples = std::mem::replace(&mut ctx.triples, TripleSource::inline(0));
+    let out = mul_over_wire(&mut ctx.ep, peer, first, &mut triples, x, y, tag);
+    ctx.triples = triples;
     out
 }
 

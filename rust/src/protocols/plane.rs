@@ -1,0 +1,508 @@
+//! The **offline plane**: background preprocessing that keeps the online
+//! training rounds cheap (the VERTICES-style offline/online split, here
+//! without a third party).
+//!
+//! Per training iteration the online round consumes two kinds of
+//! precomputable material:
+//!
+//! - **Beaver triples** — both CPs advance a shared-seed dealer in
+//!   lockstep ([`crate::mpc::beaver::TripleDealer`]). The plane pre-deals
+//!   the predicted per-iteration sequence on a dedicated thread and hands
+//!   the queue *plus the advanced dealer* to the online side
+//!   ([`IterationPack`]); the prefix property of
+//!   [`crate::mpc::beaver::TripleSource`] makes this bit-identical to
+//!   inline dealing even when the prediction is off.
+//! - **Paillier obfuscators** — every `encrypt_raw`/`mask_ct` draw pops a
+//!   pooled `rⁿ` when one is available. The plane refills each key's pool
+//!   to the iteration's actual demand ([`obfuscator_demand`], sized from
+//!   the real mini-batch block count, not full-batch blocks), so the
+//!   online hot path stays two multiplications per encryption.
+//!
+//! The plane runs ahead of the online rounds through a bounded queue
+//! (`depth` iterations), so on a multi-core box preprocessing for
+//! iteration `t+depth` overlaps iteration `t`'s HE compute and network
+//! transfer; on a single core the same split still moves every
+//! obfuscator exponentiation out of the measured online phase.
+//!
+//! This module also owns the **seed-agreed batch schedule**
+//! ([`BatchSchedule`]): per-epoch secure shuffling where every party
+//! derives the identical permutation from the shared run seed, replacing
+//! the cyclic `batch_rows` window. It lives here because both planes
+//! schedule from it — the online round gathers the rows, the offline
+//! plane only needs each iteration's batch length.
+
+use super::{iter_dealer_seed, CpSelection, PackingPolicy};
+use crate::crypto::fixed::PackLayout;
+use crate::crypto::paillier::PublicKey;
+use crate::crypto::prng::ChaChaRng;
+use crate::glm::GlmKind;
+use crate::mpc::beaver::{Triple, TripleDealer, TripleSource};
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Mini-batch row schedule for a training run. All parties construct it
+/// from shared configuration (`run_seed` travels in the config), so every
+/// party gathers the same rows each iteration without communication.
+#[derive(Clone, Debug)]
+pub struct BatchSchedule {
+    m_total: usize,
+    batch: Option<usize>,
+    shuffle: bool,
+    seed: u64,
+}
+
+impl BatchSchedule {
+    /// Schedule over `m_total` rows with mini-batches of `batch` rows
+    /// (`None` = full batch). With `shuffle`, each epoch draws a fresh
+    /// Fisher–Yates permutation from `(seed, epoch)` and the epoch's
+    /// batches partition it; without, the legacy cyclic window
+    /// ([`crate::coordinator::party::batch_rows`]) is used.
+    pub fn new(m_total: usize, batch: Option<usize>, shuffle: bool, seed: u64) -> BatchSchedule {
+        assert!(m_total > 0, "schedule over an empty dataset");
+        BatchSchedule { m_total, batch, shuffle, seed }
+    }
+
+    /// Effective batch size bound (`None` when running full-batch).
+    fn effective_batch(&self) -> Option<usize> {
+        match self.batch {
+            Some(b) if b < self.m_total => Some(b),
+            _ => None,
+        }
+    }
+
+    /// Batches per epoch (1 for full-batch runs). The last batch of an
+    /// epoch may be short — use [`BatchSchedule::len_at`], not the
+    /// configured batch size, when sizing per-iteration material.
+    pub fn batches_per_epoch(&self) -> usize {
+        match self.effective_batch() {
+            None => 1,
+            Some(b) => self.m_total.div_ceil(b),
+        }
+    }
+
+    /// The epoch iteration `t` falls in.
+    pub fn epoch_of(&self, t: usize) -> usize {
+        t / self.batches_per_epoch()
+    }
+
+    /// Number of rows in iteration `t`'s batch (cheap — no permutation).
+    pub fn len_at(&self, t: usize) -> usize {
+        match self.effective_batch() {
+            None => self.m_total,
+            Some(b) => {
+                if !self.shuffle {
+                    return b; // cyclic window always wraps to full width
+                }
+                let slot = t % self.batches_per_epoch();
+                b.min(self.m_total - slot * b)
+            }
+        }
+    }
+
+    /// The epoch's full permutation (identity when not shuffling).
+    fn epoch_permutation(&self, epoch: usize) -> Vec<usize> {
+        let mut perm: Vec<usize> = (0..self.m_total).collect();
+        // golden-ratio-mixed epoch seed: shared by all parties, distinct
+        // per epoch, independent of the dealer/protocol seed streams
+        let mut rng = ChaChaRng::from_seed(
+            self.seed ^ (epoch as u64 + 1).wrapping_mul(0xc2b2_ae3d_27d4_eb4f),
+        );
+        for i in (1..perm.len()).rev() {
+            let j = rng.next_u64_below(i as u64 + 1) as usize;
+            perm.swap(i, j);
+        }
+        perm
+    }
+
+    /// Rows of iteration `t`'s batch.
+    pub fn rows_at(&self, t: usize) -> Vec<usize> {
+        let b = match self.effective_batch() {
+            None => return (0..self.m_total).collect(),
+            Some(b) => b,
+        };
+        if !self.shuffle {
+            // legacy cyclic window
+            let start = (t * b) % self.m_total;
+            return (0..b).map(|i| (start + i) % self.m_total).collect();
+        }
+        let per_epoch = self.batches_per_epoch();
+        let perm = self.epoch_permutation(t / per_epoch);
+        let slot = t % per_epoch;
+        let start = slot * b;
+        let end = (start + b).min(self.m_total);
+        perm[start..end].to_vec()
+    }
+}
+
+/// Number of vector Beaver-triple deals per iteration (each of the
+/// batch's length, CPs only): the exponential chains of Protocol 2 plus
+/// Protocol 4's loss aggregates. Derived from the same
+/// [`GlmKind::exp_multipliers`] table the online code iterates, so the
+/// offline plane's prediction tracks the protocol by construction.
+pub fn triple_deals_per_iter(kind: GlmKind, n_parties: usize) -> usize {
+    // each multiplier's chain multiplies n per-party shares: n−1 deals
+    let chains = kind.exp_multipliers().len() * (n_parties - 1);
+    // Protocol 2's y·e^{·WX} product (Gamma/Tweedie)
+    let yexp = matches!(kind, GlmKind::Gamma | GlmKind::Tweedie) as usize;
+    // Protocol 4: LR needs t and t², Poisson t, Linear r², Gamma/Tweedie
+    // reuse Protocol 2 aggregates for free
+    let p4 = match kind {
+        GlmKind::Logistic => 2,
+        GlmKind::Poisson | GlmKind::Linear => 1,
+        GlmKind::Gamma | GlmKind::Tweedie => 0,
+    };
+    chains + yexp + p4
+}
+
+/// How pool refills are sized (see [`obfuscator_demand`]).
+#[derive(Clone, Debug)]
+pub enum PoolSizing {
+    /// Per-process pools (distributed mode): refill only what *this*
+    /// party will draw; `features` is its own block width.
+    Own { features: usize },
+    /// One shared pool per key (in-process training): refill to the whole
+    /// mesh's demand. Top-up semantics make the concurrent per-party
+    /// planes idempotent — the first to refill satisfies the rest.
+    Shared { features: Vec<usize> },
+}
+
+/// Pooled-obfuscator demand of one Protocol 3 round with `m_t` batch
+/// rows: `(key owner, draw count)` pairs. A CP draws its step-1 fanout
+/// under its own key (`blocks` packed ciphertexts, else `m_t`); every
+/// party draws one obfuscator per masked ciphertext it returns to a
+/// foreign CP (its feature count, per CP). Sized from the *actual*
+/// mini-batch block count so small batches stop over-generating.
+pub fn obfuscator_demand(
+    me: usize,
+    cp: (usize, usize),
+    m_t: usize,
+    sizing: &PoolSizing,
+    pks: &[Arc<PublicKey>],
+    packing: PackingPolicy,
+) -> Vec<(usize, usize)> {
+    if pks.is_empty() {
+        // no key material registered — the plane is serving triples only
+        // (unit tests, key-less baselines); nothing to pool
+        return Vec::new();
+    }
+    let step1_blocks = |c: usize| -> usize {
+        let layout = PackLayout::for_modulus_bits(pks[c].n.bit_len(), m_t);
+        if packing.active(&layout) {
+            layout.blocks_for(m_t)
+        } else {
+            m_t
+        }
+    };
+    let mut out = Vec::new();
+    for &c in &[cp.0, cp.1] {
+        let count = match sizing {
+            PoolSizing::Own { features } => {
+                if me == c {
+                    step1_blocks(c)
+                } else {
+                    *features
+                }
+            }
+            PoolSizing::Shared { features } => {
+                let masks: usize = features
+                    .iter()
+                    .enumerate()
+                    .filter(|&(p, _)| p != c)
+                    .map(|(_, &f)| f)
+                    .sum();
+                step1_blocks(c) + masks
+            }
+        };
+        out.push((c, count));
+    }
+    out
+}
+
+/// Everything the offline plane pre-generated for one iteration: the
+/// pre-dealt triple queue and the dealer advanced past it.
+pub struct IterationPack {
+    /// The iteration this pack belongs to.
+    pub t: usize,
+    /// Pre-dealt triple batches, in deal order (empty on non-CPs).
+    pub triples: VecDeque<(Triple, Triple)>,
+    /// The per-iteration dealer, advanced past `triples`.
+    pub dealer: TripleDealer,
+}
+
+impl IterationPack {
+    /// Convert into the online side's triple source.
+    pub fn into_source(self) -> TripleSource {
+        TripleSource::prefilled(self.triples, self.dealer)
+    }
+}
+
+/// What the offline plane needs to run ahead of the online rounds. All
+/// owned (`'static`) so the generator can live on its own thread.
+pub struct PlaneSpec {
+    /// This party's id.
+    pub me: usize,
+    /// Mesh size.
+    pub n_parties: usize,
+    /// Which GLM is being trained (drives the triple-demand table).
+    pub kind: GlmKind,
+    /// Shared run seed.
+    pub run_seed: u64,
+    /// CP pair selection policy (the plane predicts each iteration's CPs
+    /// the same way the online round picks them).
+    pub cp_selection: CpSelection,
+    /// First iteration to preprocess (> 0 when resuming).
+    pub start_iter: usize,
+    /// Iteration bound of the run.
+    pub iterations: usize,
+    /// The shared batch schedule (per-iteration batch lengths).
+    pub schedule: BatchSchedule,
+    /// Pool-refill sizing (own draws vs shared-pool aggregate).
+    pub sizing: PoolSizing,
+    /// All parties' public keys (pool refill targets).
+    pub pks: Vec<Arc<PublicKey>>,
+    /// Protocol 3 packing policy (block-count prediction).
+    pub packing: PackingPolicy,
+    /// How many iterations the plane may run ahead of the online rounds
+    /// (bounded queue depth; clamped to ≥ 1).
+    pub depth: usize,
+}
+
+/// Handle to a running offline plane. The online side pulls one
+/// [`IterationPack`] per iteration; dropping the handle stops the
+/// generator (its next send fails) and joins the thread.
+pub struct PlaneHandle {
+    rx: Option<mpsc::Receiver<IterationPack>>,
+    join: Option<std::thread::JoinHandle<()>>,
+    /// Whether the generator can run to completion without the online
+    /// side consuming (queue depth covers every remaining iteration) —
+    /// the precondition of [`PlaneHandle::wait_ready`].
+    can_finish: bool,
+}
+
+impl PlaneHandle {
+    /// The pack for iteration `t`, blocking until the plane catches up.
+    /// Returns `None` if the plane is gone (caller falls back to inline
+    /// dealing — same bits, just slower).
+    pub fn take(&self, t: usize) -> Option<IterationPack> {
+        let pack = self.rx.as_ref()?.recv().ok()?;
+        assert_eq!(pack.t, t, "offline plane out of step with the online rounds");
+        Some(pack)
+    }
+
+    /// Block until the generator has produced every iteration's pack
+    /// *without consuming anything*: benches use this to start timing the
+    /// online phase with preprocessing already done. Requires the queue
+    /// depth to cover every remaining iteration (asserted), or the
+    /// generator would park on a full queue and this would never return.
+    pub fn wait_ready(&self) {
+        assert!(
+            self.can_finish,
+            "wait_ready needs depth >= remaining iterations (the generator \
+             parks on a full queue otherwise)"
+        );
+        if let Some(join) = &self.join {
+            while !join.is_finished() {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+    }
+}
+
+impl Drop for PlaneHandle {
+    fn drop(&mut self) {
+        // closing the receiver makes the generator's next send fail,
+        // which is its exit signal (early stop / training finished)
+        drop(self.rx.take());
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+/// The background generator itself.
+pub struct OfflinePlane;
+
+impl OfflinePlane {
+    /// Spawn the offline plane for one party: a dedicated thread that,
+    /// for each iteration in `[start_iter, iterations)`, pre-deals the
+    /// predicted triple sequence (when this party is a CP that round)
+    /// and refills the obfuscator pools to the round's demand, then
+    /// queues the [`IterationPack`] — blocking once it is `depth`
+    /// iterations ahead.
+    pub fn spawn(spec: PlaneSpec) -> PlaneHandle {
+        let can_finish = spec.depth.max(1) >= spec.iterations.saturating_sub(spec.start_iter);
+        let (tx, rx) = mpsc::sync_channel(spec.depth.max(1));
+        let join = std::thread::Builder::new()
+            .name(format!("efmvfl-offline-{}", spec.me))
+            .spawn(move || {
+                // obfuscator values never reach any output (the pool only
+                // changes *which* r^n blinds a ciphertext, not what it
+                // decrypts to), so this stream just needs determinism and
+                // independence from the protocol/dealer streams
+                let mut obf_rng = ChaChaRng::from_seed(
+                    spec.run_seed.wrapping_add(7000 + spec.me as u64),
+                );
+                for t in spec.start_iter..spec.iterations {
+                    let cp = spec.cp_selection.pick(spec.n_parties, spec.run_seed, t);
+                    let m_t = spec.schedule.len_at(t);
+                    let mut dealer = TripleDealer::new(iter_dealer_seed(spec.run_seed, t));
+                    let mut triples = VecDeque::new();
+                    if spec.me == cp.0 || spec.me == cp.1 {
+                        for _ in 0..triple_deals_per_iter(spec.kind, spec.n_parties) {
+                            triples.push_back(dealer.deal(m_t));
+                        }
+                    }
+                    for (owner, count) in obfuscator_demand(
+                        spec.me,
+                        cp,
+                        m_t,
+                        &spec.sizing,
+                        &spec.pks,
+                        spec.packing,
+                    ) {
+                        spec.pks[owner].refill_pool(count, &mut obf_rng);
+                    }
+                    if tx.send(IterationPack { t, triples, dealer }).is_err() {
+                        return; // online side finished (or stopped early)
+                    }
+                }
+            })
+            .expect("spawn offline plane");
+        PlaneHandle { rx: Some(rx), join: Some(join), can_finish }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_batch_schedule_is_identity() {
+        for batch in [None, Some(100)] {
+            let s = BatchSchedule::new(10, batch, true, 3);
+            assert_eq!(s.batches_per_epoch(), 1);
+            assert_eq!(s.len_at(7), 10);
+            assert_eq!(s.rows_at(7), (0..10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn cyclic_schedule_matches_legacy_batch_rows() {
+        let s = BatchSchedule::new(5, Some(2), false, 99);
+        for t in 0..8 {
+            assert_eq!(s.rows_at(t), crate::coordinator::party::batch_rows(5, Some(2), t));
+            assert_eq!(s.len_at(t), 2);
+        }
+    }
+
+    #[test]
+    fn shuffled_epochs_partition_rows_and_agree_across_parties() {
+        let s = BatchSchedule::new(10, Some(4), true, 7);
+        assert_eq!(s.batches_per_epoch(), 3);
+        // last batch of the epoch is short
+        assert_eq!(s.len_at(0), 4);
+        assert_eq!(s.len_at(2), 2);
+        assert_eq!(s.len_at(3), 4); // next epoch
+        for epoch in 0..3 {
+            let mut seen: Vec<usize> = (0..3)
+                .flat_map(|slot| s.rows_at(epoch * 3 + slot))
+                .collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..10).collect::<Vec<_>>(), "epoch {epoch} not a permutation");
+        }
+        // different epochs → different order (overwhelmingly)
+        assert_ne!(
+            (0..3).flat_map(|s_| s.rows_at(s_)).collect::<Vec<_>>(),
+            (0..3).flat_map(|s_| s.rows_at(3 + s_)).collect::<Vec<_>>()
+        );
+        // "all parties derive the identical permutation": the schedule is
+        // a pure function of shared config
+        let other_party = BatchSchedule::new(10, Some(4), true, 7);
+        for t in 0..9 {
+            assert_eq!(s.rows_at(t), other_party.rows_at(t));
+        }
+        // but a different run seed reshuffles
+        let other_run = BatchSchedule::new(10, Some(4), true, 8);
+        assert_ne!(
+            (0..3).flat_map(|t| s.rows_at(t)).collect::<Vec<_>>(),
+            (0..3).flat_map(|t| other_run.rows_at(t)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn triple_demand_matches_protocol_structure() {
+        // mul count per iteration: P2 chains (k−1 each) + yexp + P4
+        assert_eq!(triple_deals_per_iter(GlmKind::Logistic, 3), 2);
+        assert_eq!(triple_deals_per_iter(GlmKind::Linear, 3), 1);
+        assert_eq!(triple_deals_per_iter(GlmKind::Poisson, 2), 2);
+        assert_eq!(triple_deals_per_iter(GlmKind::Poisson, 4), 4);
+        assert_eq!(triple_deals_per_iter(GlmKind::Gamma, 3), 3);
+        assert_eq!(triple_deals_per_iter(GlmKind::Tweedie, 3), 5);
+    }
+
+    #[test]
+    fn plane_packs_replay_inline_dealing() {
+        use crate::mpc::ring;
+        // a 3-party LR run, CPs fixed (0,1): the plane's packs must make
+        // the CPs' triple streams identical to serial reseed_dealer use
+        let pks: Vec<Arc<PublicKey>> = Vec::new(); // no pools in this test
+        let spec = |me: usize| PlaneSpec {
+            me,
+            n_parties: 3,
+            kind: GlmKind::Logistic,
+            run_seed: 42,
+            cp_selection: CpSelection::Fixed,
+            start_iter: 0,
+            iterations: 4,
+            schedule: BatchSchedule::new(9, Some(4), true, 42),
+            sizing: PoolSizing::Own { features: 2 },
+            pks: pks.clone(),
+            packing: PackingPolicy::Auto,
+            depth: 2,
+        };
+        let plane = OfflinePlane::spawn(spec(0));
+        for t in 0..4 {
+            let pack = plane.take(t).expect("plane alive");
+            let mut pooled = pack.into_source();
+            let mut inline = TripleSource::inline(iter_dealer_seed(42, t));
+            let m_t = BatchSchedule::new(9, Some(4), true, 42).len_at(t);
+            for _ in 0..triple_deals_per_iter(GlmKind::Logistic, 3) {
+                let (p0, p1) = pooled.deal(m_t);
+                let (i0, i1) = inline.deal(m_t);
+                assert_eq!(p0.a, i0.a);
+                assert_eq!(p0.c, i0.c);
+                assert_eq!(ring::add_vec(&p0.b, &p1.b), ring::add_vec(&i0.b, &i1.b));
+            }
+            // an extra unpredicted deal still matches (carried dealer)
+            let (e0, _) = pooled.deal(m_t);
+            let (f0, _) = inline.deal(m_t);
+            assert_eq!(e0.a, f0.a);
+        }
+        // non-CP plane produces empty triple queues
+        let bystander = OfflinePlane::spawn(spec(2));
+        let pack = bystander.take(0).unwrap();
+        assert!(pack.triples.is_empty());
+    }
+
+    #[test]
+    fn plane_stops_when_handle_dropped_early() {
+        let spec = PlaneSpec {
+            me: 0,
+            n_parties: 2,
+            kind: GlmKind::Logistic,
+            run_seed: 5,
+            cp_selection: CpSelection::Fixed,
+            start_iter: 0,
+            iterations: 10_000, // far more than we consume
+            schedule: BatchSchedule::new(64, Some(16), true, 5),
+            sizing: PoolSizing::Own { features: 4 },
+            pks: Vec::new(),
+            packing: PackingPolicy::Auto,
+            depth: 2,
+        };
+        let plane = OfflinePlane::spawn(spec);
+        let _ = plane.take(0);
+        drop(plane); // must join without producing 10k packs
+    }
+}

@@ -150,6 +150,69 @@ fn mini_batch_training_learns() {
 }
 
 #[test]
+fn shuffled_schedule_agrees_across_parties_and_reruns() {
+    use efmvfl::protocols::plane::BatchSchedule;
+    // every party builds the schedule from shared config only — two
+    // independently constructed instances (one per "party") must gather
+    // identical rows each iteration, and each epoch must partition the
+    // dataset
+    let party_a = BatchSchedule::new(600, Some(128), true, 11);
+    let party_b = BatchSchedule::new(600, Some(128), true, 11);
+    let per_epoch = party_a.batches_per_epoch();
+    assert_eq!(per_epoch, 5);
+    for t in 0..3 * per_epoch {
+        assert_eq!(party_a.rows_at(t), party_b.rows_at(t), "parties disagree at t={t}");
+    }
+    let mut epoch0: Vec<usize> = (0..per_epoch).flat_map(|s| party_a.rows_at(s)).collect();
+    epoch0.sort_unstable();
+    assert_eq!(epoch0, (0..600).collect::<Vec<_>>());
+
+    // end to end: a shuffled mini-batch run is a pure function of the
+    // seed (bit-identical on rerun), and the seed actually matters
+    let mut data = synthetic::blobs(240, 5);
+    data.standardize();
+    let split = split_vertical(&data, 2);
+    let cfg = lr_config().with_batch(Some(64)).with_iterations(6);
+    let a = train(&split, &cfg).expect("train");
+    let b = train(&split, &cfg).expect("train rerun");
+    assert_eq!(a.losses, b.losses, "shuffled run not reproducible");
+    assert_eq!(a.weights, b.weights);
+    let other = train(&split, &cfg.clone().with_seed(12)).expect("train reseeded");
+    assert_ne!(a.losses, other.losses, "reseeding did not reshuffle");
+}
+
+#[test]
+fn shuffled_mini_batch_lr_matches_central_loss_band() {
+    let mut data = synthetic::blobs(600, 5);
+    data.standardize();
+    let split = split_vertical(&data, 2);
+
+    // 128-row batches over 600 rows -> 5 batches/epoch; 20 iterations =
+    // 4 epochs of seed-agreed shuffled SGD (shuffle defaults on)
+    let cfg = lr_config().with_batch(Some(128)).with_iterations(20);
+    let rep = train(&split, &cfg).expect("train");
+    let central = train_central(&data.x, &data.y, GlmKind::Logistic, 0.15, 20);
+
+    // converges into the same loss band as centralized full-batch GD:
+    // batch losses are sampled on 128 rows, so average the tail to
+    // smooth the mini-batch noise before comparing
+    let tail: f64 = rep.losses[17..].iter().sum::<f64>() / 3.0;
+    let central_final = *central.losses.last().unwrap();
+    assert!(
+        (tail - central_final).abs() < 0.15,
+        "shuffled SGD tail loss {tail:.4} left central's band ({central_final:.4})"
+    );
+    assert!(
+        rep.losses.last().unwrap() < rep.losses.first().unwrap(),
+        "loss did not improve: {:?}",
+        rep.losses
+    );
+    // and the model itself is good on the full dataset
+    let wx = linalg::gemv(&data.x, &rep.full_weights());
+    assert!(metrics::auc(&data.y, &wx) > 0.9);
+}
+
+#[test]
 fn report_accounting_sane() {
     let mut data = synthetic::blobs(128, 6);
     data.standardize();

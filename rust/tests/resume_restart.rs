@@ -1,0 +1,139 @@
+//! Checkpoint/resume acceptance: a 3-party LR training over real
+//! loopback TCP sockets, stopped mid-epoch with `.efmc` checkpoints on
+//! disk, then resumed to the full iteration budget — the final weights
+//! and the loss curve must be bit-identical to one uninterrupted run.
+//!
+//! The interrupted run ends exactly at a checkpoint boundary (its
+//! iteration budget is a multiple of `checkpoint_every`), which is the
+//! state a killed process leaves behind: the shards on disk are the only
+//! thing the resumed run may read. Mid-epoch matters — with 3 batches
+//! per epoch and the cut at iteration 4, the resumed run must re-derive
+//! epoch 1's permutation and continue at batch 1 of 3, not restart the
+//! epoch.
+
+use efmvfl::coordinator::{distributed, train, TrainConfig};
+use efmvfl::data::{split_vertical, synthetic};
+use efmvfl::net::tcp::{bind_ephemeral_roster, connect_mesh_with_listener};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("efmvfl_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create checkpoint dir");
+    dir
+}
+
+/// One full distributed run over loopback TCP: every party on its own
+/// thread with its own transport, as in `tests/tcp_transport.rs`.
+fn run_distributed(
+    split: &efmvfl::data::VerticalSplit,
+    cfg: &TrainConfig,
+) -> Vec<distributed::PartyReport> {
+    let n = split.n_parties();
+    let (roster, listeners) = bind_ephemeral_roster(n).expect("ephemeral loopback roster");
+    let mut handles = Vec::with_capacity(n);
+    for (p, listener) in listeners.into_iter().enumerate() {
+        let roster = roster.clone();
+        let cfg = cfg.clone();
+        let x = split.party_block(p).clone();
+        let y = (p == 0).then(|| split.y.clone());
+        handles.push(std::thread::spawn(move || {
+            let transport =
+                connect_mesh_with_listener(&roster, p, listener, Duration::from_secs(30))
+                    .expect("mesh bootstrap");
+            distributed::train_party(transport, x, y, &cfg).expect("distributed train")
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+#[test]
+fn interrupted_tcp_run_resumes_bit_identical() {
+    let n = 3;
+    let mut data = synthetic::credit_default_like(96, 9, 42);
+    data.standardize();
+    let split = split_vertical(&data, n);
+    // 96 rows / batch 32 -> 3 batches per epoch; the cut at iteration 4
+    // lands mid-epoch (epoch 1, batch 1 of 3)
+    let base = TrainConfig::logistic(n)
+        .with_key_bits(256)
+        .with_iterations(8)
+        .with_batch(Some(32))
+        .with_seed(17);
+
+    // the uninterrupted reference (in-process mesh: also spans the
+    // in-proc/distributed bit-compatibility contract)
+    let uninterrupted = train(&split, &base).expect("uninterrupted train");
+
+    let dir = ckpt_dir("resume");
+    let dir_s = dir.to_str().expect("utf-8 temp path");
+
+    // phase 1: run to iteration 4 with checkpoints every 2 iterations —
+    // the surviving state is exactly what a kill at t=4 leaves on disk
+    let phase1 = base.clone().with_iterations(4).with_checkpoints(dir_s, 2);
+    let reports = run_distributed(&split, &phase1);
+    assert_eq!(reports[0].losses.len(), 4);
+    for p in 0..n {
+        assert!(
+            dir.join(format!("party{p}.efmc")).exists(),
+            "party {p} checkpoint missing after phase 1"
+        );
+    }
+
+    // phase 2: resume from the shards and run out the full budget
+    let phase2 = base.clone().with_checkpoints(dir_s, 2).with_resume(true);
+    let resumed = run_distributed(&split, &phase2);
+
+    for (p, rep) in resumed.iter().enumerate() {
+        assert_eq!(rep.party_id, p);
+        for (j, (wa, wb)) in rep.weights.iter().zip(&uninterrupted.weights[p]).enumerate() {
+            assert_eq!(
+                wa.to_bits(),
+                wb.to_bits(),
+                "party {p} weight[{j}] differs: resumed {wa} vs uninterrupted {wb}"
+            );
+        }
+    }
+    // the resumed loss curve carries the pre-interrupt prefix and must
+    // match the uninterrupted curve bit for bit, all 8 entries
+    assert_eq!(resumed[0].losses.len(), 8);
+    for (t, (la, lb)) in resumed[0].losses.iter().zip(&uninterrupted.losses).enumerate() {
+        assert_eq!(
+            la.to_bits(),
+            lb.to_bits(),
+            "loss[{t}] differs: resumed {la} vs uninterrupted {lb}"
+        );
+    }
+    assert_eq!(resumed[0].iterations_run, uninterrupted.iterations_run);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_rejects_mismatched_run_config() {
+    let n = 3;
+    let mut data = synthetic::credit_default_like(60, 6, 5);
+    data.standardize();
+    let split = split_vertical(&data, n);
+    let dir = ckpt_dir("resume_mismatch");
+    let dir_s = dir.to_str().expect("utf-8 temp path");
+
+    let base = TrainConfig::logistic(n)
+        .with_key_bits(256)
+        .with_iterations(2)
+        .with_batch(Some(20))
+        .with_seed(9)
+        .with_checkpoints(dir_s, 1);
+    train(&split, &base).expect("phase 1 train");
+
+    // a different seed reshuffles every epoch: resuming under it would
+    // silently train a different trajectory, so it must be refused
+    let wrong = base.clone().with_seed(10).with_resume(true);
+    let err = train(&split, &wrong).expect_err("seed mismatch must fail");
+    assert!(
+        format!("{err:#}").contains("seed"),
+        "unexpected resume error: {err:#}"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
