@@ -6,7 +6,10 @@
 //! MPC share ops, and native-vs-PJRT dense math.
 //! Run with `cargo bench --bench micro`.
 
-use efmvfl::benchkit::{bench_out_dir, fmt_secs, print_table, time_fn, write_json, Json};
+use efmvfl::benchkit::{
+    bench_out_dir, cost_split_json, fmt_secs, gate_json, print_table, time_fn, write_json, Json,
+};
+use efmvfl::bignum::modular::perf as mont_perf;
 use efmvfl::bignum::{BigUint, Montgomery, PowTable};
 use efmvfl::crypto::fixed::PackLayout;
 use efmvfl::crypto::he_ops;
@@ -42,6 +45,100 @@ fn main() {
             std::hint::black_box(table.pow_u64(0xfffff));
         });
         add(&format!("modpow {bits}b 20-bit exp (table)"), t, "Protocol 3 exponent size");
+    }
+
+    // ---- bignum: dedicated SOS squaring vs CIOS multiply (§Perf) ----
+    // The 4-bit-window ladder does ~4 squarings per window multiply, so
+    // the 3k²-vs-4k² limb-product gap compounds through every modexp.
+    let sqr_mul_json;
+    {
+        let mut entries = Vec::new();
+        for bits in [1024usize, 2048, 4096] {
+            let mut ml: Vec<u64> = (0..bits / 64).map(|_| rng.next_u64()).collect();
+            ml[0] |= 1;
+            let m = BigUint::from_limbs(ml);
+            let mont = Montgomery::new(&m);
+            let a = mont.enter_mont(&rng.next_biguint_below(&m));
+            let (t_mul, _) = time_fn(0.3, 400, || {
+                std::hint::black_box(mont.mul_mont(&a, &a));
+            });
+            let (t_sqr, _) = time_fn(0.3, 400, || {
+                std::hint::black_box(mont.mont_sqr_raw(&a));
+            });
+            let k = mont.limb_count();
+            let modeled = mont_perf::sqr_work(k) as f64 / mont_perf::mul_work(k) as f64;
+            add(
+                &format!("mont_sqr {bits}b"),
+                t_sqr,
+                &format!("{:.2}x of mul (model {modeled:.2})", t_sqr / t_mul),
+            );
+            entries.push(Json::obj(vec![
+                ("bits", Json::Int(bits as u64)),
+                ("mul_secs", Json::Num(t_mul)),
+                ("sqr_secs", Json::Num(t_sqr)),
+                ("measured_ratio", Json::Num(t_sqr / t_mul)),
+                ("modeled_ratio", Json::Num(modeled)),
+            ]));
+        }
+        sqr_mul_json = Json::Arr(entries);
+    }
+
+    // ---- bignum: interleaved multi-exponentiation vs per-term pows ----
+    // Straus/Shamir shares one squaring ladder across all bases; the
+    // win over independent pows grows with the number of riding terms.
+    let interleave_json;
+    {
+        let bits = 2048usize;
+        let mut ml: Vec<u64> = (0..bits / 64).map(|_| rng.next_u64()).collect();
+        ml[0] |= 1;
+        let m = BigUint::from_limbs(ml);
+        let mont = Montgomery::new(&m);
+        let mut entries = Vec::new();
+        for terms in [4usize, 32] {
+            let bases: Vec<BigUint> =
+                (0..terms).map(|_| rng.next_biguint_below(&m)).collect();
+            let exps: Vec<BigUint> =
+                (0..terms).map(|_| rng.next_biguint_exact_bits(20)).collect();
+            let per_term = |bases: &[BigUint], exps: &[BigUint]| {
+                let mut acc = BigUint::one();
+                for (b, e) in bases.iter().zip(exps) {
+                    acc = acc.mul_mod(&mont.pow(b, e), &m);
+                }
+                acc
+            };
+            // deterministic op counts: one evaluation of each strategy
+            mont_perf::reset();
+            let got = mont.multi_pow(&bases, &exps);
+            let c_inter = mont_perf::snapshot();
+            mont_perf::reset();
+            let want = per_term(&bases, &exps);
+            let c_per = mont_perf::snapshot();
+            assert_eq!(got, want, "multi_pow disagrees with per-term product");
+            let (t_inter, _) = time_fn(0.4, 100, || {
+                std::hint::black_box(mont.multi_pow(&bases, &exps));
+            });
+            let (t_per, _) = time_fn(0.4, 100, || {
+                std::hint::black_box(per_term(&bases, &exps));
+            });
+            add(
+                &format!("multi_pow {terms}×20-bit ({bits}b)"),
+                t_inter,
+                &format!("{:.2}x vs per-term pows", t_per / t_inter),
+            );
+            entries.push(Json::obj(vec![
+                ("terms", Json::Int(terms as u64)),
+                ("exp_bits", Json::Int(20)),
+                ("interleaved_secs", Json::Num(t_inter)),
+                ("per_term_secs", Json::Num(t_per)),
+                ("interleaved_cost", cost_split_json(&c_inter)),
+                ("per_term_cost", cost_split_json(&c_per)),
+                (
+                    "work_ratio_per_term_over_interleaved",
+                    Json::Num(c_per.work as f64 / c_inter.work as f64),
+                ),
+            ]));
+        }
+        interleave_json = Json::Arr(entries);
     }
 
     // ---- Paillier ----
@@ -151,13 +248,16 @@ fn main() {
         let cts_plain = he_ops::encrypt_share_vec(&kp.pk, &share, &mut rng);
         let cts_packed = he_ops::pack_encrypt_vec(&kp.pk, &share, &layout, &mut rng);
 
-        // logical ciphertext exponentiations per matvec (counted once)
+        // logical ciphertext exponentiations and the Montgomery cost
+        // split per matvec (counted once; perf::reset clears both)
         he_ops::perf::reset();
         std::hint::black_box(he_ops::he_matvec_t_threads(&kp.pk, &cts_plain, &x, 1));
         let exps_plain = he_ops::perf::ct_exps();
+        let cost_plain = mont_perf::snapshot();
         he_ops::perf::reset();
         std::hint::black_box(he_ops::packed_matvec_t_threads(&kp.pk, &cts_packed, &x, &layout, 1));
         let exps_packed = he_ops::perf::ct_exps();
+        let cost_packed = mont_perf::snapshot();
         he_ops::perf::reset();
 
         let (t_mv_plain, _) = time_fn(5.0, runs, || {
@@ -234,6 +334,7 @@ fn main() {
                 ("fanout_bytes", Json::Int(fanout_plain)),
                 ("encrypt_secs", Json::Num(t_enc_plain)),
                 ("matvec_secs", Json::Num(t_mv_plain)),
+                ("cost_split", cost_split_json(&cost_plain)),
             ])),
             ("packed", Json::obj(vec![
                 ("ct_exps", Json::Int(exps_packed)),
@@ -242,12 +343,14 @@ fn main() {
                 ("matvec_secs", Json::Num(t_mv_packed)),
                 ("matvec_threaded_secs", Json::Num(t_mv_packed_par)),
                 ("threads", Json::Int(threads as u64)),
+                ("cost_split", cost_split_json(&cost_packed)),
             ])),
             ("ratios", Json::obj(vec![
                 ("ct_exps", Json::Num(exps_plain as f64 / exps_packed as f64)),
                 ("fanout_bytes", Json::Num(fanout_plain as f64 / fanout_packed as f64)),
                 ("encrypt_secs", Json::Num(t_enc_plain / t_enc_packed)),
                 ("serial_over_threaded", Json::Num(t_mv_packed / t_mv_packed_par)),
+                ("modexp_work", Json::Num(cost_plain.work as f64 / cost_packed.work as f64)),
             ])),
         ]);
         // the acceptance floor holds at full scale (fast mode's narrower
@@ -260,6 +363,15 @@ fn main() {
         assert!(
             fanout_plain as f64 / fanout_packed as f64 >= floor,
             "fanout byte ratio below {floor}"
+        );
+        // SOS squaring + the fused signed ladder must price the packed
+        // matvec well under the all-multiplies dual-ladder baseline
+        assert!(
+            (cost_packed.work as f64) <= 0.85 * cost_packed.baseline_work as f64,
+            "packed matvec modeled work/baseline above 0.85 \
+             ({} / {})",
+            cost_packed.work,
+            cost_packed.baseline_work,
         );
     }
 
@@ -303,7 +415,36 @@ fn main() {
     println!();
     print_table(&["operation", "median", "note"], &rows);
 
+    // Compose the persisted report: the packing section plus the new
+    // squaring/interleaving sections and the CI regression gates.
+    // Gate bounds are fast-scale (1024b/m=128) deterministic counters
+    // with ~2% slack — scripts/check_bench_regression.py applies them
+    // to the EFMVFL_BENCH_FAST=1 rerun in the perf-trajectory job.
+    let micro_json = match packing_json {
+        Json::Obj(mut fields) => {
+            fields.push(("sqr_vs_mul".to_string(), sqr_mul_json));
+            fields.push(("interleaved_vs_per_term".to_string(), interleave_json));
+            fields.push((
+                "ci_gates".to_string(),
+                Json::Arr(vec![
+                    gate_json("unpacked.ct_exps", None, Some(2089.0)),
+                    gate_json("packed.ct_exps", None, Some(702.0)),
+                    gate_json("ratios.ct_exps", Some(2.9), None),
+                    gate_json("ratios.fanout_bytes", Some(2.39), None),
+                    gate_json("packed.cost_split.work_over_baseline", None, Some(0.85)),
+                    gate_json("sqr_vs_mul.0.modeled_ratio", None, Some(0.76)),
+                    gate_json(
+                        "interleaved_vs_per_term.1.work_ratio_per_term_over_interleaved",
+                        Some(1.2),
+                        None,
+                    ),
+                ]),
+            ));
+            Json::Obj(fields)
+        }
+        other => other,
+    };
     let out = bench_out_dir().join("BENCH_micro.json");
-    write_json(&out, &packing_json).expect("write BENCH_micro.json");
+    write_json(&out, &micro_json).expect("write BENCH_micro.json");
     println!("wrote {}", out.display());
 }

@@ -19,7 +19,10 @@
 //! Run with `cargo bench --bench train`; `EFMVFL_BENCH_FAST=1` shrinks
 //! the key/batch for CI smoke runs.
 
-use efmvfl::benchkit::{bench_out_dir, fmt_secs, print_table, write_json, Json};
+use efmvfl::benchkit::{
+    bench_out_dir, cost_split_json, fmt_secs, gate_json, print_table, write_json, Json,
+};
+use efmvfl::bignum::modular::perf as mont_perf;
 use efmvfl::coordinator::testutil::mesh_ctxs_keyed;
 use efmvfl::coordinator::{train, TrainConfig};
 use efmvfl::crypto::fixed::PackLayout;
@@ -43,6 +46,18 @@ struct ArmOut {
     /// Online obfuscator exponentiations per round: the full demand when
     /// the pools are cold, zero when the plane prefilled them.
     online_obf_exps: usize,
+    /// Montgomery cost split over the timed (online) regions only —
+    /// prefill runs outside the counters, like it runs outside the timer.
+    online_cost: mont_perf::Snapshot,
+}
+
+/// Accumulate a per-round counter delta into an arm total.
+fn acc(total: &mut mont_perf::Snapshot, d: &mont_perf::Snapshot) {
+    total.sqrs += d.sqrs;
+    total.muls += d.muls;
+    total.allocs += d.allocs;
+    total.work += d.work;
+    total.baseline_work += d.baseline_work;
 }
 
 /// `ROUNDS` full Protocol 3 rounds on fresh keys/shares; with `prefill`,
@@ -72,6 +87,7 @@ fn run_arm(prefill: bool, key_bits: usize, m: usize, f: usize, seed: u64) -> Arm
     let mut obf_rng = ChaChaRng::from_seed(seed.wrapping_add(7000));
 
     let mut wall = 0.0;
+    let mut online_cost = mont_perf::Snapshot::default();
     let mut grads: Vec<Vec<f64>> = Vec::new();
     for round in 0..ROUNDS {
         if prefill {
@@ -79,6 +95,7 @@ fn run_arm(prefill: bool, key_bits: usize, m: usize, f: usize, seed: u64) -> Arm
                 pks[owner].refill_pool(count, &mut obf_rng);
             }
         }
+        let before = mont_perf::snapshot();
         let started = Instant::now();
         let round_grads: Vec<Vec<f64>> = thread::scope(|s| {
             let handles: Vec<_> = ctxs
@@ -97,6 +114,7 @@ fn run_arm(prefill: bool, key_bits: usize, m: usize, f: usize, seed: u64) -> Arm
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         });
         wall += started.elapsed().as_secs_f64();
+        acc(&mut online_cost, &mont_perf::snapshot().delta_since(&before));
         if prefill {
             // the demand model must match the round's draws exactly —
             // a leftover means the plane over-generates (wasted offline
@@ -117,6 +135,7 @@ fn run_arm(prefill: bool, key_bits: usize, m: usize, f: usize, seed: u64) -> Arm
         grads,
         wall_secs_per_iter: wall / ROUNDS as f64,
         online_obf_exps: if prefill { 0 } else { demand_total },
+        online_cost,
     }
 }
 
@@ -194,6 +213,7 @@ fn main() -> anyhow::Result<()> {
         Json::obj(vec![
             ("wall_secs_per_iter", Json::Num(a.wall_secs_per_iter)),
             ("online_obfuscator_exps", Json::Int(a.online_obf_exps as u64)),
+            ("online_cost_split", cost_split_json(&a.online_cost)),
         ])
     };
     let report = Json::obj(vec![
@@ -214,9 +234,28 @@ fn main() -> anyhow::Result<()> {
         ])),
         ("serial", side(&serial)),
         ("pipelined", side(&pipelined)),
-        ("ratios", Json::obj(vec![("wall", Json::Num(wall_ratio))])),
+        ("ratios", Json::obj(vec![
+            ("wall", Json::Num(wall_ratio)),
+            ("online_modexp_work", Json::Num(
+                pipelined.online_cost.work as f64 / serial.online_cost.work as f64,
+            )),
+        ])),
         ("gradients_bit_identical", Json::Bool(true)),
         ("train_parity_bit_identical", Json::Bool(true)),
+        // Regression gates for the EFMVFL_BENCH_FAST=1 CI rerun
+        // (1024b/m=128 deterministic counters with ~2% slack); applied
+        // by scripts/check_bench_regression.py in perf-trajectory.
+        ("ci_gates", Json::Arr(vec![
+            gate_json("serial.online_obfuscator_exps", None, Some(153.0)),
+            gate_json("pipelined.online_obfuscator_exps", None, Some(0.0)),
+            gate_json(
+                "pipelined.online_cost_split.work_over_baseline",
+                None,
+                Some(0.85),
+            ),
+            gate_json("gradients_bit_identical", Some(1.0), None),
+            gate_json("train_parity_bit_identical", Some(1.0), None),
+        ])),
     ]);
     let out = bench_out_dir().join("BENCH_train.json");
     write_json(&out, &report).expect("write BENCH_train.json");

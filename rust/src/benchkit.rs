@@ -132,6 +132,43 @@ pub fn write_json(path: &std::path::Path, value: &Json) -> std::io::Result<()> {
     std::fs::write(path, s)
 }
 
+/// JSON view of a Montgomery cost-split snapshot (normally a
+/// [`delta_since`](crate::bignum::modular::perf::Snapshot::delta_since)
+/// over a measured region): raw op counts plus the modeled work split —
+/// squarings priced at `3k²` limb products, multiplies at `4k²` —
+/// against the all-multiplies single-ladder baseline engine.
+pub fn cost_split_json(c: &crate::bignum::modular::perf::Snapshot) -> Json {
+    let ratio = if c.baseline_work > 0 {
+        c.work as f64 / c.baseline_work as f64
+    } else {
+        f64::NAN // renders as null: nothing ran in the region
+    };
+    Json::obj(vec![
+        ("mont_sqrs", Json::Int(c.sqrs)),
+        ("mont_muls", Json::Int(c.muls)),
+        ("allocs", Json::Int(c.allocs)),
+        ("work", Json::Int(c.work)),
+        ("baseline_work", Json::Int(c.baseline_work)),
+        ("work_over_baseline", Json::Num(ratio)),
+    ])
+}
+
+/// One CI regression gate: a dotted `path` into the report (array
+/// indices as bare numbers, e.g. `"sqr_vs_mul.0.modeled_ratio"`) plus
+/// an optional `min` and/or `max` bound. `scripts/check_bench_regression.py`
+/// applies the committed gates to the fast-mode rerun in CI, so gate
+/// values must be bounds that hold at `EFMVFL_BENCH_FAST=1` scale.
+pub fn gate_json(path: &str, min: Option<f64>, max: Option<f64>) -> Json {
+    let mut pairs = vec![("path", Json::str(path))];
+    if let Some(v) = min {
+        pairs.push(("min", Json::Num(v)));
+    }
+    if let Some(v) = max {
+        pairs.push(("max", Json::Num(v)));
+    }
+    Json::obj(pairs)
+}
+
 /// Directory for `BENCH_*.json` reports: `$EFMVFL_BENCH_OUT` if set,
 /// else the repository root (one above the crate manifest) — where the
 /// committed perf-trajectory files live, so a real bench run refreshes

@@ -6,8 +6,9 @@
 //!
 //! - [`BigUint`]: little-endian `u64` limbs; schoolbook + Karatsuba
 //!   multiplication, Knuth Algorithm D division.
-//! - [`modular`]: modular exponentiation (Montgomery CIOS with 4-bit fixed
-//!   windows), modular inverse (binary extended gcd).
+//! - [`modular`]: modular exponentiation (Montgomery CIOS multiply + SOS
+//!   squaring with 4-bit fixed windows, interleaved multi-exponentiation,
+//!   deterministic cost-split counters), modular inverse (extended gcd).
 //! - [`prime`]: Miller-Rabin probable-prime testing and random prime
 //!   generation for Paillier keygen.
 
@@ -16,4 +17,4 @@ pub mod modular;
 pub mod prime;
 
 pub use biguint::BigUint;
-pub use modular::{Montgomery, PowTable};
+pub use modular::{MontScratch, Montgomery, PowTable, SignedTables};

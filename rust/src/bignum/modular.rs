@@ -1,13 +1,184 @@
-//! Modular arithmetic: Montgomery multiplication/exponentiation and
-//! modular inverse.
+//! Modular arithmetic: Montgomery multiplication/squaring/exponentiation
+//! and modular inverse.
 //!
 //! Paillier's hot operation is `r^n mod n²` with a 2048-bit modulus; a
 //! CIOS Montgomery multiplier with 4-bit fixed-window exponentiation is
 //! ~10× faster than naive square-and-mod and is the single most important
 //! optimization in the crypto substrate (see EXPERIMENTS.md §Perf).
+//!
+//! On top of the CIOS multiply the engine has (see rust/README.md
+//! §Performance for the cost model):
+//!
+//! - a dedicated **SOS squaring** ([`Montgomery::mont_sqr_raw`]) that
+//!   computes the off-diagonal triangle once and doubles it — ~half the
+//!   limb products of a general multiply — used for every ladder
+//!   squaring (a 4-bit window ladder is ~4 squarings per multiply);
+//! - **interleaved multi-exponentiation** ([`Montgomery::multi_pow_mont`],
+//!   Straus/Shamir): one shared squaring ladder serves every base of a
+//!   product `Π bᵢ^eᵢ`, so k-term accumulations pay the ladder once;
+//! - **allocation-free hot loops**: `*_into`/`*_in_place`/`*_assign`
+//!   variants write into caller-owned buffers and a [`MontScratch`]
+//!   accumulator is reused across matvec outputs, so the inner loops of
+//!   Protocol 3 never touch the heap;
+//! - deterministic [`perf`] counters splitting the cost into squarings,
+//!   multiplies and allocations, with a modeled limb-work total that the
+//!   `BENCH_*.json` trajectory tracks machine-independently.
 
 use super::BigUint;
 use std::cmp::Ordering;
+
+/// Limb ceiling for the stack buffers: 4096-bit moduli (2048-bit
+/// Paillier keys work mod `n²`).
+const MAX_LIMBS: usize = 64;
+
+/// Deterministic cost-split counters for the Montgomery engine.
+///
+/// Relaxed atomics record every Montgomery squaring and multiplication
+/// (with a limb-weighted `work` model) plus engine heap allocations, and
+/// `baseline_work` models what the pre-squaring engine — squarings
+/// priced as multiplies, one ladder per accumulator sign — would have
+/// spent on the same operation stream. The benches read [`snapshot`]
+/// deltas around each phase, so the win is visible deterministically,
+/// independent of wall clock and thread count.
+///
+/// The work unit is one 64×64→128 limb product with its carry chain: a
+/// k-limb CIOS multiply is modeled at `4k²` (k² products for `a·b`, k²
+/// for the reduction, ×2 for the add/carry traffic), a k-limb SOS
+/// squaring at `3k²` (the product half drops to ~k²/2). Modular
+/// inversions and window-table sharing are left unmodeled on both sides
+/// of the ratio.
+pub mod perf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static SQRS: AtomicU64 = AtomicU64::new(0);
+    static MULS: AtomicU64 = AtomicU64::new(0);
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+    static WORK: AtomicU64 = AtomicU64::new(0);
+    static BASELINE_WORK: AtomicU64 = AtomicU64::new(0);
+
+    /// Modeled limb-work of one `k`-limb Montgomery multiplication.
+    pub fn mul_work(k: usize) -> u64 {
+        4 * (k * k) as u64
+    }
+
+    /// Modeled limb-work of one `k`-limb Montgomery squaring.
+    pub fn sqr_work(k: usize) -> u64 {
+        3 * (k * k) as u64
+    }
+
+    pub(super) fn add_mul(k: usize) {
+        MULS.fetch_add(1, Ordering::Relaxed);
+        WORK.fetch_add(mul_work(k), Ordering::Relaxed);
+        BASELINE_WORK.fetch_add(mul_work(k), Ordering::Relaxed);
+    }
+
+    pub(super) fn add_sqr(k: usize) {
+        SQRS.fetch_add(1, Ordering::Relaxed);
+        WORK.fetch_add(sqr_work(k), Ordering::Relaxed);
+        // the baseline engine had no dedicated squaring
+        BASELINE_WORK.fetch_add(mul_work(k), Ordering::Relaxed);
+    }
+
+    pub(super) fn add_alloc() {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Charge the baseline model for `count` `k`-limb ladder squarings
+    /// the fused signed ladder did **not** run. Callers invoke this when
+    /// one shared squaring chain served both the positive and negative
+    /// accumulator of a signed multi-exponentiation — the pre-fusion
+    /// engine ran a second chain of (approximately) the same length.
+    /// This is a model, not a count: it assumes both signs activate near
+    /// the top of the ladder, which holds to within a few percent for
+    /// the dense random exponents of the HE matvec.
+    pub fn add_baseline_ladder_sqrs(count: u64, k: usize) {
+        if count > 0 {
+            BASELINE_WORK.fetch_add(count * mul_work(k), Ordering::Relaxed);
+        }
+    }
+
+    /// Point-in-time counter values; subtract two snapshots
+    /// ([`Snapshot::delta_since`]) to get one phase's cost split.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct Snapshot {
+        /// Montgomery squarings (SOS).
+        pub sqrs: u64,
+        /// Montgomery multiplications (CIOS).
+        pub muls: u64,
+        /// Engine heap allocations (table builds, domain conversions;
+        /// the ladders themselves are allocation-free).
+        pub allocs: u64,
+        /// Modeled limb-work actually spent (see module docs).
+        pub work: u64,
+        /// Modeled limb-work the pre-overhaul engine would have spent on
+        /// the same operation stream.
+        pub baseline_work: u64,
+    }
+
+    impl Snapshot {
+        /// Counter deltas since `earlier`.
+        pub fn delta_since(&self, earlier: &Snapshot) -> Snapshot {
+            Snapshot {
+                sqrs: self.sqrs - earlier.sqrs,
+                muls: self.muls - earlier.muls,
+                allocs: self.allocs - earlier.allocs,
+                work: self.work - earlier.work,
+                baseline_work: self.baseline_work - earlier.baseline_work,
+            }
+        }
+
+        /// `work` expressed in reference-modexp units (see [`unit_work`]).
+        pub fn modexp_units(&self, exp_bits: usize, k: usize) -> f64 {
+            self.work as f64 / unit_work(exp_bits, k)
+        }
+
+        /// `baseline_work` in the same reference-modexp units.
+        pub fn baseline_modexp_units(&self, exp_bits: usize, k: usize) -> f64 {
+            self.baseline_work as f64 / unit_work(exp_bits, k)
+        }
+    }
+
+    /// Current counter values.
+    pub fn snapshot() -> Snapshot {
+        Snapshot {
+            sqrs: SQRS.load(Ordering::Relaxed),
+            muls: MULS.load(Ordering::Relaxed),
+            allocs: ALLOCS.load(Ordering::Relaxed),
+            work: WORK.load(Ordering::Relaxed),
+            baseline_work: BASELINE_WORK.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero all counters (bench phase boundaries).
+    pub fn reset() {
+        SQRS.store(0, Ordering::Relaxed);
+        MULS.store(0, Ordering::Relaxed);
+        ALLOCS.store(0, Ordering::Relaxed);
+        WORK.store(0, Ordering::Relaxed);
+        BASELINE_WORK.store(0, Ordering::Relaxed);
+    }
+
+    /// Modeled baseline cost of ONE full modexp with an `exp_bits`-bit
+    /// exponent over a `k`-limb modulus: a 4-bit window ladder runs
+    /// `4·(nwin−1)` ladder ops plus `⌈15·nwin/16⌉` expected window
+    /// multiplies plus 14 table-build multiplies, all priced as
+    /// multiplies (the pre-overhaul engine had no squaring). This is the
+    /// normalizer behind the `modexp_units` BENCH fields.
+    pub fn unit_work(exp_bits: usize, k: usize) -> f64 {
+        let nwin = ((exp_bits + 3) / 4).max(1);
+        let ops = 4 * (nwin - 1) + (15 * nwin + 15) / 16 + 14;
+        ops as f64 * mul_work(k) as f64
+    }
+}
+
+/// Read 4-bit window `w` (bits `[4w, 4w+4)`) of a [`BigUint`] exponent.
+fn exp_window(e: &BigUint, w: usize) -> usize {
+    let mut idx = 0usize;
+    for b in (0..4).rev() {
+        idx = (idx << 1) | e.bit(4 * w + b) as usize;
+    }
+    idx
+}
 
 /// Montgomery context for a fixed odd modulus.
 ///
@@ -31,6 +202,7 @@ impl Montgomery {
     pub fn new(m: &BigUint) -> Self {
         assert!(m.is_odd(), "Montgomery modulus must be odd");
         let k = m.limbs().len();
+        assert!(k <= MAX_LIMBS, "modulus exceeds the {MAX_LIMBS}-limb ceiling");
         // n0_inv = -m^{-1} mod 2^64 via Newton/Hensel lifting.
         let m0 = m.limbs()[0];
         let mut inv: u64 = 1;
@@ -44,18 +216,22 @@ impl Montgomery {
         Montgomery { m: m.clone(), k, n0_inv, r2, r1 }
     }
 
-    /// CIOS Montgomery multiplication on raw limb slices:
-    /// returns `a·b·R⁻¹ mod m`. Inputs must be `< m` (k limbs, zero-padded).
+    /// Limb count of the modulus (the `k` of the perf cost model).
+    pub fn limb_count(&self) -> usize {
+        self.k
+    }
+
+    /// CIOS Montgomery multiplication core: `t[..k] = a·b·R⁻¹ mod m`.
+    /// Inputs must be `< m` (k limbs, zero-padded; shorter slices read
+    /// as zero-extended).
     ///
-    /// §Perf: works entirely in a stack buffer (moduli up to 4096 bits) —
-    /// the hot loops of Protocol 3 call this millions of times, and the
-    /// earlier BigUint-based version spent ~40 % of its time allocating.
-    fn mont_mul_raw(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
-        const MAX: usize = 64; // 4096-bit modulus ceiling (2048-bit keys)
+    /// §Perf: works entirely in the caller's stack buffer — the hot
+    /// loops of Protocol 3 run this millions of times, and the earlier
+    /// BigUint-based version spent ~40 % of its time allocating.
+    fn cios_into(&self, a: &[u64], b: &[u64], t: &mut [u64; MAX_LIMBS + 2]) {
         let k = self.k;
-        debug_assert!(k + 2 <= MAX + 2);
         let m = self.m.limbs();
-        let mut t = [0u64; MAX + 2];
+        t[..k + 2].fill(0);
         for i in 0..k {
             let ai = a.get(i).copied().unwrap_or(0);
             // t += ai * b
@@ -108,26 +284,175 @@ impl Montgomery {
             t[k] = t[k].wrapping_sub(borrow);
             debug_assert_eq!(t[k], 0);
         }
-        t[..k].to_vec()
+    }
+
+    /// SOS (separated operand scanning) Montgomery squaring core:
+    /// `t[k..2k] = a²·R⁻¹ mod m`. The off-diagonal triangle is computed
+    /// once and doubled, so the product phase costs ~k²/2 limb products
+    /// vs the k² of [`Self::cios_into`]; the k REDC passes are the same
+    /// k² — hence the `3k²` vs `4k²` of the perf cost model.
+    fn sos_sqr_into(&self, a: &[u64], t: &mut [u64; 2 * MAX_LIMBS + 2]) {
+        let k = self.k;
+        let m = self.m.limbs();
+        t[..2 * k + 2].fill(0);
+        // off-diagonal triangle: Σ_{i<j} aᵢ·aⱼ·2^(64(i+j))
+        for i in 0..k {
+            let ai = a.get(i).copied().unwrap_or(0);
+            if ai == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for j in (i + 1)..k {
+                let aj = a.get(j).copied().unwrap_or(0);
+                let cur = t[i + j] as u128 + ai as u128 * aj as u128 + carry;
+                t[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut idx = i + k;
+            let mut c = carry as u64;
+            while c != 0 {
+                let (s, o) = t[idx].overflowing_add(c);
+                t[idx] = s;
+                c = o as u64;
+                idx += 1;
+            }
+        }
+        // double the triangle (the triangle sum is < a²/2 < 2^(128k−1),
+        // so the shifted-out top bit of limb 2k−1 lands in t[2k])
+        let mut top = 0u64;
+        for limb in t.iter_mut().take(2 * k) {
+            let next_top = *limb >> 63;
+            *limb = (*limb << 1) | top;
+            top = next_top;
+        }
+        t[2 * k] = t[2 * k].wrapping_add(top);
+        // add the diagonal aᵢ² terms (two-limb adds, u128-safe)
+        let mut carry = 0u64;
+        for i in 0..k {
+            let ai = a.get(i).copied().unwrap_or(0);
+            let sq = ai as u128 * ai as u128;
+            let lo = t[2 * i] as u128 + (sq as u64) as u128 + carry as u128;
+            t[2 * i] = lo as u64;
+            let hi = t[2 * i + 1] as u128 + (sq >> 64) + (lo >> 64);
+            t[2 * i + 1] = hi as u64;
+            carry = (hi >> 64) as u64;
+        }
+        t[2 * k] = t[2 * k].wrapping_add(carry);
+        // k separated REDC passes: pass i zeroes t[i] by adding μ·m·2^(64i)
+        for i in 0..k {
+            let mu = t[i].wrapping_mul(self.n0_inv);
+            let mut carry = 0u128;
+            for (j, &mj) in m.iter().enumerate() {
+                let cur = t[i + j] as u128 + mu as u128 * mj as u128 + carry;
+                t[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut idx = i + k;
+            let mut c = carry as u64;
+            while c != 0 {
+                let (s, o) = t[idx].overflowing_add(c);
+                t[idx] = s;
+                c = o as u64;
+                idx += 1;
+            }
+        }
+        // result = t[k..2k] (+ overflow bit t[2k]) ∈ [0, 2m): one
+        // conditional subtract brings it into [0, m)
+        let ge = t[2 * k] != 0 || {
+            let mut ge = true;
+            for j in (0..k).rev() {
+                if t[k + j] != m[j] {
+                    ge = t[k + j] > m[j];
+                    break;
+                }
+            }
+            ge
+        };
+        if ge {
+            let mut borrow = 0u64;
+            for j in 0..k {
+                let (d1, b1) = t[k + j].overflowing_sub(m[j]);
+                let (d2, b2) = d1.overflowing_sub(borrow);
+                t[k + j] = d2;
+                borrow = (b1 as u64) + (b2 as u64);
+            }
+            t[2 * k] = t[2 * k].wrapping_sub(borrow);
+            debug_assert_eq!(t[2 * k], 0);
+        }
+    }
+
+    /// Allocating CIOS multiply: returns `a·b·R⁻¹ mod m` as a fresh Vec.
+    fn mont_mul_raw(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let mut t = [0u64; MAX_LIMBS + 2];
+        self.cios_into(a, b, &mut t);
+        perf::add_mul(self.k);
+        perf::add_alloc();
+        t[..self.k].to_vec()
+    }
+
+    /// Montgomery multiply into a caller-owned buffer:
+    /// `out[..k] = a·b·R⁻¹ mod m`. No heap traffic.
+    pub fn mont_mul_into(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        let mut t = [0u64; MAX_LIMBS + 2];
+        self.cios_into(a, b, &mut t);
+        out[..self.k].copy_from_slice(&t[..self.k]);
+        perf::add_mul(self.k);
+    }
+
+    /// In-place Montgomery multiply: `x ← x·b·R⁻¹ mod m` (aliasing-safe;
+    /// the product forms in a stack temporary). The accumulator step of
+    /// every exponentiation ladder.
+    pub fn mont_mul_assign(&self, x: &mut [u64], b: &[u64]) {
+        let mut t = [0u64; MAX_LIMBS + 2];
+        self.cios_into(x, b, &mut t);
+        x[..self.k].copy_from_slice(&t[..self.k]);
+        perf::add_mul(self.k);
+    }
+
+    /// Dedicated Montgomery squaring: `a²·R⁻¹ mod m` as a fresh Vec.
+    /// ~25 % cheaper than `mont_mul(a, a)` (see the perf cost model).
+    pub fn mont_sqr_raw(&self, a: &[u64]) -> Vec<u64> {
+        let mut t = [0u64; 2 * MAX_LIMBS + 2];
+        self.sos_sqr_into(a, &mut t);
+        perf::add_sqr(self.k);
+        perf::add_alloc();
+        t[self.k..2 * self.k].to_vec()
+    }
+
+    /// Montgomery squaring into a caller-owned buffer. No heap traffic.
+    pub fn mont_sqr_into(&self, a: &[u64], out: &mut [u64]) {
+        let mut t = [0u64; 2 * MAX_LIMBS + 2];
+        self.sos_sqr_into(a, &mut t);
+        out[..self.k].copy_from_slice(&t[self.k..2 * self.k]);
+        perf::add_sqr(self.k);
+    }
+
+    /// In-place Montgomery squaring: `x ← x²·R⁻¹ mod m`. The ladder
+    /// squaring step of [`Self::pow`] and [`Self::multi_pow_mont`].
+    pub fn mont_sqr_in_place(&self, x: &mut [u64]) {
+        let mut t = [0u64; 2 * MAX_LIMBS + 2];
+        self.sos_sqr_into(x, &mut t);
+        x[..self.k].copy_from_slice(&t[self.k..2 * self.k]);
+        perf::add_sqr(self.k);
     }
 
     /// Enter Montgomery form: `a·R mod m`.
     fn to_mont(&self, a: &BigUint) -> Vec<u64> {
         let mut al = a.limbs().to_vec();
         al.resize(self.k, 0);
-        let mut r2 = self.r2.limbs().to_vec();
-        r2.resize(self.k, 0);
-        self.mont_mul_raw(&al, &r2)
+        perf::add_alloc();
+        self.mont_mul_assign(&mut al, self.r2.limbs());
+        al
     }
 
     /// Leave Montgomery form: `a·R⁻¹ mod m`.
     fn from_mont(&self, a: &[u64]) -> BigUint {
-        let one = {
-            let mut v = vec![0u64; self.k];
-            v[0] = 1;
-            v
-        };
-        BigUint::from_limbs(self.mont_mul_raw(a, &one))
+        let mut one = [0u64; MAX_LIMBS];
+        one[0] = 1;
+        let mut out = vec![0u64; self.k];
+        perf::add_alloc();
+        self.mont_mul_into(a, &one[..self.k], &mut out);
+        BigUint::from_limbs(out)
     }
 
     /// `a·b mod m`.
@@ -148,7 +473,15 @@ impl Montgomery {
     pub fn one_mont(&self) -> Vec<u64> {
         let mut v = self.r1.limbs().to_vec();
         v.resize(self.k, 0);
+        perf::add_alloc();
         v
+    }
+
+    /// Write the Montgomery form of 1 into `out` (no allocation).
+    fn write_one_mont(&self, out: &mut Vec<u64>) {
+        out.clear();
+        out.extend_from_slice(self.r1.limbs());
+        out.resize(self.k, 0);
     }
 
     /// Enter Montgomery form.
@@ -166,7 +499,80 @@ impl Montgomery {
         self.mont_mul_raw(a, b)
     }
 
-    /// `base^exp mod m` with a 4-bit fixed window.
+    /// 16-entry 4-bit window table of a Montgomery-form base:
+    /// `table[i] = baseⁱ` (Montgomery form). Even entries are squarings
+    /// of earlier entries, so 7 of the 14 non-trivial builds ride the
+    /// cheaper [`Self::mont_sqr_raw`].
+    pub fn window_table_mont(&self, base_mont: &[u64]) -> Vec<Vec<u64>> {
+        let mut table: Vec<Vec<u64>> = Vec::with_capacity(16);
+        table.push(self.one_mont());
+        let mut first = base_mont.to_vec();
+        first.resize(self.k, 0);
+        perf::add_alloc();
+        table.push(first);
+        for i in 2..16 {
+            let entry = if i % 2 == 0 {
+                self.mont_sqr_raw(&table[i / 2])
+            } else {
+                self.mont_mul_raw(&table[i - 1], &table[1])
+            };
+            table.push(entry);
+        }
+        table
+    }
+
+    /// Batch inversion in the Montgomery domain (Montgomery's trick):
+    /// the inverses of all `vals` (units, Montgomery form) for the price
+    /// of **one** extended-gcd inversion plus `3(n−1)` Montgomery
+    /// multiplications. `None` if any value is not a unit mod `m`.
+    pub fn batch_inv_mont(&self, vals: &[Vec<u64>]) -> Option<Vec<Vec<u64>>> {
+        if vals.is_empty() {
+            return Some(Vec::new());
+        }
+        // prefix[i] = v₀·…·vᵢ (Montgomery form)
+        let mut prefix: Vec<Vec<u64>> = Vec::with_capacity(vals.len());
+        prefix.push(vals[0].clone());
+        perf::add_alloc();
+        for v in &vals[1..] {
+            let last = prefix.last().unwrap();
+            prefix.push(self.mont_mul_raw(last, v));
+        }
+        // one plain-domain inversion of the total product
+        let total = self.from_mont(prefix.last().unwrap());
+        let total_inv = modinv(&total, &self.m)?;
+        // inv_acc = (v₀·…·vᵢ)⁻¹·R, walked from the top back to i = 0
+        let mut inv_acc = self.to_mont(&total_inv);
+        let mut out = vec![Vec::new(); vals.len()];
+        for i in (1..vals.len()).rev() {
+            out[i] = self.mont_mul_raw(&inv_acc, &prefix[i - 1]);
+            inv_acc = self.mont_mul_raw(&inv_acc, &vals[i]);
+        }
+        out[0] = inv_acc;
+        Some(out)
+    }
+
+    /// Shared fixed-window ladder: `acc ← acc^(2⁴ⁿ)·table[window]·…` —
+    /// the common core of [`Self::pow`] and [`PowTable::pow_mont`].
+    /// `acc` must start at the Montgomery form of 1; the top window of a
+    /// nonzero exponent is nonzero, so the pre-multiply squarings are
+    /// skipped exactly when the accumulator is still 1.
+    fn pow_windows(&self, table: &[Vec<u64>], exp: &BigUint, acc: &mut [u64]) {
+        let nwin = (exp.bit_len() + 3) / 4;
+        for w in (0..nwin).rev() {
+            if w != nwin - 1 {
+                for _ in 0..4 {
+                    self.mont_sqr_in_place(acc);
+                }
+            }
+            let idx = exp_window(exp, w);
+            if idx != 0 {
+                self.mont_mul_assign(acc, &table[idx]);
+            }
+        }
+    }
+
+    /// `base^exp mod m` with a 4-bit fixed window (squarings on the
+    /// dedicated SOS path).
     pub fn pow(&self, base: &BigUint, exp: &BigUint) -> BigUint {
         if exp.is_zero() {
             return BigUint::one().rem(&self.m);
@@ -176,39 +582,132 @@ impl Montgomery {
         } else {
             base.rem(&self.m)
         };
-        let bm = self.to_mont(&base);
+        let table = self.window_table_mont(&self.to_mont(&base));
+        let mut acc = self.one_mont();
+        self.pow_windows(&table, exp, &mut acc);
+        self.from_mont(&acc)
+    }
 
-        // Precompute table[i] = base^i in Montgomery form, i in 0..16.
-        let mut one_m = self.r1.limbs().to_vec();
-        one_m.resize(self.k, 0);
-        let mut table: Vec<Vec<u64>> = Vec::with_capacity(16);
-        table.push(one_m.clone());
-        table.push(bm.clone());
-        for i in 2..16 {
-            let prev = self.mont_mul_raw(&table[i - 1], &bm);
-            table.push(prev);
-        }
-
-        let nbits = exp.bit_len();
-        let nwin = (nbits + 3) / 4;
-        let mut acc = one_m;
+    /// Interleaved (Straus/Shamir) multi-exponentiation over one shared
+    /// squaring ladder, in the Montgomery domain.
+    ///
+    /// `bases[b]` carries the 4-bit window table of base `b` (and
+    /// optionally of its inverse, for signed exponents); `window(b, w)`
+    /// returns `(index, negative)` — the 4-bit window of base `b`'s
+    /// exponent at window position `w` and which table it selects. The
+    /// ladder runs `nwin` windows from the top; each window costs 4
+    /// shared squarings (skipped while the accumulator is still 1) plus
+    /// one multiply per nonzero window — so k bases share one squaring
+    /// chain instead of paying k.
+    ///
+    /// The result is left in `scratch` (read it with
+    /// [`MontScratch::acc`]); the returned [`LadderStats`] feed the perf
+    /// baseline model at call sites that fused two ladders into one.
+    ///
+    /// Panics if `window` reports a negative window for a base whose
+    /// [`SignedTables::neg`] is `None`.
+    pub fn multi_pow_mont<F>(
+        &self,
+        bases: &[SignedTables<'_>],
+        nwin: usize,
+        mut window: F,
+        scratch: &mut MontScratch,
+    ) -> LadderStats
+    where
+        F: FnMut(usize, usize) -> (usize, bool),
+    {
+        self.write_one_mont(&mut scratch.acc);
+        let mut stats = LadderStats::default();
         for w in (0..nwin).rev() {
-            // 4 squarings
-            if w != nwin - 1 {
+            if stats.pos_used || stats.neg_used {
                 for _ in 0..4 {
-                    acc = self.mont_mul_raw(&acc, &acc);
+                    self.mont_sqr_in_place(&mut scratch.acc);
+                }
+                stats.sqrs += 4;
+            }
+            for (b, tables) in bases.iter().enumerate() {
+                let (idx, neg) = window(b, w);
+                if idx == 0 {
+                    continue;
+                }
+                let table = if neg {
+                    tables.neg.expect("negative window without an inverse-base table")
+                } else {
+                    tables.pos
+                };
+                self.mont_mul_assign(&mut scratch.acc, &table[idx]);
+                stats.muls += 1;
+                if neg {
+                    stats.neg_used = true;
+                } else {
+                    stats.pos_used = true;
                 }
             }
-            // extract window bits [4w, 4w+4)
-            let mut idx = 0usize;
-            for b in (0..4).rev() {
-                idx = (idx << 1) | exp.bit(4 * w + b) as usize;
-            }
-            if idx != 0 {
-                acc = self.mont_mul_raw(&acc, &table[idx]);
-            }
         }
-        self.from_mont(&acc)
+        stats
+    }
+
+    /// `Π bases[i]^exps[i] mod m` on one shared squaring ladder — the
+    /// plain-domain convenience over [`Self::multi_pow_mont`] (builds
+    /// one window table per base; property-tested against `Π pow`).
+    pub fn multi_pow(&self, bases: &[BigUint], exps: &[BigUint]) -> BigUint {
+        assert_eq!(bases.len(), exps.len(), "bases/exps length mismatch");
+        let tables: Vec<Vec<Vec<u64>>> = bases
+            .iter()
+            .map(|b| {
+                let b = if b.cmp(&self.m) == Ordering::Less { b.clone() } else { b.rem(&self.m) };
+                self.window_table_mont(&self.to_mont(&b))
+            })
+            .collect();
+        let signed: Vec<SignedTables<'_>> =
+            tables.iter().map(|t| SignedTables { pos: t, neg: None }).collect();
+        let nwin = exps.iter().map(|e| (e.bit_len() + 3) / 4).max().unwrap_or(0);
+        let mut scratch = MontScratch::new(self);
+        self.multi_pow_mont(&signed, nwin, |b, w| (exp_window(&exps[b], w), false), &mut scratch);
+        self.from_mont(scratch.acc())
+    }
+}
+
+/// Window tables of one multi-exponentiation base: the base's own 4-bit
+/// table, plus (for signed exponents) its modular inverse's — both signs
+/// then ride the same squaring ladder of [`Montgomery::multi_pow_mont`].
+pub struct SignedTables<'a> {
+    /// `table[i] = baseⁱ` (Montgomery form), 16 entries.
+    pub pos: &'a [Vec<u64>],
+    /// `table[i] = base⁻ⁱ` (Montgomery form), for bases with negative
+    /// exponent windows; `None` when every window is non-negative.
+    pub neg: Option<&'a [Vec<u64>]>,
+}
+
+/// Operation counts of one [`Montgomery::multi_pow_mont`] ladder run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LadderStats {
+    /// Shared-ladder squarings executed.
+    pub sqrs: u64,
+    /// Window multiplies executed.
+    pub muls: u64,
+    /// A positive window contributed to the accumulator.
+    pub pos_used: bool,
+    /// A negative window contributed to the accumulator.
+    pub neg_used: bool,
+}
+
+/// Reusable per-worker accumulator for [`Montgomery::multi_pow_mont`]:
+/// one heap allocation per worker thread, reused across every output of
+/// its matvec shard — the ladder itself never allocates.
+pub struct MontScratch {
+    acc: Vec<u64>,
+}
+
+impl MontScratch {
+    /// Allocate a scratch accumulator sized for `mont`'s modulus.
+    pub fn new(mont: &Montgomery) -> MontScratch {
+        MontScratch { acc: mont.one_mont() }
+    }
+
+    /// The accumulator contents (Montgomery form) after a ladder run.
+    pub fn acc(&self) -> &[u64] {
+        &self.acc
     }
 }
 
@@ -235,16 +734,7 @@ impl<'a> PowTable<'a> {
         } else {
             base.rem(&mont.m)
         };
-        let bm = mont.to_mont(&base);
-        let mut one_m = mont.r1.limbs().to_vec();
-        one_m.resize(mont.k, 0);
-        let mut table: Vec<Vec<u64>> = Vec::with_capacity(16);
-        table.push(one_m);
-        table.push(bm.clone());
-        for i in 2..16 {
-            let prev = mont.mont_mul_raw(&table[i - 1], &bm);
-            table.push(prev);
-        }
+        let table = mont.window_table_mont(&mont.to_mont(&base));
         PowTable { mont, table: std::borrow::Cow::Owned(table) }
     }
 
@@ -256,25 +746,9 @@ impl<'a> PowTable<'a> {
     /// Like [`Self::pow`], but the result stays in Montgomery form (for
     /// accumulation via [`Montgomery::mul_mont`]).
     pub fn pow_mont(&self, exp: &BigUint) -> Vec<u64> {
-        if exp.is_zero() {
-            return self.table[0].clone();
-        }
-        let nbits = exp.bit_len();
-        let nwin = (nbits + 3) / 4;
-        let mut acc = self.table[0].clone();
-        for w in (0..nwin).rev() {
-            if w != nwin - 1 {
-                for _ in 0..4 {
-                    acc = self.mont.mont_mul_raw(&acc, &acc);
-                }
-            }
-            let mut idx = 0usize;
-            for b in (0..4).rev() {
-                idx = (idx << 1) | exp.bit(4 * w + b) as usize;
-            }
-            if idx != 0 {
-                acc = self.mont.mont_mul_raw(&acc, &self.table[idx]);
-            }
+        let mut acc = self.mont.one_mont();
+        if !exp.is_zero() {
+            self.mont.pow_windows(&self.table, exp, &mut acc);
         }
         acc
     }
@@ -300,8 +774,9 @@ impl<'a> PowTable<'a> {
 }
 
 /// `base^exp mod m`. Uses Montgomery for odd `m`, falls back to binary
-/// square-and-mod for even moduli (not used by Paillier, kept for
-/// completeness/tests).
+/// square-and-mod for even moduli — unused by Paillier (both `n²` and
+/// the CRT moduli are odd) but kept for generic callers and covered by
+/// randomized tests against a naive reference.
 pub fn modpow(base: &BigUint, exp: &BigUint, m: &BigUint) -> BigUint {
     assert!(!m.is_zero(), "modpow modulus is zero");
     if m.is_one() {
@@ -400,15 +875,20 @@ mod tests {
         }
     }
 
+    /// Random full-width odd modulus of exactly `limbs` limbs.
+    fn rand_odd_modulus(rng: &mut ChaChaRng, limbs: usize) -> BigUint {
+        let mut ml: Vec<u64> = (0..limbs).map(|_| rng.next_u64()).collect();
+        ml[0] |= 1;
+        let last = ml.len() - 1;
+        ml[last] |= 1 << 63;
+        BigUint::from_limbs(ml)
+    }
+
     #[test]
     fn montgomery_mul_matches_naive() {
         let mut rng = ChaChaRng::from_seed(10);
         for bits in [64usize, 128, 192, 512, 1024] {
-            let mut ml: Vec<u64> = (0..(bits / 64)).map(|_| rng.next_u64()).collect();
-            ml[0] |= 1; // odd
-            let last = ml.len() - 1;
-            ml[last] |= 1 << 63; // full width
-            let m = BigUint::from_limbs(ml);
+            let m = rand_odd_modulus(&mut rng, bits / 64);
             let mont = Montgomery::new(&m);
             for _ in 0..20 {
                 let a = rand_below(&mut rng, &m);
@@ -416,6 +896,207 @@ mod tests {
                 assert_eq!(mont.mul(&a, &b), a.mul_mod(&b, &m), "bits={bits}");
             }
         }
+    }
+
+    #[test]
+    fn mont_sqr_matches_mont_mul() {
+        // limb counts straddle biguint's KARATSUBA_THRESHOLD (= 24): the
+        // SOS squaring must agree with mul(a, a) — and with the naive
+        // mul_mod — on both sides of the multiply-backend switch
+        let mut rng = ChaChaRng::from_seed(40);
+        for limbs in [1usize, 2, 16, 23, 24, 25, 32] {
+            let m = rand_odd_modulus(&mut rng, limbs);
+            let mont = Montgomery::new(&m);
+            for _ in 0..8 {
+                let a = rand_below(&mut rng, &m);
+                let am = mont.enter_mont(&a);
+                let sqr = mont.mont_sqr_raw(&am);
+                assert_eq!(sqr, mont.mul_mont(&am, &am), "limbs={limbs}");
+                assert_eq!(mont.leave_mont(&sqr), a.mul_mod(&a, &m), "limbs={limbs}");
+            }
+            // edge values: 0, 1, m−1
+            for a in [BigUint::zero(), BigUint::one(), m.sub(&BigUint::one())] {
+                let am = mont.enter_mont(&a);
+                assert_eq!(
+                    mont.leave_mont(&mont.mont_sqr_raw(&am)),
+                    a.mul_mod(&a, &m),
+                    "limbs={limbs} edge"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sqr_and_mul_buffer_variants_agree() {
+        let mut rng = ChaChaRng::from_seed(41);
+        let m = rand_odd_modulus(&mut rng, 8);
+        let mont = Montgomery::new(&m);
+        let a = mont.enter_mont(&rand_below(&mut rng, &m));
+        let b = mont.enter_mont(&rand_below(&mut rng, &m));
+
+        let expect_sqr = mont.mont_sqr_raw(&a);
+        let mut out = vec![0u64; mont.limb_count()];
+        mont.mont_sqr_into(&a, &mut out);
+        assert_eq!(out, expect_sqr);
+        let mut x = a.clone();
+        mont.mont_sqr_in_place(&mut x);
+        assert_eq!(x, expect_sqr);
+
+        let expect_mul = mont.mul_mont(&a, &b);
+        mont.mont_mul_into(&a, &b, &mut out);
+        assert_eq!(out, expect_mul);
+        let mut x = a.clone();
+        mont.mont_mul_assign(&mut x, &b);
+        assert_eq!(x, expect_mul);
+    }
+
+    #[test]
+    fn multi_pow_matches_product_of_pows() {
+        // again straddling KARATSUBA_THRESHOLD = 24 limbs
+        let mut rng = ChaChaRng::from_seed(42);
+        for limbs in [3usize, 23, 25] {
+            let m = rand_odd_modulus(&mut rng, limbs);
+            let mont = Montgomery::new(&m);
+            for n_bases in [1usize, 2, 5] {
+                let bases: Vec<BigUint> =
+                    (0..n_bases).map(|_| rand_below(&mut rng, &m)).collect();
+                // mixed widths, including a zero exponent
+                let exps: Vec<BigUint> = (0..n_bases)
+                    .map(|i| match i {
+                        0 => BigUint::zero(),
+                        1 => BigUint::from_u64(rng.next_u64() & 0xfffff),
+                        _ => rng.next_biguint_exact_bits(200),
+                    })
+                    .collect();
+                let got = mont.multi_pow(&bases, &exps);
+                let mut expect = BigUint::one().rem(&m);
+                for (b, e) in bases.iter().zip(&exps) {
+                    expect = expect.mul_mod(&mont.pow(b, e), &m);
+                }
+                assert_eq!(got, expect, "limbs={limbs} n_bases={n_bases}");
+            }
+        }
+        // all-zero exponents → 1
+        let m = rand_odd_modulus(&mut rng, 4);
+        let mont = Montgomery::new(&m);
+        let b = rand_below(&mut rng, &m);
+        assert_eq!(
+            mont.multi_pow(&[b], &[BigUint::zero()]),
+            BigUint::one().rem(&m)
+        );
+    }
+
+    #[test]
+    fn signed_ladder_matches_split_accumulators() {
+        // one fused ladder with pos+neg tables must equal the legacy
+        // two-accumulator form pos · neg⁻¹
+        let mut rng = ChaChaRng::from_seed(43);
+        let m = rand_odd_modulus(&mut rng, 6);
+        let mont = Montgomery::new(&m);
+        let mut bases = Vec::new();
+        let mut exps: Vec<i64> = Vec::new();
+        for i in 0..4 {
+            loop {
+                let b = rand_below(&mut rng, &m);
+                if b.gcd(&m).is_one() {
+                    bases.push(b);
+                    break;
+                }
+            }
+            let e = (rng.next_u64() & 0xfffff) as i64;
+            exps.push(if i % 2 == 0 { e } else { -e });
+        }
+        let tables: Vec<Vec<Vec<u64>>> = bases
+            .iter()
+            .map(|b| mont.window_table_mont(&mont.enter_mont(b)))
+            .collect();
+        let base_monts: Vec<Vec<u64>> = tables.iter().map(|t| t[1].clone()).collect();
+        let invs = mont.batch_inv_mont(&base_monts).expect("bases are units");
+        let neg_tables: Vec<Vec<Vec<u64>>> =
+            invs.iter().map(|inv| mont.window_table_mont(inv)).collect();
+        let signed: Vec<SignedTables<'_>> = tables
+            .iter()
+            .zip(&neg_tables)
+            .map(|(pos, neg)| SignedTables { pos, neg: Some(neg) })
+            .collect();
+        let nwin = 5; // 20-bit exponents
+        let mut scratch = MontScratch::new(&mont);
+        let stats = mont.multi_pow_mont(
+            &signed,
+            nwin,
+            |b, w| {
+                let e = exps[b];
+                (((e.unsigned_abs() >> (4 * w)) & 15) as usize, e < 0)
+            },
+            &mut scratch,
+        );
+        assert!(stats.pos_used && stats.neg_used);
+        let got = mont.leave_mont(scratch.acc());
+
+        // reference: Π_{e>0} b^e · (Π_{e<0} b^|e|)⁻¹
+        let mut pos = BigUint::one();
+        let mut neg = BigUint::one();
+        for (b, &e) in bases.iter().zip(&exps) {
+            let p = mont.pow(b, &BigUint::from_u64(e.unsigned_abs()));
+            if e >= 0 {
+                pos = pos.mul_mod(&p, &m);
+            } else {
+                neg = neg.mul_mod(&p, &m);
+            }
+        }
+        let expect = pos.mul_mod(&modinv(&neg, &m).unwrap(), &m);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn batch_inv_mont_inverts_everything() {
+        let mut rng = ChaChaRng::from_seed(44);
+        let m = rand_odd_modulus(&mut rng, 5);
+        let mont = Montgomery::new(&m);
+        let one = mont.one_mont();
+        let mut vals = Vec::new();
+        while vals.len() < 7 {
+            let v = rand_below(&mut rng, &m);
+            if v.gcd(&m).is_one() {
+                vals.push(mont.enter_mont(&v));
+            }
+        }
+        let invs = mont.batch_inv_mont(&vals).expect("all units");
+        assert_eq!(invs.len(), vals.len());
+        for (v, inv) in vals.iter().zip(&invs) {
+            // v·v⁻¹·R⁻¹ in mont form = R = one_mont
+            assert_eq!(mont.mul_mont(v, inv), one);
+        }
+        // empty input
+        assert_eq!(mont.batch_inv_mont(&[]).unwrap().len(), 0);
+        // a non-unit poisons the batch
+        let mut with_zero = vals.clone();
+        with_zero.push(vec![0u64; mont.limb_count()]);
+        assert!(mont.batch_inv_mont(&with_zero).is_none());
+    }
+
+    #[test]
+    fn perf_cost_model_shapes() {
+        // squaring must be modeled cheaper than multiplying, and the
+        // unit normalizer must grow with the exponent width
+        assert!(perf::sqr_work(32) < perf::mul_work(32));
+        assert_eq!(perf::mul_work(32), 4 * 32 * 32);
+        assert_eq!(perf::sqr_work(32), 3 * 32 * 32);
+        assert!(perf::unit_work(2048, 32) > perf::unit_work(256, 32));
+        assert!(perf::unit_work(0, 32) > 0.0);
+        // counters move when ops run (≥: other test threads also bump)
+        let before = perf::snapshot();
+        let mut rng = ChaChaRng::from_seed(45);
+        let m = rand_odd_modulus(&mut rng, 4);
+        let mont = Montgomery::new(&m);
+        let a = mont.enter_mont(&rand_below(&mut rng, &m));
+        let _ = mont.mont_sqr_raw(&a);
+        let _ = mont.mul_mont(&a, &a);
+        let d = perf::snapshot().delta_since(&before);
+        assert!(d.sqrs >= 1 && d.muls >= 1);
+        assert!(d.work >= perf::sqr_work(4) + perf::mul_work(4));
+        assert!(d.baseline_work >= 2 * perf::mul_work(4));
+        assert!(d.baseline_work >= d.work);
     }
 
     #[test]
@@ -460,6 +1141,48 @@ mod tests {
             modpow(&BigUint::from_u64(3), &BigUint::from_u64(7), &m),
             BigUint::from_u64(3u64.pow(7) % (1 << 20))
         );
+    }
+
+    #[test]
+    fn modpow_even_modulus_matches_naive_random() {
+        // the square-and-multiply fallback, exercised across random even
+        // moduli (Paillier never hits this path; generic callers can)
+        let mut rng = ChaChaRng::from_seed(46);
+        for _ in 0..20 {
+            let m = BigUint::from_u64((rng.next_u64() | 2) & !1);
+            let base = BigUint::from_u64(rng.next_u64());
+            let e = rng.next_u64() % 400;
+            let mut expect = BigUint::one();
+            let b = base.rem(&m);
+            for _ in 0..e {
+                expect = expect.mul_mod(&b, &m);
+            }
+            assert_eq!(modpow(&base, &BigUint::from_u64(e), &m), expect, "m even");
+        }
+    }
+
+    #[test]
+    fn modpow_even_modulus_large_exponent_laws() {
+        // multi-limb even modulus, exponents far beyond the naive loop:
+        // check the algebraic law a^(e1+e2) == a^e1 · a^e2 (mod m)
+        let mut rng = ChaChaRng::from_seed(47);
+        let mut ml: Vec<u64> = (0..4).map(|_| rng.next_u64()).collect();
+        ml[0] &= !1; // even
+        ml[0] |= 2;
+        let m = BigUint::from_limbs(ml);
+        assert!(!m.is_odd());
+        for _ in 0..5 {
+            let base = rand_below(&mut rng, &m);
+            let e1 = rng.next_biguint_exact_bits(100);
+            let e2 = rng.next_biguint_exact_bits(90);
+            let lhs = modpow(&base, &e1.add(&e2), &m);
+            let rhs = modpow(&base, &e1, &m).mul_mod(&modpow(&base, &e2, &m), &m);
+            assert_eq!(lhs, rhs);
+        }
+        // exp 0 and 1
+        let b = rand_below(&mut rng, &m);
+        assert_eq!(modpow(&b, &BigUint::zero(), &m), BigUint::one());
+        assert_eq!(modpow(&b, &BigUint::one(), &m), b.rem(&m));
     }
 
     #[test]

@@ -7,9 +7,14 @@
 //!
 //! - one 4-bit [`crate::bignum::PowTable`] per ciphertext, shared by the
 //!   whole feature row (f exponentiations amortize one table build);
-//! - negative exponents via **one** ciphertext inversion per sample
-//!   (`[[d]]^(−k) = ([[d]]⁻¹)^k`), instead of per-entry 2048-bit
-//!   exponents (`n − k` is astronomically large as an exponent);
+//! - negative exponents via inverse-base window tables
+//!   (`[[d]]^(−k) = ([[d]]⁻¹)^k`), all inverses for a matvec paid with
+//!   **one** extended-gcd inversion via Montgomery's batch trick —
+//!   never per-entry 2048-bit exponents (`n − k` is astronomically
+//!   large as an exponent) and never a per-output inversion;
+//! - a **fused signed ladder**: positive and negative windows of every
+//!   base share a single [`crate::bignum::Montgomery::multi_pow_mont`]
+//!   squaring chain per output (the old code ran one chain per sign);
 //! - statistically-hiding additive masks: a uniform `mask_bits(pk)`-bit
 //!   `R` added homomorphically before the ciphertext leaves the party, so
 //!   the decrypting peer sees `v + R` only;
@@ -19,7 +24,8 @@
 //!   read-only. Thread count comes from the `EFMVFL_THREADS` env knob
 //!   (default: available parallelism, capped at 8).
 
-use crate::bignum::BigUint;
+use crate::bignum::modular::perf as mont_perf;
+use crate::bignum::{BigUint, MontScratch, Montgomery, SignedTables};
 use crate::crypto::fixed::{self, PackLayout};
 use crate::crypto::paillier::{Ciphertext, PublicKey};
 use crate::crypto::prng::ChaChaRng;
@@ -49,9 +55,13 @@ pub mod perf {
         CT_EXPS.load(Ordering::Relaxed)
     }
 
-    /// Zero all counters (bench phase boundaries).
+    /// Zero all counters (bench phase boundaries) — including the
+    /// Montgomery-core cost-split counters
+    /// ([`crate::bignum::modular::perf`]), so one reset starts a clean
+    /// measurement window for both layers.
     pub fn reset() {
         CT_EXPS.store(0, Ordering::Relaxed);
+        crate::bignum::modular::perf::reset();
     }
 }
 
@@ -185,15 +195,74 @@ fn build_tables(pk: &PublicKey, cts: &[Ciphertext], threads: usize) -> Vec<Vec<V
     })
 }
 
+/// Window tables of the *inverses* of the bases flagged in `needs_neg`
+/// (indices without a negative exponent stay `None`). All inverses cost
+/// **one** extended-gcd inversion total ([`Montgomery::batch_inv_mont`]);
+/// the table builds shard across `threads` like [`build_tables`].
+fn build_neg_tables(
+    mont: &Montgomery,
+    tables: &[Vec<Vec<u64>>],
+    needs_neg: &[bool],
+    threads: usize,
+) -> Vec<Option<Vec<Vec<u64>>>> {
+    let idxs: Vec<usize> = needs_neg
+        .iter()
+        .enumerate()
+        .filter(|&(_, &n)| n)
+        .map(|(i, _)| i)
+        .collect();
+    let mut out: Vec<Option<Vec<Vec<u64>>>> = vec![None; needs_neg.len()];
+    if idxs.is_empty() {
+        return out;
+    }
+    // table[1] is the base itself in Montgomery form
+    let bases: Vec<Vec<u64>> = idxs.iter().map(|&i| tables[i][1].clone()).collect();
+    let invs = mont
+        .batch_inv_mont(&bases)
+        .expect("ciphertext not a unit mod n² (malformed ciphertext)");
+    if threads <= 1 || invs.len() < threads * 2 {
+        for (&i, inv) in idxs.iter().zip(&invs) {
+            out[i] = Some(mont.window_table_mont(inv));
+        }
+        return out;
+    }
+    let chunk = (invs.len() + threads - 1) / threads;
+    let built = std::thread::scope(|scope| {
+        let handles: Vec<_> = invs
+            .chunks(chunk)
+            .map(|block| {
+                scope.spawn(move || {
+                    block.iter().map(|inv| mont.window_table_mont(inv)).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let mut all = Vec::with_capacity(invs.len());
+        for h in handles {
+            all.extend(h.join().expect("inverse-table worker panicked"));
+        }
+        all
+    });
+    for (&i, table) in idxs.iter().zip(built) {
+        out[i] = Some(table);
+    }
+    out
+}
+
 /// Shared-squaring simultaneous exponentiation (Straus/Shamir-style):
-/// computes, for each output `o`, `Π_b table_b ^ |e(b,o)|` split into
-/// positive/negative accumulators, squaring each accumulator only **once
-/// per 4-bit window per output** instead of once per entry.
+/// for each output `o`, one **fused signed ladder**
+/// ([`Montgomery::multi_pow_mont`]) computes `Π_b table_b ^ e(b,o)`,
+/// with negative exponents riding inverse-base window tables — a single
+/// squaring chain per output, squared once per 4-bit window regardless
+/// of base count or exponent signs.
 ///
 /// §Perf: this turns the ~26 Montgomery multiplications a 21-bit
 /// exponent costs on its own into ~5 (the nonzero windows), because the
-/// 20 squarings are shared by every base contributing to that output.
-/// Base tables are built once and reused across all outputs.
+/// 20 squarings are shared by every base contributing to that output —
+/// and they ride the dedicated SOS squaring at 3/4 the multiply cost.
+/// Base tables (plus inverse-base tables for bases with negative
+/// entries, all inverted with one batched gcd) are built once and
+/// reused across every output; each worker reuses one [`MontScratch`]
+/// accumulator, so the per-output ladder never touches the heap.
 ///
 /// Threading: outputs are fully independent, so with `threads > 1` both
 /// the table builds (per-base) and the output accumulations
@@ -228,16 +297,29 @@ fn multi_exp(
         }
     };
 
-    // perf trajectory: one logical ct^e per nonzero (base, output) pair
+    // perf trajectory (one logical ct^e per nonzero (base, output)
+    // pair), and which bases ever see a negative exponent
     let mut n_ops = 0u64;
+    let mut needs_neg = vec![false; n_bases];
     for o in 0..n_out {
-        for b in 0..n_bases {
-            if exp_at(b, o) != 0 {
+        for (b, nb) in needs_neg.iter_mut().enumerate() {
+            let e = exp_at(b, o);
+            if e != 0 {
                 n_ops += 1;
+                if e < 0 {
+                    *nb = true;
+                }
             }
         }
     }
     perf::add_ct_exps(n_ops);
+
+    let neg_tables = build_neg_tables(mont, &tables, &needs_neg, threads);
+    let signed: Vec<SignedTables<'_>> = tables
+        .iter()
+        .zip(&neg_tables)
+        .map(|(pos, neg)| SignedTables { pos, neg: neg.as_deref() })
+        .collect();
 
     // widest exponent drives the window count
     let max_bits = exps
@@ -246,57 +328,31 @@ fn multi_exp(
         .max()
         .unwrap_or(0);
     let nwin = (max_bits + 3) / 4;
+    let k_limbs = mont.limb_count();
 
-    let one = mont.one_mont();
-
-    // One output's accumulation: all captures are read-only shared state.
-    let compute_output = |o: usize| -> Ciphertext {
-        let mut acc_pos = one.clone();
-        let mut acc_neg = one.clone();
-        let mut pos_used = false;
-        let mut neg_used = false;
-        for w in (0..nwin).rev() {
-            if w != nwin - 1 {
-                for _ in 0..4 {
-                    if pos_used {
-                        acc_pos = mont.mul_mont(&acc_pos, &acc_pos);
-                    }
-                    if neg_used {
-                        acc_neg = mont.mul_mont(&acc_neg, &acc_neg);
-                    }
-                }
-            }
-            for b in 0..n_bases {
+    // One output's accumulation: all captures are read-only shared
+    // state; the scratch accumulator is per-worker.
+    let compute_output = |o: usize, scratch: &mut MontScratch| -> Ciphertext {
+        let stats = mont.multi_pow_mont(
+            &signed,
+            nwin,
+            |b, w| {
                 let e = exp_at(b, o);
-                if e == 0 {
-                    continue;
-                }
-                let idx = ((e.unsigned_abs() >> (4 * w)) & 15) as usize;
-                if idx == 0 {
-                    continue;
-                }
-                if e > 0 {
-                    acc_pos = mont.mul_mont(&acc_pos, &tables[b][idx]);
-                    pos_used = true;
-                } else {
-                    acc_neg = mont.mul_mont(&acc_neg, &tables[b][idx]);
-                    neg_used = true;
-                }
-            }
+                (((e.unsigned_abs() >> (4 * w)) & 15) as usize, e < 0)
+            },
+            scratch,
+        );
+        // baseline model: the pre-fusion engine ran a second squaring
+        // ladder whenever both signs contributed to this output
+        if stats.pos_used && stats.neg_used {
+            mont_perf::add_baseline_ladder_sqrs(stats.sqrs, k_limbs);
         }
-        // pos · neg⁻¹, one inversion per output
-        let pos = mont.leave_mont(&acc_pos);
-        if !neg_used {
-            return Ciphertext(pos);
-        }
-        let neg = mont.leave_mont(&acc_neg);
-        let inv = crate::bignum::modular::modinv(&neg, &pk.n2)
-            .expect("ciphertext accumulator not a unit");
-        Ciphertext(pos.mul_mod(&inv, &pk.n2))
+        Ciphertext(mont.leave_mont(scratch.acc()))
     };
 
     if threads == 1 || n_out < 2 {
-        return (0..n_out).map(compute_output).collect();
+        let mut scratch = MontScratch::new(mont);
+        return (0..n_out).map(|o| compute_output(o, &mut scratch)).collect();
     }
 
     // Per-output-column sharding: contiguous chunks, stitched in order.
@@ -307,7 +363,10 @@ fn multi_exp(
             .map(|w| {
                 let start = (w * chunk).min(n_out);
                 let end = ((w + 1) * chunk).min(n_out);
-                scope.spawn(move || (start..end).map(compute_output).collect::<Vec<_>>())
+                scope.spawn(move || {
+                    let mut scratch = MontScratch::new(mont);
+                    (start..end).map(|o| compute_output(o, &mut scratch)).collect::<Vec<_>>()
+                })
             })
             .collect();
         let mut out = Vec::with_capacity(n_out);
@@ -490,6 +549,28 @@ pub fn packed_matvec_t(
     packed_matvec_t_threads(pk, packed, x, layout, he_threads())
 }
 
+/// Per-worker reusable buffers of the packed matvec: the signed packed
+/// exponent limb buffers and block-used flags for one output column,
+/// plus the shared-ladder accumulator. Allocated once per worker thread
+/// and cleared per output, so the packed hot loop never allocates.
+struct PackedScratch {
+    pos_e: Vec<u64>,
+    neg_e: Vec<u64>,
+    used: Vec<bool>,
+    mont: MontScratch,
+}
+
+impl PackedScratch {
+    fn new(mont: &Montgomery, n_blocks: usize, exp_limbs: usize) -> PackedScratch {
+        PackedScratch {
+            pos_e: vec![0u64; n_blocks * exp_limbs],
+            neg_e: vec![0u64; n_blocks * exp_limbs],
+            used: vec![false; n_blocks],
+            mont: MontScratch::new(mont),
+        }
+    }
+}
+
 /// [`packed_matvec_t`] with an explicit worker count (1 = serial
 /// reference path; the threaded path is bit-identical).
 pub fn packed_matvec_t_threads(
@@ -512,20 +593,42 @@ pub fn packed_matvec_t_threads(
     let tables = build_tables(pk, packed, threads);
     let exps: Vec<i64> = x.data.iter().map(|&v| fixed::encode(v) as i64).collect();
 
+    // which blocks ever see a negative feature value (any output column)
+    let mut needs_neg = vec![false; n_blocks];
+    for (k, nb) in needs_neg.iter_mut().enumerate() {
+        'block: for t in 0..s {
+            let i = k * s + t;
+            if i >= x.rows {
+                break;
+            }
+            for o in 0..x.cols {
+                if exps[i * x.cols + o] < 0 {
+                    *nb = true;
+                    break 'block;
+                }
+            }
+        }
+    }
+    let neg_tables = build_neg_tables(mont, &tables, &needs_neg, threads);
+    let signed: Vec<SignedTables<'_>> = tables
+        .iter()
+        .zip(&neg_tables)
+        .map(|(pos, neg)| SignedTables { pos, neg: neg.as_deref() })
+        .collect();
+
     // Reversed packed exponent: the digit for in-block slot t sits at
     // B^(slots−1−t), so slot t of the plaintext meets slot (slots−1−t)
     // of the exponent exactly at convolution digit slots−1 (the middle).
     let exp_bits = (s - 1) * w + fixed::SLOT_X_BITS;
     let nwin = (exp_bits + 3) / 4;
     let exp_limbs = exp_bits / 64 + 2;
-    let one = mont.one_mont();
+    let k_limbs = mont.limb_count();
 
-    let compute_output = |o: usize| -> Ciphertext {
-        // per-block positive/negative exponent limb buffers
-        let mut pos_e = vec![0u64; n_blocks * exp_limbs];
-        let mut neg_e = vec![0u64; n_blocks * exp_limbs];
-        let mut used = vec![false; n_blocks];
-        for (k, u) in used.iter_mut().enumerate() {
+    let compute_output = |o: usize, scratch: &mut PackedScratch| -> Ciphertext {
+        scratch.pos_e.fill(0);
+        scratch.neg_e.fill(0);
+        scratch.used.fill(false);
+        for (k, u) in scratch.used.iter_mut().enumerate() {
             for t in 0..s {
                 let i = k * s + t;
                 if i >= x.rows {
@@ -536,7 +639,7 @@ pub fn packed_matvec_t_threads(
                     continue;
                 }
                 *u = true;
-                let buf = if e > 0 { &mut pos_e } else { &mut neg_e };
+                let buf = if e > 0 { &mut scratch.pos_e } else { &mut scratch.neg_e };
                 set_digit(
                     &mut buf[k * exp_limbs..(k + 1) * exp_limbs],
                     (s - 1 - t) * w,
@@ -544,51 +647,37 @@ pub fn packed_matvec_t_threads(
                 );
             }
         }
-        perf::add_ct_exps(used.iter().filter(|&&u| u).count() as u64);
+        perf::add_ct_exps(scratch.used.iter().filter(|&&u| u).count() as u64);
 
-        let mut acc_pos = one.clone();
-        let mut acc_neg = one.clone();
-        let mut pos_used = false;
-        let mut neg_used = false;
-        for q in (0..nwin).rev() {
-            if q != nwin - 1 {
-                for _ in 0..4 {
-                    if pos_used {
-                        acc_pos = mont.mul_mont(&acc_pos, &acc_pos);
-                    }
-                    if neg_used {
-                        acc_neg = mont.mul_mont(&acc_neg, &acc_neg);
-                    }
-                }
-            }
-            for (k, &u) in used.iter().enumerate() {
-                if !u {
-                    continue;
+        // Signed digits sit ≥ slot_bits − SLOT_X_BITS ≥ 104 zero bits
+        // apart, so any 4-bit window overlaps at most ONE digit — at
+        // most one sign is nonzero per (block, window), and checking
+        // pos first then falling back to neg is exact.
+        let (pos_e, neg_e, used) = (&scratch.pos_e, &scratch.neg_e, &scratch.used);
+        let stats = mont.multi_pow_mont(
+            &signed,
+            nwin,
+            |k, q| {
+                if !used[k] {
+                    return (0, false);
                 }
                 let ip = window_at(&pos_e[k * exp_limbs..(k + 1) * exp_limbs], q);
                 if ip != 0 {
-                    acc_pos = mont.mul_mont(&acc_pos, &tables[k][ip]);
-                    pos_used = true;
+                    return (ip, false);
                 }
-                let im = window_at(&neg_e[k * exp_limbs..(k + 1) * exp_limbs], q);
-                if im != 0 {
-                    acc_neg = mont.mul_mont(&acc_neg, &tables[k][im]);
-                    neg_used = true;
-                }
-            }
+                (window_at(&neg_e[k * exp_limbs..(k + 1) * exp_limbs], q), true)
+            },
+            &mut scratch.mont,
+        );
+        if stats.pos_used && stats.neg_used {
+            mont_perf::add_baseline_ladder_sqrs(stats.sqrs, k_limbs);
         }
-        let pos = mont.leave_mont(&acc_pos);
-        if !neg_used {
-            return Ciphertext(pos);
-        }
-        let neg = mont.leave_mont(&acc_neg);
-        let inv = crate::bignum::modular::modinv(&neg, &pk.n2)
-            .expect("ciphertext accumulator not a unit");
-        Ciphertext(pos.mul_mod(&inv, &pk.n2))
+        Ciphertext(mont.leave_mont(scratch.mont.acc()))
     };
 
     if threads == 1 || n_out < 2 {
-        return (0..n_out).map(compute_output).collect();
+        let mut scratch = PackedScratch::new(mont, n_blocks, exp_limbs);
+        return (0..n_out).map(|o| compute_output(o, &mut scratch)).collect();
     }
     let compute_output = &compute_output;
     let chunk = (n_out + threads - 1) / threads;
@@ -597,7 +686,10 @@ pub fn packed_matvec_t_threads(
             .map(|t| {
                 let start = (t * chunk).min(n_out);
                 let end = ((t + 1) * chunk).min(n_out);
-                scope.spawn(move || (start..end).map(compute_output).collect::<Vec<_>>())
+                scope.spawn(move || {
+                    let mut scratch = PackedScratch::new(mont, n_blocks, exp_limbs);
+                    (start..end).map(|o| compute_output(o, &mut scratch)).collect::<Vec<_>>()
+                })
             })
             .collect();
         let mut out = Vec::with_capacity(n_out);

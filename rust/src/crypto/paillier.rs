@@ -53,12 +53,16 @@ pub struct SecretKey {
     p_minus_1: BigUint,
     /// `λ_q = q−1`.
     q_minus_1: BigUint,
-    /// `h_p = L_p(g^{p−1} mod p²)⁻¹ mod p`.
-    hp: BigUint,
-    /// `h_q = L_q(g^{q−1} mod q²)⁻¹ mod q`.
-    hq: BigUint,
-    /// `q⁻¹ mod p` for CRT recombination.
-    q_inv_p: BigUint,
+    /// Montgomery context for `p` (decrypt-tail products mod `p`).
+    mont_p: Montgomery,
+    /// Montgomery context for `q`.
+    mont_q: Montgomery,
+    /// `h_p = L_p(g^{p−1} mod p²)⁻¹ mod p`, cached in Montgomery form.
+    hp_mont: Vec<u64>,
+    /// `h_q = L_q(g^{q−1} mod q²)⁻¹ mod q`, cached in Montgomery form.
+    hq_mont: Vec<u64>,
+    /// `q⁻¹ mod p` for CRT recombination, cached in Montgomery form.
+    q_inv_p_mont: Vec<u64>,
     /// Montgomery context for `p²`.
     mont_p2: Montgomery,
     /// Montgomery context for `q²`.
@@ -124,6 +128,14 @@ impl Keypair {
             };
             let mont_p2 = Montgomery::new(&p2);
             let mont_q2 = Montgomery::new(&q2);
+            // the CRT decrypt tail multiplies by these three constants
+            // on every decryption — cache them in Montgomery form so the
+            // tail is Montgomery multiplies, not long divisions
+            let mont_p = Montgomery::new(&p);
+            let mont_q = Montgomery::new(&q);
+            let hp_mont = mont_p.enter_mont(&hp);
+            let hq_mont = mont_q.enter_mont(&hq);
+            let q_inv_p_mont = mont_p.enter_mont(&q_inv_p);
             let sk = SecretKey {
                 p,
                 q,
@@ -131,9 +143,11 @@ impl Keypair {
                 q2,
                 p_minus_1: p1,
                 q_minus_1: q1,
-                hp,
-                hq,
-                q_inv_p,
+                mont_p,
+                mont_q,
+                hp_mont,
+                hq_mont,
+                q_inv_p_mont,
                 mont_p2,
                 mont_q2,
                 n,
@@ -237,8 +251,9 @@ impl PublicKey {
     /// Encrypt a non-negative plaintext `m < n`.
     pub fn encrypt_raw(&self, m: &BigUint, rng: &mut ChaChaRng) -> Ciphertext {
         debug_assert!(m < &self.n, "plaintext out of range");
-        // (1 + m n) * r^n  mod n²
-        let gm = BigUint::one().add(&m.mul(&self.n)).rem(&self.n2);
+        // (1 + m n) * r^n  mod n² — since m < n, 1 + m·n ≤ 1 + (n−1)·n
+        // < n², so the product is already reduced and needs no divrem
+        let gm = BigUint::one().add(&m.mul(&self.n));
         let rn = self.obfuscator(rng);
         Ciphertext(self.mont_n2.mul(&gm, &rn))
     }
@@ -279,9 +294,12 @@ impl PublicKey {
         Ciphertext(self.mont_n2.mul(&a.0, &b.0))
     }
 
-    /// Homomorphic plaintext addition: `Enc(a) ⊕ b = Enc(a + b)`.
+    /// Homomorphic plaintext addition: `Enc(a) ⊕ b = Enc(a + b)` for
+    /// `b < n` (every caller passes an [`Self::encode_i128`] value, so
+    /// `1 + b·n < n²` holds and no reduction is needed).
     pub fn add_plain(&self, a: &Ciphertext, b: &BigUint) -> Ciphertext {
-        let gm = BigUint::one().add(&b.mul(&self.n)).rem(&self.n2);
+        debug_assert!(b < &self.n, "plaintext out of range");
+        let gm = BigUint::one().add(&b.mul(&self.n));
         Ciphertext(self.mont_n2.mul(&a.0, &gm))
     }
 
@@ -347,6 +365,12 @@ impl PublicKey {
     }
 }
 
+/// `a·b mod m` with `b` cached in Montgomery form — enter, one
+/// Montgomery multiply, leave; no long division in the decrypt tail.
+fn mul_mont_fixed(mont: &Montgomery, a: &BigUint, b_mont: &[u64]) -> BigUint {
+    mont.leave_mont(&mont.mul_mont(&mont.enter_mont(a), b_mont))
+}
+
 impl SecretKey {
     /// Decrypt to the raw plaintext in `[0, n)`.
     pub fn decrypt_raw(&self, c: &Ciphertext) -> BigUint {
@@ -356,11 +380,11 @@ impl SecretKey {
         let cq = self.mont_q2.pow(&c.0.rem(&self.q2), &self.q_minus_1);
         let lp = cp.sub(&BigUint::one()).div(&self.p);
         let lq = cq.sub(&BigUint::one()).div(&self.q);
-        let mp = lp.rem(&self.p).mul_mod(&self.hp, &self.p);
-        let mq = lq.rem(&self.q).mul_mod(&self.hq, &self.q);
+        let mp = mul_mont_fixed(&self.mont_p, &lp.rem(&self.p), &self.hp_mont);
+        let mq = mul_mont_fixed(&self.mont_q, &lq.rem(&self.q), &self.hq_mont);
         // m = mq + q · ((mp − mq) · q⁻¹ mod p)
         let diff = mp.sub_mod(&mq.rem(&self.p), &self.p);
-        let t = diff.mul_mod(&self.q_inv_p, &self.p);
+        let t = mul_mont_fixed(&self.mont_p, &diff, &self.q_inv_p_mont);
         mq.add(&self.q.mul(&t))
     }
 

@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Fail CI when regenerated BENCH counters regress past the committed gates.
+
+Each committed BENCH_*.json carries a ``ci_gates`` array of
+``{"path": ..., "min": ..., "max": ...}`` entries emitted by the bench
+itself.  The bounds are on the *fast-mode* (``EFMVFL_BENCH_FAST=1``)
+deterministic counters — ct-exps, cipher bytes, modeled modexp work
+ratios — with a small tolerance, so wall-clock noise never trips them
+but giving back a packing/squaring/interleaving win does.  This script
+resolves each dotted gate path (array indices as bare numbers, booleans
+coerced to 1/0) in the regenerated report and exits non-zero listing
+every violated bound, making the perf-trajectory job fail instead of
+silently uploading a regressed artifact.
+
+Usage: check_bench_regression.py <committed_dir> <regenerated_dir>
+"""
+
+import json
+import sys
+
+BENCH_FILES = ["BENCH_micro.json", "BENCH_p3.json", "BENCH_train.json"]
+
+
+def resolve(doc, path):
+    cur = doc
+    for part in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        elif isinstance(cur, dict):
+            cur = cur[part]
+        else:
+            raise KeyError(path)
+    return cur
+
+
+def as_number(value):
+    if isinstance(value, bool):
+        return 1.0 if value else 0.0
+    if isinstance(value, (int, float)):
+        return float(value)
+    raise TypeError("non-numeric value %r" % (value,))
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    committed_dir, regen_dir = sys.argv[1], sys.argv[2]
+    failures = []
+    checked = 0
+    for name in BENCH_FILES:
+        with open("%s/%s" % (committed_dir, name)) as fh:
+            committed = json.load(fh)
+        with open("%s/%s" % (regen_dir, name)) as fh:
+            regen = json.load(fh)
+        gates = committed.get("ci_gates", [])
+        if not gates:
+            failures.append("%s: committed file has no ci_gates" % name)
+            continue
+        for gate in gates:
+            path = gate["path"]
+            try:
+                value = as_number(resolve(regen, path))
+            except (KeyError, IndexError, ValueError, TypeError) as exc:
+                failures.append("%s: %s: unresolvable (%s)" % (name, path, exc))
+                continue
+            checked += 1
+            if "min" in gate and value < gate["min"]:
+                failures.append(
+                    "%s: %s = %s below min %s" % (name, path, value, gate["min"])
+                )
+            if "max" in gate and value > gate["max"]:
+                failures.append(
+                    "%s: %s = %s above max %s" % (name, path, value, gate["max"])
+                )
+    if failures:
+        print("bench regression gate FAILED:")
+        for msg in failures:
+            print("  " + msg)
+        sys.exit(1)
+    print("bench regression gate OK: %d bounds hold" % checked)
+
+
+if __name__ == "__main__":
+    main()
