@@ -183,6 +183,7 @@ pub fn train_ss_he(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainRepor
         wall_secs,
         party_cpu_secs: vec![res_c.1, res_b.1],
         net_secs: cfg.wire.transfer_secs(stats.total_bytes(), stats.total_msgs()),
+        metrics: crate::obs::MetricsRegistry::default(),
     })
 }
 

@@ -193,6 +193,7 @@ pub fn train_ss(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> 
         wall_secs,
         party_cpu_secs: vec![res_c.1, res_b.1],
         net_secs: cfg.wire.transfer_secs(stats.total_bytes(), stats.total_msgs()),
+        metrics: crate::obs::MetricsRegistry::default(),
     })
 }
 

@@ -116,6 +116,7 @@ pub fn train_tp(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> 
         wall_secs,
         party_cpu_secs: cpus,
         net_secs: cfg.wire.transfer_secs(stats.total_bytes(), stats.total_msgs()),
+        metrics: crate::obs::MetricsRegistry::default(),
     })
 }
 

@@ -44,6 +44,42 @@ impl Json {
         out
     }
 
+    /// Render on a single line (JSONL records: one trace span per line).
+    pub fn render_compact(&self) -> String {
+        let mut out = String::new();
+        self.render_compact_into(&mut out);
+        out
+    }
+
+    fn render_compact_into(&self, out: &mut String) {
+        match self {
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    item.render_compact_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    Json::Str(k.clone()).render_compact_into(out);
+                    out.push_str(": ");
+                    v.render_compact_into(out);
+                }
+                out.push('}');
+            }
+            // scalars never multi-line: reuse the pretty renderer
+            other => other.render_into(out, 0),
+        }
+    }
+
     fn render_into(&self, out: &mut String, indent: usize) {
         let pad = |out: &mut String, n: usize| {
             for _ in 0..n {
@@ -325,6 +361,24 @@ mod tests {
         assert!(s.contains("\"empty\": []"));
         // key order is insertion order
         assert!(s.find("bench").unwrap() < s.find("ratio").unwrap());
+    }
+
+    #[test]
+    fn json_render_compact_is_single_line() {
+        let j = Json::obj(vec![
+            ("kind", Json::str("span")),
+            ("t", Json::Int(3)),
+            ("wall_s", Json::Num(0.25)),
+            ("tags", Json::Arr(vec![Json::str("a"), Json::Null])),
+        ]);
+        let s = j.render_compact();
+        assert!(!s.contains('\n'), "{s}");
+        assert_eq!(
+            s,
+            r#"{"kind": "span", "t": 3, "wall_s": 0.25, "tags": ["a", null]}"#
+        );
+        assert_eq!(Json::obj(vec![]).render_compact(), "{}");
+        assert_eq!(Json::Arr(vec![]).render_compact(), "[]");
     }
 
     #[test]

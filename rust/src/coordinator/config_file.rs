@@ -25,14 +25,20 @@
 //! gateway = "10.0.0.1:8100"
 //! max_batch = 64
 //! max_wait_ms = 5
+//!
+//! # telemetry: trace spans + the gateway /metrics endpoint
+//! [obs]
+//! trace_dir = "traces/run1"
+//! metrics_addr = "10.0.0.1:9100"
 //! ```
 //!
-//! Only the `[roster]` and `[serve]` sections are meaningful; other
-//! section headers are ignored (kept for readability), as before.
+//! Only the `[roster]`, `[serve]`, and `[obs]` sections are meaningful;
+//! other section headers are ignored (kept for readability), as before.
 
 use super::TrainConfig;
 use crate::glm::GlmKind;
 use crate::net::tcp::Roster;
+use crate::obs::ObsConfig;
 use crate::protocols::{CpSelection, PackingPolicy};
 use crate::serve::ServeConfig;
 use anyhow::{anyhow, bail, Context, Result};
@@ -40,9 +46,9 @@ use std::collections::HashMap;
 use std::path::Path;
 
 /// Parse the TOML-subset text into key/value pairs. Keys inside a
-/// `[roster]` / `[serve]` section come back prefixed `roster.` /
-/// `serve.`; all other sections leave keys bare (ignored headers, the
-/// pre-roster behavior).
+/// `[roster]` / `[serve]` / `[obs]` section come back prefixed
+/// `roster.` / `serve.` / `obs.`; all other sections leave keys bare
+/// (ignored headers, the pre-roster behavior).
 pub fn parse_kv(text: &str) -> Result<HashMap<String, String>> {
     let mut out = HashMap::new();
     let mut section: Option<&str> = None;
@@ -64,6 +70,8 @@ pub fn parse_kv(text: &str) -> Result<HashMap<String, String>> {
                 Some("roster")
             } else if name.eq_ignore_ascii_case("serve") {
                 Some("serve")
+            } else if name.eq_ignore_ascii_case("obs") {
+                Some("obs")
             } else {
                 None
             };
@@ -145,6 +153,25 @@ pub fn serve_of(kv: &HashMap<String, String>) -> Result<Option<ServeConfig>> {
     Ok(Some(cfg))
 }
 
+/// The telemetry configuration a config file requests (`None` when
+/// there is no `[obs]` section). Unknown `obs.*` keys are an error.
+pub fn obs_of(kv: &HashMap<String, String>) -> Result<Option<ObsConfig>> {
+    let keys: Vec<&String> = kv.keys().filter(|k| k.starts_with("obs.")).collect();
+    if keys.is_empty() {
+        return Ok(None);
+    }
+    let mut cfg = ObsConfig::default();
+    for key in keys {
+        let value = &kv[key];
+        match &key["obs.".len()..] {
+            "trace_dir" => cfg.trace_dir = Some(value.clone()),
+            "metrics_addr" => cfg.metrics_addr = Some(value.clone()),
+            other => bail!("unknown [obs] key {other:?}"),
+        }
+    }
+    Ok(Some(cfg))
+}
+
 /// The number of parties a config file requests (needed by the caller to
 /// split the data before [`super::train`]).
 pub fn parties_of(kv: &HashMap<String, String>) -> Result<usize> {
@@ -173,6 +200,7 @@ pub fn config_from_kv(kv: &HashMap<String, String>) -> Result<TrainConfig> {
             "model" | "parties" => {}
             k if k.starts_with("roster.") => {} // handled by `roster_of`
             k if k.starts_with("serve.") => {}  // handled by `serve_of`
+            k if k.starts_with("obs.") => {}    // handled by `obs_of`
             "iterations" => cfg.iterations = value.parse().context("iterations")?,
             "learning_rate" => cfg.learning_rate = value.parse().context("learning_rate")?,
             "loss_threshold" => cfg.loss_threshold = value.parse().context("loss_threshold")?,
@@ -230,17 +258,23 @@ pub struct FileConfig {
     pub parties: usize,
     /// Party-id → address map from the `[roster]` section, if any.
     pub roster: Option<Roster>,
-    /// Serving knobs from the `[serve]` section, if any.
+    /// Serving knobs from the `[serve]` section, if any (with the
+    /// `[obs]` metrics address already folded in).
     pub serve: Option<ServeConfig>,
+    /// Telemetry knobs from the `[obs]` section, if any (already folded
+    /// into `cfg.trace_dir` / `serve.metrics_addr`).
+    pub obs: Option<ObsConfig>,
 }
 
-/// Load a config file, including the `[roster]` and `[serve]` sections.
+/// Load a config file, including the `[roster]`, `[serve]`, and `[obs]`
+/// sections.
 pub fn load_full(path: &Path) -> Result<FileConfig> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
     let kv = parse_kv(&text)?;
     let roster = roster_of(&kv)?;
-    let serve = serve_of(&kv)?;
+    let mut serve = serve_of(&kv)?;
+    let obs = obs_of(&kv)?;
     let parties = match (&roster, kv.contains_key("parties")) {
         (Some(r), false) => r.n_parties(),
         _ => parties_of(&kv)?,
@@ -253,7 +287,16 @@ pub fn load_full(path: &Path) -> Result<FileConfig> {
             );
         }
     }
-    Ok(FileConfig { cfg: config_from_kv(&kv)?, parties, roster, serve })
+    let mut cfg = config_from_kv(&kv)?;
+    if let Some(o) = &obs {
+        cfg.trace_dir = o.trace_dir.clone();
+        if let Some(addr) = &o.metrics_addr {
+            // a metrics address without a [serve] section still implies
+            // serving defaults — the endpoint rides on the gateway
+            serve.get_or_insert_with(ServeConfig::default).metrics_addr = Some(addr.clone());
+        }
+    }
+    Ok(FileConfig { cfg, parties, roster, serve, obs })
 }
 
 /// Load a config file (training config + party count only).
@@ -457,6 +500,42 @@ mod tests {
         let q = dir.join("noserve.toml");
         std::fs::write(&q, "model = \"lr\"\n").unwrap();
         assert!(load_full(&q).unwrap().serve.is_none());
+    }
+
+    #[test]
+    fn obs_section_parses_and_wires() {
+        let text = r#"
+            model = "lr"
+            [obs]
+            trace_dir = "traces/run1"
+            metrics_addr = "127.0.0.1:9100"
+        "#;
+        let kv = parse_kv(text).unwrap();
+        let obs = obs_of(&kv).unwrap().expect("obs section present");
+        assert_eq!(obs.trace_dir.as_deref(), Some("traces/run1"));
+        assert_eq!(obs.metrics_addr.as_deref(), Some("127.0.0.1:9100"));
+        // obs keys must not break the TrainConfig parse
+        assert!(config_from_kv(&kv).is_ok());
+        // absent section → None; unknown keys are an error
+        assert!(obs_of(&parse_kv("model = \"lr\"\n").unwrap()).unwrap().is_none());
+        let msg = obs_of(&parse_kv("[obs]\ntypo = 1\n").unwrap()).unwrap_err().to_string();
+        assert!(msg.contains("unknown [obs] key"), "{msg}");
+
+        // load_full folds [obs] into the train + serve configs, even
+        // without an explicit [serve] section
+        let dir = std::env::temp_dir().join("efmvfl_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("obs.toml");
+        std::fs::write(&p, text).unwrap();
+        let fc = load_full(&p).unwrap();
+        assert_eq!(fc.cfg.trace_dir.as_deref(), Some("traces/run1"));
+        assert_eq!(fc.serve.unwrap().metrics_addr.as_deref(), Some("127.0.0.1:9100"));
+        // no [obs] section → tracing stays disabled
+        let q = dir.join("noobs.toml");
+        std::fs::write(&q, "model = \"lr\"\n").unwrap();
+        let fc = load_full(&q).unwrap();
+        assert_eq!(fc.cfg.trace_dir, None);
+        assert!(fc.obs.is_none());
     }
 
     #[test]

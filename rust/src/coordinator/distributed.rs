@@ -75,6 +75,11 @@ pub struct PartyReport {
     pub wall_secs: f64,
     /// Mesh-wide communication totals (`Some` on party 0 only).
     pub comm: Option<CommReport>,
+    /// Telemetry ([`crate::obs::MetricsRegistry`]): on party 0 the whole
+    /// mesh's registries merged plus the gathered network counters; on
+    /// parties 1.. this party's own registry (also pushed to party 0
+    /// over the uncounted control plane).
+    pub metrics: crate::obs::MetricsRegistry,
 }
 
 /// Train this party's block of an EFMVFL model over `transport`.
@@ -222,6 +227,8 @@ pub fn train_party<T: Transport>(
         run_seed: cfg.seed,
         packing: cfg.packing,
         plane,
+        tracer: crate::obs::Tracer::disabled(),
+        cur_iter: 0,
     };
     let input = party::PartyInput { x, y, resume };
     let result = party::run_party(&mut ctx, input, cfg, compute);
@@ -229,6 +236,14 @@ pub fn train_party<T: Transport>(
     let mut transport = ctx.ep;
 
     let comm = gather_stats(&mut transport, cfg.wire);
+    // telemetry mirrors the stats gather: registries fold to party 0
+    // over the uncounted control plane, then the now-merged byte
+    // counters in party 0's sink are absorbed exactly once
+    let mut metrics = result.metrics;
+    if let Some(merged) = crate::obs::gather_registry(&mut transport, &metrics)? {
+        metrics = merged;
+        metrics.absorb_net(transport.stats(), n);
+    }
 
     Ok(PartyReport {
         party_id: me,
@@ -238,6 +253,7 @@ pub fn train_party<T: Transport>(
         cpu_secs: result.cpu_secs,
         wall_secs,
         comm,
+        metrics,
     })
 }
 

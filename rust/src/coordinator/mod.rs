@@ -79,6 +79,11 @@ pub struct TrainConfig {
     /// Resume from the checkpoints in `checkpoint_dir` instead of
     /// starting at iteration 0.
     pub resume: bool,
+    /// Write structured trace JSONL (one `party-<id>.jsonl` per party)
+    /// into this directory ([`crate::obs`]). `None` disables tracing
+    /// entirely: spans cost nothing and runs are bit-identical to
+    /// untraced ones.
+    pub trace_dir: Option<String>,
 }
 
 impl TrainConfig {
@@ -103,6 +108,7 @@ impl TrainConfig {
             checkpoint_dir: None,
             checkpoint_every: 0,
             resume: false,
+            trace_dir: None,
         }
     }
 
@@ -169,6 +175,12 @@ impl TrainConfig {
         self.resume = on;
         self
     }
+
+    /// Builder: trace directory for structured JSONL spans.
+    pub fn with_trace_dir(mut self, dir: &str) -> Self {
+        self.trace_dir = Some(dir.to_string());
+        self
+    }
 }
 
 /// Result of a federated training run.
@@ -203,6 +215,11 @@ pub struct TrainReport {
     pub party_cpu_secs: Vec<f64>,
     /// Simulated wire time from the byte/message counts.
     pub net_secs: f64,
+    /// The merged telemetry of the run: every party's registry folded
+    /// together plus the mesh's network counters
+    /// ([`MetricsRegistry::absorb_net`]). What the `report` subcommand
+    /// and the serve gateway's `/metrics` endpoint render.
+    pub metrics: crate::obs::MetricsRegistry,
 }
 
 impl TrainReport {
@@ -328,6 +345,8 @@ pub fn train(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> {
                 run_seed: cfg.seed,
                 packing: cfg.packing,
                 plane,
+                tracer: crate::obs::Tracer::disabled(),
+                cur_iter: 0,
             };
             let input = party::PartyInput {
                 x: data.party_block(p).clone(),
@@ -348,6 +367,14 @@ pub fn train(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> {
     let losses = results[0].losses.clone();
     let iterations_run = results[0].iterations_run;
     let party_cpu_secs = results.iter().map(|r| r.cpu_secs).collect();
+    // fold every party's registry into the run-level view; the mesh's
+    // shared byte counters are absorbed exactly once (they are one sink
+    // in-process, so per-party absorption would multiply-count them)
+    let mut metrics = crate::obs::MetricsRegistry::new();
+    for r in &results {
+        metrics.merge(&r.metrics);
+    }
+    metrics.absorb_net(&stats, n);
     let weights = results.into_iter().map(|r| r.weights).collect();
 
     let net_secs = cfg.wire.transfer_secs(stats.total_bytes(), stats.total_msgs());
@@ -362,5 +389,6 @@ pub fn train(data: &VerticalSplit, cfg: &TrainConfig) -> Result<TrainReport> {
         wall_secs,
         party_cpu_secs,
         net_secs,
+        metrics,
     })
 }

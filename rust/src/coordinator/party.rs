@@ -26,11 +26,13 @@
 
 use super::persist::{checkpoint_path, TrainCheckpoint};
 use super::TrainConfig;
+use crate::benchkit::Json;
 use crate::glm::{ln_factorial, to_pm1, GlmKind};
 use crate::linalg::Matrix;
 use crate::mpc::ring;
 use crate::mpc::share::Share;
 use crate::net::{Payload, Transport};
+use crate::obs::MetricsRegistry;
 use crate::protocols::grad_operator::{protocol2_grad_operator, GradOpInputs};
 use crate::protocols::plane::BatchSchedule;
 use crate::protocols::secret_share::{protocol1_share, share_and_sum};
@@ -77,6 +79,13 @@ pub struct PartyResult {
     pub iterations_run: usize,
     /// CPU seconds this party spent (its "own server's" compute time).
     pub cpu_secs: f64,
+    /// This party's telemetry: stage-wall histograms, queue-depth and
+    /// pool-level high-water marks, iteration counters
+    /// ([`crate::obs::MetricsRegistry`]). Always populated — recording a
+    /// few scalars per iteration is free next to an HE round — and
+    /// merged to party 0 by the callers (in-process join / distributed
+    /// [`crate::obs::gather_registry`]).
+    pub metrics: MetricsRegistry,
 }
 
 /// Rows of the cyclic mini-batch for iteration `t` — the legacy
@@ -252,6 +261,21 @@ pub fn run_party<T: Transport>(
     let m_total = input.x.rows;
     let schedule = BatchSchedule::new(m_total, cfg.batch_size, cfg.shuffle, cfg.seed);
 
+    // telemetry plane: the tracer (inert unless cfg.trace_dir is set —
+    // protocol code emits spans unconditionally through ctx) and this
+    // party's metrics registry. Neither touches an RNG stream or a
+    // counted byte, so instrumented runs stay bit-identical.
+    ctx.tracer =
+        crate::obs::Tracer::from_config(cfg.trace_dir.as_deref(), me).expect("open trace dir");
+    let tracer = ctx.tracer.clone();
+    let mut metrics = MetricsRegistry::new();
+    // one preformatted key per pipeline stage: no per-iteration format!
+    let stage_keys: Vec<String> = crate::obs::PIPELINE_STAGES
+        .iter()
+        .map(|stage| format!("efmvfl_stage_wall_seconds{{party=\"{me}\",stage=\"{stage}\"}}"))
+        .collect();
+    let depth_key = format!("efmvfl_offline_queue_depth{{party=\"{me}\"}}");
+
     // line 2: W_p := 0 — or the checkpointed state when resuming
     let mut w = vec![0.0; input.x.cols];
     let mut losses = Vec::new();
@@ -304,21 +328,42 @@ pub fn run_party<T: Transport>(
 
         for t in start..cfg.iterations {
             // stage 1: prepare-batch (from the worker when pipelined)
+            let mut span = tracer.span("prepare", t);
+            let clock = std::time::Instant::now();
             let prep = pipeline.obtain(t, &w);
             let m = prep.xb.rows;
+            metrics.observe(&stage_keys[0], clock.elapsed().as_secs_f64());
+            span.field("rows", Json::Int(m as u64));
+            span.finish();
 
             // line 4: select the computing parties (all agree by seed)
             // and enter the iteration's PRNG/triple streams
+            let queue_depth = ctx.plane.as_ref().map(|p| p.queue_depth());
             ctx.cp = cfg.cp_selection.pick(n, cfg.seed, t);
             ctx.begin_iteration(t);
 
             // stage 2: mask/encrypt — Protocol 1
+            let mut span = tracer.span("mask_encrypt", t);
+            let clock = std::time::Instant::now();
             let shared = stage_mask_encrypt(ctx, t, &prep, y_all.as_ref());
+            metrics.observe(&stage_keys[1], clock.elapsed().as_secs_f64());
+            if let Some(d) = queue_depth {
+                metrics.gauge_max(&depth_key, d as f64);
+                span.field("queue_depth", Json::Int(d as u64));
+            }
+            span.finish();
 
             // stage 3: exchange — Protocols 2 + 3
+            let mut span = tracer.span("exchange", t);
+            let clock = std::time::Instant::now();
             let (g, loss_inputs) = stage_exchange(ctx, cfg.kind, &prep.xb, shared);
+            metrics.observe(&stage_keys[2], clock.elapsed().as_secs_f64());
+            span.field("is_cp", Json::Bool(ctx.is_cp()));
+            span.finish();
 
             // stage 4: combine — line 23 / eq. 6: local weight update
+            let mut span = tracer.span("combine", t);
+            let clock = std::time::Instant::now();
             for (wi, gi) in w.iter_mut().zip(&g) {
                 *wi -= cfg.learning_rate * gi;
             }
@@ -367,6 +412,9 @@ pub fn run_party<T: Transport>(
                     .expect("write training checkpoint");
                 }
             }
+            metrics.observe(&stage_keys[3], clock.elapsed().as_secs_f64());
+            span.field("stop", Json::Bool(stop));
+            span.finish();
             if stop {
                 break;
             }
@@ -374,12 +422,31 @@ pub fn run_party<T: Transport>(
         // dropping `pipeline` closes the request lane; the worker exits
     });
 
-    PartyResult {
-        weights: w,
-        losses,
-        iterations_run,
-        cpu_secs: crate::benchkit::thread_cpu_secs() - cpu_start,
+    let cpu_secs = crate::benchkit::thread_cpu_secs() - cpu_start;
+    metrics.inc(&format!("efmvfl_iterations_total{{party=\"{me}\"}}"), iterations_run as u64);
+    metrics.set_gauge(&format!("efmvfl_cpu_seconds{{party=\"{me}\"}}"), cpu_secs);
+    metrics.set_gauge(
+        &format!("efmvfl_obfuscator_pool_level{{party=\"{me}\"}}"),
+        ctx.pks[me].pool_len() as f64,
+    );
+    // one end-of-run "net" event per outgoing link: cumulative traffic
+    // this party pushed toward each peer (cheap, and only when tracing)
+    if tracer.enabled() {
+        let stats = ctx.ep.stats();
+        for to in (0..n).filter(|&to| to != me) {
+            tracer.event(
+                "net",
+                vec![
+                    ("from", Json::Int(me as u64)),
+                    ("to", Json::Int(to as u64)),
+                    ("bytes", Json::Int(stats.link_bytes(me, to))),
+                    ("msgs", Json::Int(stats.link_msgs(me, to))),
+                ],
+            );
+        }
     }
+
+    PartyResult { weights: w, losses, iterations_run, cpu_secs, metrics }
 }
 
 #[cfg(test)]

@@ -43,6 +43,8 @@ pub fn mesh_ctxs_keyed(n: usize, cp: (usize, usize), seed: u64, key_bits: usize)
             // policy mutate `ctx.packing` before spawning parties.
             packing: PackingPolicy::Auto,
             plane: None,
+            tracer: crate::obs::Tracer::disabled(),
+            cur_iter: 0,
         })
         .collect()
 }

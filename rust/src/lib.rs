@@ -42,6 +42,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod mpc;
 pub mod net;
+pub mod obs;
 pub mod protocols;
 pub mod runtime;
 pub mod serve;

@@ -13,6 +13,8 @@
 //!   client-facing micro-batching gateway, parties 1.. are daemons
 //! - `loadgen` — closed-loop load against a serving gateway, reporting
 //!   QPS and latency percentiles
+//! - `report` — summarize a `--trace-dir` from a traced run into
+//!   per-stage and per-link tables
 //! - `keygen` — time Paillier key generation at a given size
 //! - `info`   — build/runtime information (artifact status, backends)
 //! - `help`   — this text
@@ -50,7 +52,7 @@ const FLAGS: &[&'static str] = &[
     "save", "load", "config", "id", "connect-timeout", "shard", "gateway", "max-batch",
     "max-wait-ms", "max-requests", "clients", "requests", "max-ids", "max-id",
     "no-shuffle", "no-pipeline", "offline-depth", "checkpoint-dir", "checkpoint-every",
-    "resume",
+    "resume", "trace-dir", "metrics-addr",
 ];
 
 /// Every subcommand the dispatcher accepts — `help` must list each one
@@ -62,6 +64,7 @@ const SUBCOMMANDS: &[&'static str] = &[
     "run-distributed",
     "serve",
     "loadgen",
+    "report",
     "keygen",
     "info",
     "help",
@@ -104,7 +107,8 @@ fn help_text() -> String {
     s.push_str("  --offline-depth N        offline plane queue depth    [2]\n");
     s.push_str("  --checkpoint-dir DIR --checkpoint-every N\n");
     s.push_str("      write .efmc checkpoints every N iterations\n");
-    s.push_str("  --resume                 continue from the checkpoints\n\n");
+    s.push_str("  --resume                 continue from the checkpoints\n");
+    s.push_str("  --trace-dir DIR          write JSONL telemetry spans to DIR\n\n");
     s.push_str("predict: efmvfl predict --load M.efmv [--csv PATH] (in-process)\n\n");
     s.push_str("distributed mode (real TCP sockets, one OS process per party):\n");
     s.push_str("  efmvfl party --config exp.toml --id N [train flags]\n");
@@ -121,9 +125,11 @@ fn help_text() -> String {
     s.push_str("  --max-batch N            flush a round at N records   [64]\n");
     s.push_str("  --max-wait-ms MS         flush a round after MS       [5]\n");
     s.push_str("  --max-requests N         stop after N requests        [forever]\n");
+    s.push_str("  --metrics-addr HOST:PORT serve Prometheus /metrics    [off]\n");
     s.push_str("  efmvfl loadgen --gateway HOST:PORT [--requests N] [--clients N]\n");
     s.push_str("      closed-loop load; reports QPS + p50/p95/p99 latency\n");
     s.push_str("  --max-ids K --max-id M   request shape: 1..=K ids from 0..M\n\n");
+    s.push_str("report: efmvfl report --trace-dir DIR (per-stage/per-link tables)\n");
     s.push_str("keygen: efmvfl keygen --key-bits N\n");
     s.push_str("info:   efmvfl info\n");
     s.push_str("help:   efmvfl help\n");
@@ -143,6 +149,7 @@ fn run(argv: &[String]) -> Result<()> {
         "run-distributed" => cmd_run_distributed(&args, argv),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "report" => cmd_report(&args),
         "keygen" => cmd_keygen(&args),
         "info" => cmd_info(),
         other => bail!("unknown subcommand {other}; try `efmvfl help`"),
@@ -224,6 +231,9 @@ fn apply_train_overrides(args: &Args, cfg: &mut TrainConfig) -> Result<()> {
     cfg.checkpoint_every = args.get_or("checkpoint-every", cfg.checkpoint_every)?;
     if args.has("resume") {
         cfg.resume = true;
+    }
+    if let Some(dir) = args.get("trace-dir") {
+        cfg.trace_dir = Some(dir.to_string());
     }
     Ok(())
 }
@@ -547,6 +557,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(v) = args.get("max-requests") {
         serve_cfg.max_requests = Some(v.parse().context("--max-requests")?);
     }
+    if let Some(addr) = args.get("metrics-addr") {
+        serve_cfg.metrics_addr = Some(addr.to_string());
+    }
 
     // this party's weight shard + the model topology
     let (kind, n_features, weights) = match (args.get("load"), args.get("shard")) {
@@ -661,6 +674,107 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Summarize a trace directory written by a traced run (`--trace-dir`):
+/// per-stage span totals and the per-link traffic table, aggregated over
+/// every `party-*.jsonl` file in the directory.
+fn cmd_report(args: &Args) -> Result<()> {
+    use efmvfl::benchkit::{print_table, Json};
+    use std::collections::{BTreeMap, BTreeSet};
+    let dir = args
+        .get("trace-dir")
+        .ok_or_else(|| anyhow::anyhow!("report needs --trace-dir <dir> from a traced run"))?;
+
+    // stage -> (spans, wall_s, ct_exps, mont_work); protocol rounds are
+    // keyed "proto/p3" so the HE protocols stay distinguishable
+    let mut stages: BTreeMap<String, (u64, f64, u64, u64)> = BTreeMap::new();
+    let mut links: BTreeMap<(u64, u64), (u64, u64)> = BTreeMap::new();
+    let mut parties = BTreeSet::new();
+    let mut records = 0u64;
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading trace dir {dir}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            name.starts_with("party-") && name.ends_with(".jsonl")
+        })
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        bail!("no party-*.jsonl trace files in {dir}");
+    }
+    for path in &files {
+        let text = std::fs::read_to_string(path)?;
+        for (lineno, line) in text.lines().enumerate() {
+            let rec = efmvfl::obs::parse_flat_record(line)
+                .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+            let get = |k: &str| rec.iter().find(|(key, _)| key == k).map(|(_, v)| v);
+            let int = |k: &str| match get(k) {
+                Some(Json::Int(v)) => *v,
+                _ => 0,
+            };
+            let num = |k: &str| match get(k) {
+                Some(Json::Num(v)) => *v,
+                Some(Json::Int(v)) => *v as f64,
+                _ => 0.0,
+            };
+            records += 1;
+            parties.insert(int("party"));
+            match get("kind") {
+                Some(Json::Str(kind)) if kind == "span" => {
+                    let mut stage = match get("stage") {
+                        Some(Json::Str(s)) => s.clone(),
+                        _ => bail!("{}:{}: span without a stage", path.display(), lineno + 1),
+                    };
+                    if let Some(Json::Str(proto)) = get("proto") {
+                        stage = format!("{stage}/{proto}");
+                    }
+                    let slot = stages.entry(stage).or_default();
+                    slot.0 += 1;
+                    slot.1 += num("wall_s");
+                    slot.2 += int("ct_exps");
+                    slot.3 += int("mont_work");
+                }
+                Some(Json::Str(kind)) if kind == "net" => {
+                    let slot = links.entry((int("from"), int("to"))).or_default();
+                    slot.0 += int("bytes");
+                    slot.1 += int("msgs");
+                }
+                _ => {} // other event kinds carry no tabulated totals
+            }
+        }
+    }
+    println!("{records} records from {} parties in {dir}\n", parties.len());
+    println!("per-stage span totals (all parties):");
+    let rows: Vec<Vec<String>> = stages
+        .iter()
+        .map(|(stage, (n, wall, exps, work))| {
+            vec![
+                stage.clone(),
+                n.to_string(),
+                format!("{wall:.3}"),
+                exps.to_string(),
+                work.to_string(),
+            ]
+        })
+        .collect();
+    print_table(&["stage", "spans", "wall s", "ct exps", "mont work"], &rows);
+    if !links.is_empty() {
+        println!("\nper-link traffic (counted planes):");
+        let rows: Vec<Vec<String>> = links
+            .iter()
+            .map(|((from, to), (bytes, msgs))| {
+                vec![
+                    format!("{from} -> {to}"),
+                    format!("{:.3}", *bytes as f64 / 1e6),
+                    msgs.to_string(),
+                ]
+            })
+            .collect();
+        print_table(&["link", "MB", "msgs"], &rows);
+    }
+    Ok(())
+}
+
 fn cmd_keygen(args: &Args) -> Result<()> {
     let bits: usize = args.get_or("key-bits", 1024)?;
     let mut rng = efmvfl::crypto::prng::ChaChaRng::from_entropy();
@@ -692,7 +806,7 @@ mod tests {
         // probe the subcommands that fail fast on a missing required
         // flag: reaching that error proves they are dispatched (an
         // unlisted name hits the unknown-subcommand error instead)
-        for sub in ["predict", "party", "run-distributed", "serve", "loadgen"] {
+        for sub in ["predict", "party", "run-distributed", "serve", "loadgen", "report"] {
             let err = run(&[sub.to_string()]).unwrap_err().to_string();
             assert!(!err.contains("unknown subcommand"), "{sub} is not dispatched: {err}");
             assert!(err.contains("needs"), "{sub} should ask for its required flag: {err}");

@@ -84,6 +84,284 @@ impl Histogram {
     }
 }
 
+/// Bounded-memory histogram: exact samples up to
+/// [`LogHistogram::SMALL_N`] (where percentiles are nearest-rank,
+/// bit-identical to [`Histogram`]), collapsing into fixed log-spaced
+/// buckets beyond that — so a six-figure loadgen run holds a few KB
+/// instead of an unbounded `Vec<f64>`.
+///
+/// Buckets are geometric over `[1e-9, 1e9)` (~1.18× per bucket → ≤ ~9%
+/// quantile error at the bucket midpoint); values at or below `1e-9`
+/// (including zero/negatives) land in the first bucket, values ≥ `1e9`
+/// in the last. `min`/`max`/`mean` stay exact in both modes.
+#[derive(Clone, Debug, Default)]
+pub struct LogHistogram {
+    /// Exact samples while in small-n mode; empty once collapsed.
+    small: Vec<f64>,
+    /// Log-spaced bucket counts once collapsed (else empty).
+    buckets: Vec<u64>,
+    count: usize,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    /// Samples kept exactly before collapsing to buckets.
+    pub const SMALL_N: usize = 1024;
+    /// Number of log-spaced buckets after collapse.
+    pub const BUCKETS: usize = 256;
+    const LO: f64 = 1e-9;
+    const HI: f64 = 1e9;
+
+    /// Empty histogram.
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v.is_nan() || v <= Self::LO {
+            // NaN, negatives, zero and tiny values underflow to bucket 0
+            return 0;
+        }
+        if v >= Self::HI {
+            return Self::BUCKETS - 1;
+        }
+        let span = (Self::HI / Self::LO).ln();
+        let idx = ((v / Self::LO).ln() / span * Self::BUCKETS as f64) as usize;
+        idx.min(Self::BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of bucket `i` (its representative value).
+    fn bucket_mid(i: usize) -> f64 {
+        let span = (Self::HI / Self::LO).ln();
+        Self::LO * ((i as f64 + 0.5) / Self::BUCKETS as f64 * span).exp()
+    }
+
+    fn collapse(&mut self) {
+        if !self.small.is_empty() || self.buckets.is_empty() {
+            let mut buckets = vec![0u64; Self::BUCKETS];
+            if !self.buckets.is_empty() {
+                buckets.copy_from_slice(&self.buckets);
+            }
+            for &v in &self.small {
+                buckets[Self::bucket_of(v)] += 1;
+            }
+            self.small = Vec::new();
+            self.buckets = buckets;
+        }
+    }
+
+    /// True while percentiles are still exact (small-n mode).
+    pub fn is_exact(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// Record one sample.
+    pub fn add(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+        if self.is_exact() && self.small.len() < Self::SMALL_N {
+            self.small.push(v);
+        } else {
+            self.collapse();
+            self.buckets[Self::bucket_of(v)] += 1;
+        }
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Sum of all samples (exact in both modes).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Smallest sample (NaN when empty; exact in both modes).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest sample (NaN when empty; exact in both modes).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Arithmetic mean (NaN when empty; exact in both modes).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Percentile `q` in [0, 100]: exact nearest-rank in small-n mode
+    /// (identical to [`Histogram::percentile`]); in bucket mode, the
+    /// representative of the bucket holding the nearest-rank sample,
+    /// clamped to the exact `[min, max]` envelope.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.is_exact() {
+            let mut sorted = self.small.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let n = sorted.len();
+            let rank = ((q / 100.0) * n as f64).ceil() as usize;
+            return sorted[rank.clamp(1, n) - 1];
+        }
+        let rank = (((q / 100.0) * self.count as f64).ceil() as usize).clamp(1, self.count) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median.
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// 95th percentile.
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Fold another histogram in. Stays exact while the combined
+    /// population fits the small-n budget; collapses both otherwise.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+        self.count += other.count;
+        let both_small = self.small.len() + other.small.len() <= Self::SMALL_N;
+        if self.is_exact() && other.is_exact() && both_small {
+            self.small.extend_from_slice(&other.small);
+            return;
+        }
+        self.collapse();
+        if other.is_exact() {
+            for &v in &other.small {
+                self.buckets[Self::bucket_of(v)] += 1;
+            }
+        } else {
+            for (mine, theirs) in self.buckets.iter_mut().zip(&other.buckets) {
+                *mine += theirs;
+            }
+        }
+    }
+
+    /// Wire encoding for the telemetry control plane (single line, space
+    /// separated; f64 as exact bit patterns).
+    pub fn to_wire(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = format!(
+            "{} {:016x} {:016x} {:016x}",
+            self.count,
+            self.sum.to_bits(),
+            self.min.to_bits(),
+            self.max.to_bits()
+        );
+        if self.is_exact() {
+            out.push_str(" s");
+            for v in &self.small {
+                let _ = write!(out, " {:016x}", v.to_bits());
+            }
+        } else {
+            out.push_str(" b");
+            for (i, &c) in self.buckets.iter().enumerate() {
+                if c > 0 {
+                    let _ = write!(out, " {i}:{c}");
+                }
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`LogHistogram::to_wire`].
+    pub fn from_wire(s: &str) -> anyhow::Result<LogHistogram> {
+        use anyhow::anyhow;
+        let mut it = s.split_whitespace();
+        let mut next = |what: &str| {
+            it.next()
+                .ok_or_else(|| anyhow!("histogram wire truncated at {what}"))
+        };
+        let count: usize = next("count")?
+            .parse()
+            .map_err(|_| anyhow!("bad histogram count"))?;
+        let mut bits = |what: &str| -> anyhow::Result<f64> {
+            Ok(f64::from_bits(
+                u64::from_str_radix(next(what)?, 16)
+                    .map_err(|_| anyhow!("bad histogram {what}"))?,
+            ))
+        };
+        let (sum, min, max) = (bits("sum")?, bits("min")?, bits("max")?);
+        let mut h = LogHistogram { count, sum, min, max, ..LogHistogram::default() };
+        match next("mode")? {
+            "s" => {
+                for tok in it {
+                    h.small.push(f64::from_bits(
+                        u64::from_str_radix(tok, 16)
+                            .map_err(|_| anyhow!("bad histogram sample"))?,
+                    ));
+                }
+                if h.small.len() != count {
+                    anyhow::bail!("histogram sample count mismatch");
+                }
+            }
+            "b" => {
+                h.buckets = vec![0u64; Self::BUCKETS];
+                for tok in it {
+                    let (i, c) = tok
+                        .split_once(':')
+                        .ok_or_else(|| anyhow!("bad histogram bucket {tok:?}"))?;
+                    let i: usize = i.parse().map_err(|_| anyhow!("bad bucket index"))?;
+                    if i >= Self::BUCKETS {
+                        anyhow::bail!("bucket index {i} out of range");
+                    }
+                    h.buckets[i] = c.parse().map_err(|_| anyhow!("bad bucket count"))?;
+                }
+            }
+            other => anyhow::bail!("bad histogram mode {other:?}"),
+        }
+        Ok(h)
+    }
+}
+
 /// Event counter with a wall-clock rate — loadgen's QPS figure.
 #[derive(Clone, Debug)]
 pub struct Throughput {
@@ -338,6 +616,131 @@ mod tests {
         assert_eq!(a.count(), 100);
         assert_eq!(a.p50(), 50.0);
         assert_eq!(a.max(), 100.0);
+    }
+
+    #[test]
+    fn log_histogram_small_n_matches_vec_histogram_exactly() {
+        // below SMALL_N the bounded histogram must be bit-identical to
+        // the exact Vec-backed one, including edge quantiles
+        let mut exact = Histogram::new();
+        let mut bounded = LogHistogram::new();
+        let mut v = 0.7f64;
+        for _ in 0..LogHistogram::SMALL_N {
+            v = (v * 1103.5153).fract() * 10.0; // deterministic pseudo-samples
+            exact.add(v);
+            bounded.add(v);
+        }
+        assert!(bounded.is_exact());
+        assert_eq!(exact.count(), bounded.count());
+        for q in [0.0, 1.0, 25.0, 50.0, 75.0, 95.0, 99.0, 100.0] {
+            assert_eq!(exact.percentile(q).to_bits(), bounded.percentile(q).to_bits(), "q={q}");
+        }
+        assert_eq!(exact.min().to_bits(), bounded.min().to_bits());
+        assert_eq!(exact.max().to_bits(), bounded.max().to_bits());
+        assert_eq!(exact.mean().to_bits(), bounded.mean().to_bits());
+    }
+
+    #[test]
+    fn log_histogram_collapses_and_stays_close() {
+        let n = 20_000;
+        let mut exact = Histogram::new();
+        let mut bounded = LogHistogram::new();
+        let mut v = 0.3f64;
+        for _ in 0..n {
+            v = (v * 997.1317).fract(); // latencies in (0, 1)
+            exact.add(v);
+            bounded.add(v);
+        }
+        assert!(!bounded.is_exact(), "must have collapsed past SMALL_N");
+        assert_eq!(bounded.count(), n);
+        assert_eq!(bounded.min(), exact.min());
+        assert_eq!(bounded.max(), exact.max());
+        assert!((bounded.mean() - exact.mean()).abs() < 1e-9);
+        for q in [50.0, 95.0, 99.0] {
+            let (e, b) = (exact.percentile(q), bounded.percentile(q));
+            assert!((b - e).abs() / e < 0.10, "q={q}: exact {e} vs bucketed {b}");
+        }
+        // bounded memory: the samples vec is gone
+        assert!(bounded.small.is_empty());
+        assert_eq!(bounded.buckets.len(), LogHistogram::BUCKETS);
+    }
+
+    #[test]
+    fn log_histogram_handles_extremes_and_empty() {
+        let empty = LogHistogram::new();
+        assert!(empty.percentile(50.0).is_nan());
+        assert!(empty.mean().is_nan());
+        assert!(empty.min().is_nan());
+        assert_eq!(empty.count(), 0);
+        let mut h = LogHistogram::new();
+        for v in [0.0, -5.0, 1e-12, 1e12, f64::NAN] {
+            h.add(v);
+        }
+        assert_eq!(h.count(), 5);
+        // out-of-range values survive collapse in the edge buckets
+        for _ in 0..LogHistogram::SMALL_N {
+            h.add(1.0);
+        }
+        assert!(!h.is_exact());
+        assert!(h.percentile(50.0) > 0.9 && h.percentile(50.0) < 1.1);
+    }
+
+    #[test]
+    fn log_histogram_merge_modes() {
+        // small + small staying small: exact merge
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for v in 1..=50 {
+            a.add(v as f64);
+            b.add((v + 50) as f64);
+        }
+        a.merge(&b);
+        assert!(a.is_exact());
+        assert_eq!(a.count(), 100);
+        assert_eq!(a.p50(), 50.0);
+        assert_eq!(a.max(), 100.0);
+        // merging into empty clones the other side
+        let mut c = LogHistogram::new();
+        c.merge(&a);
+        assert_eq!(c.count(), 100);
+        c.merge(&LogHistogram::new());
+        assert_eq!(c.count(), 100);
+        // small + big: collapses, counts add, envelope exact
+        let mut big = LogHistogram::new();
+        for i in 0..(LogHistogram::SMALL_N * 2) {
+            big.add(0.001 * (1 + i % 7) as f64);
+        }
+        let before = big.count();
+        big.merge(&a);
+        assert!(!big.is_exact());
+        assert_eq!(big.count(), before + 100);
+        assert_eq!(big.max(), 100.0);
+    }
+
+    #[test]
+    fn log_histogram_wire_roundtrip() {
+        let mut small = LogHistogram::new();
+        for v in [0.25, 3.0, 1e-3] {
+            small.add(v);
+        }
+        let back = LogHistogram::from_wire(&small.to_wire()).unwrap();
+        assert!(back.is_exact());
+        assert_eq!(back.count(), 3);
+        assert_eq!(back.percentile(50.0), 0.25);
+        assert_eq!(back.sum().to_bits(), small.sum().to_bits());
+        let mut big = LogHistogram::new();
+        for i in 0..(LogHistogram::SMALL_N + 10) {
+            big.add((i % 13) as f64 + 0.5);
+        }
+        let back = LogHistogram::from_wire(&big.to_wire()).unwrap();
+        assert!(!back.is_exact());
+        assert_eq!(back.count(), big.count());
+        assert_eq!(back.p99().to_bits(), big.p99().to_bits());
+        assert_eq!(back.min(), big.min());
+        assert!(LogHistogram::from_wire("3 zz").is_err());
+        assert!(LogHistogram::from_wire("").is_err());
+        assert!(LogHistogram::from_wire("1 0 0 0 b 999:1").is_err());
+        assert!(LogHistogram::from_wire("2 0 0 0 s 0000000000000000").is_err());
     }
 
     #[test]

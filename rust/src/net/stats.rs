@@ -118,6 +118,11 @@ impl NetStats {
         self.bytes[from * self.n + to].load(Ordering::Relaxed)
     }
 
+    /// Messages sent from `from` to `to`.
+    pub fn link_msgs(&self, from: usize, to: usize) -> u64 {
+        self.msgs[from * self.n + to].load(Ordering::Relaxed)
+    }
+
     /// Total online megabytes (the tables' `comm` column).
     pub fn total_mb(&self) -> f64 {
         self.total_bytes() as f64 / 1e6
@@ -215,6 +220,45 @@ mod tests {
         assert_eq!(sink.offline_bytes(), 24);
         assert_eq!(sink.triple_bytes(), 16);
         assert_eq!(sink.cipher_bytes(), 64);
+    }
+
+    #[test]
+    fn all_counter_classes_survive_export_merge() {
+        // every counter class — online bytes/msgs per link, offline,
+        // triples, cipher — through a full mesh-wide export/merge cycle
+        let n = 3;
+        let locals: Vec<NetStats> = (0..n).map(|_| NetStats::new(n)).collect();
+        for (me, local) in locals.iter().enumerate() {
+            for to in 0..n {
+                if to != me {
+                    local.record(me, to, 100 * me + to + 1);
+                    local.record(me, to, 10);
+                }
+            }
+            local.record_offline(1000 + me);
+            local.record_offline_triples(50 * (me + 1));
+            local.record_cipher(7 * (me + 1));
+        }
+        let sink = NetStats::new(n);
+        for (me, local) in locals.iter().enumerate() {
+            let row = local.export_row(me);
+            assert_eq!(row.len(), 2 * n + 3);
+            sink.merge_row(me, &row);
+        }
+        for (me, local) in locals.iter().enumerate() {
+            for to in 0..n {
+                assert_eq!(sink.link_bytes(me, to), local.link_bytes(me, to));
+                assert_eq!(sink.link_msgs(me, to), local.link_msgs(me, to));
+            }
+        }
+        assert_eq!(
+            sink.total_bytes(),
+            locals.iter().map(|l| l.total_bytes()).sum::<u64>()
+        );
+        assert_eq!(sink.total_msgs(), 2 * 2 * n as u64);
+        assert_eq!(sink.offline_bytes(), (1000 + 1001 + 1002) + (50 + 100 + 150));
+        assert_eq!(sink.triple_bytes(), 50 + 100 + 150);
+        assert_eq!(sink.cipher_bytes(), 7 + 14 + 21);
     }
 
     #[test]

@@ -204,24 +204,28 @@ pub fn connect_mesh_with_listener(
                 let peer = match read_handshake(&mut s, n) {
                     Ok(p) => p,
                     Err(e) => {
-                        eprintln!("party {me}: rejecting inbound {peer_addr}: {e}");
+                        crate::obs::log!(warn, "party {me}: rejecting inbound {peer_addr}: {e}");
                         continue;
                     }
                 };
                 if peer >= me {
-                    eprintln!(
+                    crate::obs::log!(
+                        warn,
                         "party {me}: rejecting party {peer} dialing in (lower ids dial higher)"
                     );
                     continue;
                 }
                 if streams[peer].is_some() {
-                    eprintln!("party {me}: rejecting duplicate connection from party {peer}");
+                    crate::obs::log!(
+                        warn,
+                        "party {me}: rejecting duplicate connection from party {peer}"
+                    );
                     continue;
                 }
                 if let Err(e) = write_handshake(&mut s, me, n) {
                     // the peer vanished mid-handshake; its restart will
                     // dial in again within the deadline
-                    eprintln!("party {me}: peer {peer} dropped during handshake: {e}");
+                    crate::obs::log!(warn, "party {me}: peer {peer} dropped during handshake: {e}");
                     continue;
                 }
                 s.set_read_timeout(None)?;
@@ -334,7 +338,7 @@ fn read_frames(peer: usize, mut stream: TcpStream, tx: Sender<Frame>) {
             // name the corruption before dropping the link, so the
             // waiting side's "disconnected" panic is diagnosable
             let why = format!("from={from} tag_len={tag_len} body_len={body_len}");
-            eprintln!("dropping link to party {peer}: corrupt frame header ({why})");
+            crate::obs::log!(error, "dropping link to party {peer}: corrupt frame header ({why})");
             return;
         }
         let mut tag_buf = vec![0u8; tag_len];
@@ -342,7 +346,7 @@ fn read_frames(peer: usize, mut stream: TcpStream, tx: Sender<Frame>) {
             return;
         }
         let Ok(tag) = String::from_utf8(tag_buf) else {
-            eprintln!("dropping link to party {peer}: non-UTF-8 frame tag");
+            crate::obs::log!(error, "dropping link to party {peer}: non-UTF-8 frame tag");
             return;
         };
         let mut bytes = vec![0u8; body_len];

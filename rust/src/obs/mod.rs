@@ -1,0 +1,968 @@
+//! The unified telemetry plane: structured tracing, a mergeable metrics
+//! registry, leveled logging, and a Prometheus-text `/metrics` endpoint.
+//!
+//! The repo grew observability organs in isolation — [`crate::metrics`]
+//! histograms for loadgen, [`crate::net::NetStats`] wire counters,
+//! [`crate::bignum::modular::perf`] op counters, ad-hoc `eprintln!` in
+//! the mesh code. This module fuses them behind three instruments:
+//!
+//! - **[`Tracer`]/[`Span`]** — per-party structured tracing written as
+//!   one-record-per-line JSON (JSONL) to `--trace-dir`. Every span
+//!   carries the party id, iteration, pipeline stage, wall time, and the
+//!   HE op-count deltas ([`crate::crypto::he_ops::perf`] ciphertext
+//!   exponentiations, Montgomery work units) measured across the span.
+//!   The disabled path is zero-cost: a disabled tracer hands out inert
+//!   spans without reading the clock, sampling counters, or allocating,
+//!   so a run with tracing off is bit-identical to an uninstrumented
+//!   build (asserted in `tests/trace_obs.rs`).
+//! - **[`MetricsRegistry`]** — counters, gauges and bounded-memory
+//!   [`crate::metrics::LogHistogram`]s keyed by Prometheus-style names
+//!   with labels baked in (`stage_wall_seconds{party="0",stage="exchange"}`),
+//!   so registries from different parties merge without collisions.
+//!   Registries travel to party 0 over the *uncounted* control plane
+//!   ([`gather_registry`]) — telemetry never perturbs the comm totals it
+//!   reports.
+//! - **[`MetricsServer`]** — a minimal HTTP responder exposing a live
+//!   registry in Prometheus text exposition format (`--metrics-addr` on
+//!   the serve gateway).
+//!
+//! Logging: the [`log!`](crate::obs_log) macro replaces scattered
+//! `eprintln!` with `error/warn/info/debug` levels gated by the
+//! `EFMVFL_LOG` env var (default `warn`), so mesh noise is controllable
+//! in tests.
+
+use crate::benchkit::Json;
+use crate::metrics::LogHistogram;
+use crate::net::Transport;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// The `[obs]` section of a run configuration: where traces go and where
+/// the live metrics endpoint listens. Both default to off.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObsConfig {
+    /// Directory for per-party `party-<id>.jsonl` trace files.
+    pub trace_dir: Option<String>,
+    /// `host:port` for the gateway's Prometheus `/metrics` endpoint.
+    pub metrics_addr: Option<String>,
+}
+
+// ---------------------------------------------------------------------
+// Leveled logging
+// ---------------------------------------------------------------------
+
+/// Log severity, most severe first. The active threshold comes from
+/// `EFMVFL_LOG` (`error`/`warn`/`info`/`debug`), read once per process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or dropped-work conditions (dead links, failed rounds).
+    Error = 0,
+    /// Suspicious but survivable (rejected connections, fallbacks). Default.
+    Warn = 1,
+    /// Lifecycle landmarks.
+    Info = 2,
+    /// Per-message noise.
+    Debug = 3,
+}
+
+impl Level {
+    /// Lowercase tag used in the output prefix.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Parse an `EFMVFL_LOG` value; unknown or absent values keep the
+/// default (`warn`).
+pub fn parse_level(s: Option<&str>) -> Level {
+    match s.map(str::trim) {
+        Some("error") => Level::Error,
+        Some("warn") => Level::Warn,
+        Some("info") => Level::Info,
+        Some("debug") => Level::Debug,
+        _ => Level::Warn,
+    }
+}
+
+static MAX_LEVEL: OnceLock<Level> = OnceLock::new();
+
+/// The process-wide log threshold (computed once from `EFMVFL_LOG`).
+pub fn max_level() -> Level {
+    *MAX_LEVEL.get_or_init(|| parse_level(std::env::var("EFMVFL_LOG").ok().as_deref()))
+}
+
+/// True when messages at `level` should be emitted. The `log!` macro
+/// checks this *before* formatting, so suppressed messages cost one
+/// atomic load and no allocation.
+pub fn log_enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Emit one formatted log line to stderr (the macro's backend).
+pub fn log_emit(level: Level, args: std::fmt::Arguments<'_>) {
+    eprintln!("[efmvfl {}] {args}", level.as_str());
+}
+
+/// Leveled logging: `obs::log!(warn, "party {me}: {err}")`. Levels are
+/// the lowercase idents `error`, `warn`, `info`, `debug`; messages below
+/// the `EFMVFL_LOG` threshold are skipped before formatting.
+#[macro_export]
+macro_rules! obs_log {
+    (error, $($arg:tt)*) => { $crate::obs_log!(@emit Error, $($arg)*) };
+    (warn,  $($arg:tt)*) => { $crate::obs_log!(@emit Warn,  $($arg)*) };
+    (info,  $($arg:tt)*) => { $crate::obs_log!(@emit Info,  $($arg)*) };
+    (debug, $($arg:tt)*) => { $crate::obs_log!(@emit Debug, $($arg)*) };
+    (@emit $lvl:ident, $($arg:tt)*) => {
+        if $crate::obs::log_enabled($crate::obs::Level::$lvl) {
+            $crate::obs::log_emit($crate::obs::Level::$lvl, format_args!($($arg)*));
+        }
+    };
+}
+
+pub use crate::obs_log as log;
+
+// ---------------------------------------------------------------------
+// Structured tracing
+// ---------------------------------------------------------------------
+
+/// The four online pipeline stages of a training iteration, in order.
+/// `scripts/check_trace.py` asserts every iteration of every party's
+/// trace covers all four.
+pub const PIPELINE_STAGES: [&str; 4] = ["prepare", "mask_encrypt", "exchange", "combine"];
+
+struct TraceInner {
+    party: usize,
+    out: Mutex<std::io::BufWriter<std::fs::File>>,
+}
+
+impl TraceInner {
+    fn write_line(&self, line: &str) {
+        let mut out = self.out.lock().unwrap();
+        let _ = writeln!(out, "{line}");
+        let _ = out.flush(); // traces are post-mortem artifacts: never lose the tail
+    }
+}
+
+/// Handle for one party's trace stream. Cloning shares the underlying
+/// writer; a disabled tracer ([`Tracer::disabled`]) makes every
+/// operation a no-op with no clock reads or allocation.
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Option<Arc<TraceInner>>,
+}
+
+impl Tracer {
+    /// The no-op tracer (tracing off).
+    pub fn disabled() -> Tracer {
+        Tracer { inner: None }
+    }
+
+    /// Open `dir/party-<party>.jsonl` for writing (creating `dir`).
+    pub fn to_dir(dir: &str, party: usize) -> Result<Tracer> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow!("creating trace dir {dir}: {e}"))?;
+        let path = std::path::Path::new(dir).join(format!("party-{party}.jsonl"));
+        let file = std::fs::File::create(&path)
+            .map_err(|e| anyhow!("creating trace file {}: {e}", path.display()))?;
+        Ok(Tracer {
+            inner: Some(Arc::new(TraceInner {
+                party,
+                out: Mutex::new(std::io::BufWriter::new(file)),
+            })),
+        })
+    }
+
+    /// [`Tracer::to_dir`] when a directory is configured, else disabled.
+    pub fn from_config(trace_dir: Option<&str>, party: usize) -> Result<Tracer> {
+        match trace_dir {
+            Some(dir) => Tracer::to_dir(dir, party),
+            None => Ok(Tracer::disabled()),
+        }
+    }
+
+    /// True when records are actually being written.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a span for `stage` of iteration `t`. On an enabled tracer
+    /// this samples the clock and the HE op counters; on a disabled one
+    /// it returns an inert span (no work at all).
+    pub fn span(&self, stage: &'static str, t: usize) -> Span {
+        match &self.inner {
+            None => Span { state: None },
+            Some(inner) => Span {
+                state: Some(Box::new(SpanState {
+                    tracer: inner.clone(),
+                    stage,
+                    t,
+                    started: Instant::now(),
+                    ct_exps0: crate::crypto::he_ops::perf::ct_exps(),
+                    mont0: crate::bignum::modular::perf::snapshot(),
+                    fields: Vec::new(),
+                })),
+            },
+        }
+    }
+
+    /// Write a free-form record `{"kind": <kind>, "party": N, ...fields}`.
+    /// Scalars only — the trace schema is deliberately flat.
+    pub fn event(&self, kind: &str, fields: Vec<(&str, Json)>) {
+        let Some(inner) = &self.inner else { return };
+        let mut pairs = vec![
+            ("kind", Json::str(kind)),
+            ("party", Json::Int(inner.party as u64)),
+        ];
+        pairs.extend(fields);
+        inner.write_line(&Json::obj(pairs).render_compact());
+    }
+}
+
+struct SpanState {
+    tracer: Arc<TraceInner>,
+    stage: &'static str,
+    t: usize,
+    started: Instant,
+    ct_exps0: u64,
+    mont0: crate::bignum::modular::perf::Snapshot,
+    fields: Vec<(&'static str, Json)>,
+}
+
+/// An open trace span. [`Span::finish`] writes the record; a span from a
+/// disabled tracer is a single `None` and every method is free.
+pub struct Span {
+    state: Option<Box<SpanState>>,
+}
+
+impl Span {
+    /// Attach an extra scalar field (queue depth, batch rows, protocol
+    /// tag…). No-op on a disabled span.
+    pub fn field(&mut self, key: &'static str, value: Json) {
+        if let Some(state) = &mut self.state {
+            state.fields.push((key, value));
+        }
+    }
+
+    /// Close the span: measure wall time and counter deltas, write one
+    /// JSONL record. Note the HE counters are process-wide atomics — in
+    /// an in-process mesh the per-span deltas mix concurrently-running
+    /// party threads; per-process (distributed) runs attribute exactly.
+    pub fn finish(self) {
+        let Some(state) = self.state else { return };
+        let wall = state.started.elapsed().as_secs_f64();
+        let ct_exps = crate::crypto::he_ops::perf::ct_exps() - state.ct_exps0;
+        let mont = crate::bignum::modular::perf::snapshot().delta_since(&state.mont0);
+        let mut pairs = vec![
+            ("kind", Json::str("span")),
+            ("party", Json::Int(state.tracer.party as u64)),
+            ("t", Json::Int(state.t as u64)),
+            ("stage", Json::str(state.stage)),
+            ("wall_s", Json::Num(wall)),
+            ("ct_exps", Json::Int(ct_exps)),
+            ("mont_sqrs", Json::Int(mont.sqrs)),
+            ("mont_muls", Json::Int(mont.muls)),
+            ("mont_work", Json::Int(mont.work)),
+        ];
+        pairs.extend(state.fields.iter().map(|(k, v)| (*k, v.clone())));
+        state.tracer.write_line(&Json::obj(pairs).render_compact());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Flat-JSON record parsing (the `report` subcommand's reader)
+// ---------------------------------------------------------------------
+
+/// Parse one flat JSONL trace record — an object of scalar values
+/// (string/number/bool/null), which is all the tracer ever writes.
+/// Nested arrays/objects are rejected.
+pub fn parse_flat_record(line: &str) -> Result<Vec<(String, Json)>> {
+    let mut p = FlatParser { s: line.as_bytes(), i: 0 };
+    p.skip_ws();
+    p.expect(b'{')?;
+    let mut out = Vec::new();
+    p.skip_ws();
+    if p.peek() == Some(b'}') {
+        p.i += 1;
+        return Ok(out);
+    }
+    loop {
+        p.skip_ws();
+        let key = p.string()?;
+        p.skip_ws();
+        p.expect(b':')?;
+        p.skip_ws();
+        out.push((key, p.scalar()?));
+        p.skip_ws();
+        match p.next() {
+            Some(b',') => continue,
+            Some(b'}') => break,
+            other => bail!("expected ',' or '}}', got {other:?}"),
+        }
+    }
+    p.skip_ws();
+    if p.i != p.s.len() {
+        bail!("trailing bytes after record");
+    }
+    Ok(out)
+}
+
+struct FlatParser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl FlatParser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+    fn next(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.i += 1;
+        Some(c)
+    }
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\r' | b'\n')) {
+            self.i += 1;
+        }
+    }
+    fn expect(&mut self, c: u8) -> Result<()> {
+        match self.next() {
+            Some(got) if got == c => Ok(()),
+            got => bail!("expected {:?}, got {got:?}", c as char),
+        }
+    }
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.next() {
+                None => bail!("unterminated string"),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.next() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = self.next().ok_or_else(|| anyhow!("short \\u escape"))?;
+                            code = code * 16
+                                + (d as char)
+                                    .to_digit(16)
+                                    .ok_or_else(|| anyhow!("bad \\u digit"))?;
+                        }
+                        out.push(
+                            char::from_u32(code).ok_or_else(|| anyhow!("bad \\u codepoint"))?,
+                        );
+                    }
+                    other => bail!("bad escape {other:?}"),
+                },
+                Some(c) if c < 0x80 => out.push(c as char),
+                Some(c) => {
+                    // re-assemble a UTF-8 multibyte sequence
+                    let start = self.i - 1;
+                    let len = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    if start + len > self.s.len() {
+                        bail!("truncated UTF-8 sequence");
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.s[start..start + len])
+                            .map_err(|e| anyhow!("bad UTF-8 in string: {e}"))?,
+                    );
+                    self.i = start + len;
+                }
+            }
+        }
+    }
+    fn scalar(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'{') | Some(b'[') => bail!("nested values not allowed in flat records"),
+            Some(_) => {
+                let start = self.i;
+                while matches!(
+                    self.peek(),
+                    Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                ) {
+                    self.i += 1;
+                }
+                let text = std::str::from_utf8(&self.s[start..self.i]).unwrap();
+                if let Ok(v) = text.parse::<u64>() {
+                    return Ok(Json::Int(v));
+                }
+                text.parse::<f64>()
+                    .map(Json::Num)
+                    .map_err(|_| anyhow!("bad number {text:?}"))
+            }
+            None => bail!("unexpected end of record"),
+        }
+    }
+    fn literal(&mut self, lit: &str, val: Json) -> Result<Json> {
+        if self.s[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(val)
+        } else {
+            bail!("bad literal at byte {}", self.i)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Metrics registry
+// ---------------------------------------------------------------------
+
+/// Per-party metrics: monotone counters, last-write gauges, and
+/// bounded-memory histograms, keyed by Prometheus-style names with the
+/// labels baked into the key (`stage_wall_seconds{party="1",stage="exchange"}`).
+/// Baking labels in makes cross-party merging collision-free by
+/// construction: two parties never write the same key unless the metric
+/// is genuinely shared (counters add, gauges keep the max, histograms
+/// merge).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histos: BTreeMap<String, LogHistogram>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histos.is_empty()
+    }
+
+    /// Add `delta` to counter `name`.
+    pub fn inc(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set gauge `name` to `v`.
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Raise gauge `name` to `v` if higher (high-water marks: queue
+    /// depths, pool levels).
+    pub fn gauge_max(&mut self, name: &str, v: f64) {
+        let g = self.gauges.entry(name.to_string()).or_insert(f64::NEG_INFINITY);
+        if v > *g {
+            *g = v;
+        }
+    }
+
+    /// Record a sample into histogram `name`.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histos.entry(name.to_string()).or_default().add(v);
+    }
+
+    /// Counter value (0 when never written).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value (NaN when never written).
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(f64::NAN)
+    }
+
+    /// Histogram by name, if any samples were recorded.
+    pub fn histogram(&self, name: &str) -> Option<&LogHistogram> {
+        self.histos.get(name)
+    }
+
+    /// Fold another registry in: counters add, gauges keep the max,
+    /// histograms merge. Per-party label baking means same-key writes
+    /// only happen for metrics that are meaningfully combinable.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauge_max(k, *v);
+        }
+        for (k, h) in &other.histos {
+            self.histos.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    /// Absorb a (merged or shared) [`crate::net::NetStats`] sink into
+    /// per-link counters plus the three byte-class totals. Call this once
+    /// per mesh on the fully-merged stats (after
+    /// [`crate::coordinator::distributed::gather_stats`] in distributed
+    /// mode; the in-process mesh shares one sink already) — the class
+    /// counters are process-wide, so absorbing per party would multiply
+    /// count them.
+    pub fn absorb_net(&mut self, stats: &crate::net::NetStats, n_parties: usize) {
+        for from in 0..n_parties {
+            for to in 0..n_parties {
+                let bytes = stats.link_bytes(from, to);
+                let msgs = stats.link_msgs(from, to);
+                if bytes == 0 && msgs == 0 {
+                    continue;
+                }
+                self.inc(&format!("efmvfl_link_bytes_total{{from=\"{from}\",to=\"{to}\"}}"), bytes);
+                self.inc(&format!("efmvfl_link_msgs_total{{from=\"{from}\",to=\"{to}\"}}"), msgs);
+            }
+        }
+        self.inc("efmvfl_offline_bytes_total", stats.offline_bytes());
+        self.inc("efmvfl_triple_bytes_total", stats.triple_bytes());
+        self.inc("efmvfl_cipher_bytes_total", stats.cipher_bytes());
+    }
+
+    /// Serialize for the control plane (line-based text; f64 as exact
+    /// bit patterns so merge-then-compare is deterministic).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            debug_assert!(!k.chars().any(char::is_whitespace), "metric name {k:?}");
+            out.push_str(&format!("c {k} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("g {k} {:016x}\n", v.to_bits()));
+        }
+        for (k, h) in &self.histos {
+            out.push_str(&format!("h {k} {}\n", h.to_wire()));
+        }
+        out.into_bytes()
+    }
+
+    /// Inverse of [`MetricsRegistry::encode`].
+    pub fn decode(bytes: &[u8]) -> Result<MetricsRegistry> {
+        let text = std::str::from_utf8(bytes).map_err(|e| anyhow!("registry not UTF-8: {e}"))?;
+        let mut reg = MetricsRegistry::new();
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.splitn(3, ' ');
+            let (tag, name, rest) = (
+                parts.next().unwrap_or(""),
+                parts.next().ok_or_else(|| anyhow!("registry line missing name: {line:?}"))?,
+                parts.next().ok_or_else(|| anyhow!("registry line missing value: {line:?}"))?,
+            );
+            match tag {
+                "c" => {
+                    let v: u64 = rest.parse().map_err(|_| anyhow!("bad counter {line:?}"))?;
+                    reg.inc(name, v);
+                }
+                "g" => {
+                    let bits = u64::from_str_radix(rest, 16)
+                        .map_err(|_| anyhow!("bad gauge {line:?}"))?;
+                    reg.gauges.insert(name.to_string(), f64::from_bits(bits));
+                }
+                "h" => {
+                    reg.histos.insert(name.to_string(), LogHistogram::from_wire(rest)?);
+                }
+                _ => bail!("unknown registry line tag {tag:?}"),
+            }
+        }
+        Ok(reg)
+    }
+
+    /// Render in Prometheus text exposition format (v0.0.4). Counters
+    /// and gauges are emitted directly; histograms as summaries (p50,
+    /// p95, p99 quantile samples plus `_sum`/`_count`).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_base = String::new();
+        let mut type_line = |out: &mut String, key: &str, kind: &str, last: &mut String| {
+            let base = key.split('{').next().unwrap_or(key);
+            if base != last {
+                out.push_str(&format!("# TYPE {base} {kind}\n"));
+                *last = base.to_string();
+            }
+        };
+        for (k, v) in &self.counters {
+            type_line(&mut out, k, "counter", &mut last_base);
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        last_base.clear();
+        for (k, v) in &self.gauges {
+            type_line(&mut out, k, "gauge", &mut last_base);
+            out.push_str(&format!("{k} {}\n", fmt_prom(*v)));
+        }
+        last_base.clear();
+        for (k, h) in &self.histos {
+            type_line(&mut out, k, "summary", &mut last_base);
+            let (base, labels) = match k.split_once('{') {
+                Some((b, rest)) => (b, rest.trim_end_matches('}')),
+                None => (k.as_str(), ""),
+            };
+            let with = |extra: &str| {
+                if labels.is_empty() {
+                    format!("{base}{{{extra}}}")
+                } else {
+                    format!("{base}{{{labels},{extra}}}")
+                }
+            };
+            for (q, label) in [(50.0, "0.5"), (95.0, "0.95"), (99.0, "0.99")] {
+                out.push_str(&format!(
+                    "{} {}\n",
+                    with(&format!("quantile=\"{label}\"")),
+                    fmt_prom(h.percentile(q))
+                ));
+            }
+            let (sum_name, count_name) = if labels.is_empty() {
+                (format!("{base}_sum"), format!("{base}_count"))
+            } else {
+                (format!("{base}_sum{{{labels}}}"), format!("{base}_count{{{labels}}}"))
+            };
+            out.push_str(&format!("{sum_name} {}\n", fmt_prom(h.sum())));
+            out.push_str(&format!("{count_name} {}\n", h.count()));
+        }
+        out
+    }
+}
+
+/// Prometheus float rendering: `NaN` for missing, plain `{v}` otherwise.
+fn fmt_prom(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Merge every party's registry to party 0 over the **uncounted**
+/// control plane (mirrors `gather_stats`): parties 1.. deliver their
+/// encoded registry under the `obs:reg` tag; party 0 receives and merges.
+/// Returns the merged registry on party 0, `None` elsewhere.
+pub fn gather_registry<T: Transport>(
+    transport: &mut T,
+    mine: &MetricsRegistry,
+) -> Result<Option<MetricsRegistry>> {
+    let me = transport.id();
+    if me == 0 {
+        let mut merged = mine.clone();
+        for from in 1..transport.n_parties() {
+            let bytes = match transport.recv(from, "obs:reg") {
+                crate::net::Payload::Bytes(b) => b,
+                other => bail!("obs:reg from party {from}: expected Bytes, got {other:?}"),
+            };
+            merged.merge(&MetricsRegistry::decode(&bytes)?);
+        }
+        Ok(Some(merged))
+    } else {
+        transport.deliver(0, "obs:reg", crate::net::Payload::Bytes(mine.encode()).encode());
+        Ok(None)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Prometheus /metrics endpoint
+// ---------------------------------------------------------------------
+
+/// A live Prometheus-text endpoint: one background thread accepting on a
+/// `TcpListener` and answering every HTTP request with the current
+/// rendering of the shared registry. Dropping the handle stops the
+/// thread.
+pub struct MetricsServer {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    addr: std::net::SocketAddr,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`; port 0 for ephemeral) and
+    /// serve `registry` until the handle is dropped.
+    pub fn spawn(addr: &str, registry: Arc<Mutex<MetricsRegistry>>) -> Result<MetricsServer> {
+        let listener = std::net::TcpListener::bind(addr)
+            .map_err(|e| anyhow!("binding metrics endpoint {addr}: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow!("metrics endpoint nonblocking: {e}"))?;
+        let local = listener.local_addr().map_err(|e| anyhow!("metrics local_addr: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("efmvfl-metrics".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let body = registry.lock().unwrap().to_prometheus();
+                            respond(stream, &body);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(e) => {
+                            crate::obs::log!(warn, "metrics endpoint accept failed: {e}");
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                    }
+                }
+            })
+            .expect("spawn metrics endpoint thread");
+        Ok(MetricsServer { stop, join: Some(join), addr: local })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+/// Answer one HTTP exchange: drain the request head, write a 200 with
+/// the exposition body. Any path serves the metrics — this is a
+/// diagnostics port, not a router.
+fn respond(mut stream: std::net::TcpStream, body: &str) {
+    use std::io::Read;
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(500)));
+    let mut buf = [0u8; 1024];
+    let mut head = Vec::new();
+    // read until the blank line ending the request head (or give up)
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < 16 * 1024 {
+        match stream.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+        }
+    }
+    let resp = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let _ = stream.write_all(resp.as_bytes());
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing_and_gating() {
+        assert_eq!(parse_level(None), Level::Warn);
+        assert_eq!(parse_level(Some("debug")), Level::Debug);
+        assert_eq!(parse_level(Some("error")), Level::Error);
+        assert_eq!(parse_level(Some(" info ")), Level::Info);
+        assert_eq!(parse_level(Some("bogus")), Level::Warn);
+        assert!(Level::Error < Level::Debug);
+    }
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let tr = Tracer::disabled();
+        assert!(!tr.enabled());
+        let mut span = tr.span("prepare", 0);
+        span.field("extra", Json::Int(1));
+        span.finish(); // no file, no panic
+        tr.event("net", vec![("bytes", Json::Int(0))]);
+    }
+
+    #[test]
+    fn tracer_writes_parseable_spans() {
+        let dir = std::env::temp_dir().join("efmvfl_obs_tracer_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_str().unwrap().to_string();
+        let tr = Tracer::to_dir(&dir_s, 2).unwrap();
+        assert!(tr.enabled());
+        let mut span = tr.span("exchange", 7);
+        span.field("queue_depth", Json::Int(3));
+        span.finish();
+        let fields = vec![("from", Json::Int(2)), ("to", Json::Int(0)), ("bytes", Json::Int(10))];
+        tr.event("net", fields);
+        drop(tr);
+        let text = std::fs::read_to_string(dir.join("party-2.jsonl")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let rec = parse_flat_record(lines[0]).unwrap();
+        let get = |k: &str| rec.iter().find(|(key, _)| key == k).map(|(_, v)| v.clone());
+        assert_eq!(get("kind"), Some(Json::str("span")));
+        assert_eq!(get("party"), Some(Json::Int(2)));
+        assert_eq!(get("t"), Some(Json::Int(7)));
+        assert_eq!(get("stage"), Some(Json::str("exchange")));
+        assert_eq!(get("queue_depth"), Some(Json::Int(3)));
+        assert!(matches!(get("wall_s"), Some(Json::Num(v)) if v >= 0.0));
+        let net = parse_flat_record(lines[1]).unwrap();
+        assert!(net.iter().any(|(k, v)| k == "kind" && *v == Json::str("net")));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn flat_parser_accepts_scalars_rejects_nesting() {
+        let rec = parse_flat_record(r#"{"a": "x\n\"y", "b": 3, "c": -1.5e2, "d": true, "e": null}"#)
+            .unwrap();
+        assert_eq!(rec[0].1, Json::str("x\n\"y"));
+        assert_eq!(rec[1].1, Json::Int(3));
+        assert_eq!(rec[2].1, Json::Num(-150.0));
+        assert_eq!(rec[3].1, Json::Bool(true));
+        assert_eq!(rec[4].1, Json::Null);
+        assert!(parse_flat_record(r#"{"a": [1]}"#).is_err());
+        assert!(parse_flat_record(r#"{"a": {"b": 1}}"#).is_err());
+        assert!(parse_flat_record(r#"{"a": 1} extra"#).is_err());
+        assert!(parse_flat_record("{}").unwrap().is_empty());
+    }
+
+    #[test]
+    fn registry_records_and_queries() {
+        let mut r = MetricsRegistry::new();
+        assert!(r.is_empty());
+        r.inc("a_total", 2);
+        r.inc("a_total", 3);
+        r.set_gauge("g", 1.0);
+        r.gauge_max("g", 5.0);
+        r.gauge_max("g", 2.0);
+        r.observe("h", 1.0);
+        r.observe("h", 3.0);
+        assert_eq!(r.counter("a_total"), 5);
+        assert_eq!(r.gauge("g"), 5.0);
+        assert!(r.gauge("missing").is_nan());
+        assert_eq!(r.histogram("h").unwrap().count(), 2);
+        assert_eq!(r.counter("missing"), 0);
+    }
+
+    #[test]
+    fn registry_encode_decode_roundtrip() {
+        let mut r = MetricsRegistry::new();
+        r.inc("efmvfl_x_total{party=\"1\"}", 42);
+        r.set_gauge("efmvfl_depth", 2.5);
+        r.set_gauge("efmvfl_nan_gauge", f64::NAN);
+        for v in [0.001, 0.5, 250.0] {
+            r.observe("efmvfl_lat_seconds", v);
+        }
+        let back = MetricsRegistry::decode(&r.encode()).unwrap();
+        assert_eq!(back.counter("efmvfl_x_total{party=\"1\"}"), 42);
+        assert_eq!(back.gauge("efmvfl_depth"), 2.5);
+        assert!(back.gauge("efmvfl_nan_gauge").is_nan());
+        let h = back.histogram("efmvfl_lat_seconds").unwrap();
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.percentile(50.0), 0.5);
+        assert!(MetricsRegistry::decode(b"z bad line\n").is_err());
+        assert!(MetricsRegistry::decode(b"c onlyname\n").is_err());
+    }
+
+    #[test]
+    fn registry_merge_combines_all_kinds() {
+        let mut a = MetricsRegistry::new();
+        let mut b = MetricsRegistry::new();
+        a.inc("shared_total", 1);
+        b.inc("shared_total", 2);
+        b.inc("only_b_total", 7);
+        a.set_gauge("peak", 3.0);
+        b.set_gauge("peak", 9.0);
+        a.observe("lat", 1.0);
+        b.observe("lat", 3.0);
+        a.merge(&b);
+        assert_eq!(a.counter("shared_total"), 3);
+        assert_eq!(a.counter("only_b_total"), 7);
+        assert_eq!(a.gauge("peak"), 9.0);
+        assert_eq!(a.histogram("lat").unwrap().count(), 2);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_parseable() {
+        let mut r = MetricsRegistry::new();
+        r.inc("efmvfl_rounds_total", 3);
+        r.inc("efmvfl_link_bytes_total{from=\"0\",to=\"1\"}", 10);
+        r.inc("efmvfl_link_bytes_total{from=\"1\",to=\"0\"}", 20);
+        r.set_gauge("efmvfl_queue_depth", 2.0);
+        r.observe("efmvfl_lat_seconds{party=\"0\"}", 0.5);
+        r.observe("efmvfl_unlabeled", 1.0);
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE efmvfl_link_bytes_total counter\n"));
+        // one TYPE line for the two labeled series
+        assert_eq!(text.matches("# TYPE efmvfl_link_bytes_total").count(), 1);
+        assert!(text.contains("efmvfl_rounds_total 3\n"));
+        assert!(text.contains("efmvfl_queue_depth 2\n"));
+        assert!(text.contains("# TYPE efmvfl_lat_seconds summary\n"));
+        assert!(text.contains("efmvfl_lat_seconds{party=\"0\",quantile=\"0.5\"} 0.5\n"));
+        assert!(text.contains("efmvfl_lat_seconds_sum{party=\"0\"} 0.5\n"));
+        assert!(text.contains("efmvfl_lat_seconds_count{party=\"0\"} 1\n"));
+        assert!(text.contains("efmvfl_unlabeled{quantile=\"0.99\"} 1\n"));
+        assert!(text.contains("efmvfl_unlabeled_count 1\n"));
+        // every sample line: <name or name{labels}> <value>
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (name, value) = line.rsplit_once(' ').expect("name value");
+            assert!(!name.is_empty());
+            assert!(value.parse::<f64>().is_ok() || value == "NaN", "{line}");
+        }
+    }
+
+    #[test]
+    fn registry_gathers_to_party_zero_over_loopback_mesh() {
+        let (eps, _stats) = crate::net::full_mesh(3);
+        let mut handles = Vec::new();
+        for (me, mut ep) in eps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let mut mine = MetricsRegistry::new();
+                mine.inc(&format!("efmvfl_iters_total{{party=\"{me}\"}}"), 4);
+                mine.inc("efmvfl_shared_total", 1);
+                mine.observe("efmvfl_wall_seconds", me as f64 + 1.0);
+                gather_registry(&mut ep, &mine).unwrap()
+            }));
+        }
+        let mut merged_at_zero = None;
+        for (me, h) in handles.into_iter().enumerate() {
+            let out = h.join().unwrap();
+            if me == 0 {
+                merged_at_zero = out;
+            } else {
+                assert!(out.is_none());
+            }
+        }
+        let merged = merged_at_zero.expect("party 0 merges");
+        for me in 0..3 {
+            assert_eq!(merged.counter(&format!("efmvfl_iters_total{{party=\"{me}\"}}")), 4);
+        }
+        assert_eq!(merged.counter("efmvfl_shared_total"), 3);
+        assert_eq!(merged.histogram("efmvfl_wall_seconds").unwrap().count(), 3);
+    }
+
+    #[test]
+    fn metrics_server_serves_current_registry() {
+        use std::io::{Read, Write};
+        let registry = Arc::new(Mutex::new(MetricsRegistry::new()));
+        registry.lock().unwrap().inc("efmvfl_up_total", 1);
+        let server = MetricsServer::spawn("127.0.0.1:0", registry.clone()).unwrap();
+        let addr = server.addr();
+        let scrape = || {
+            let mut s = std::net::TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        };
+        let first = scrape();
+        assert!(first.starts_with("HTTP/1.1 200 OK\r\n"), "{first}");
+        assert!(first.contains("text/plain; version=0.0.4"));
+        assert!(first.contains("efmvfl_up_total 1\n"));
+        registry.lock().unwrap().inc("efmvfl_up_total", 2);
+        assert!(scrape().contains("efmvfl_up_total 3\n"), "endpoint must be live");
+        drop(server); // joins the acceptor thread
+    }
+}

@@ -15,6 +15,7 @@
 
 use super::mpc_online::mpc_mul;
 use super::ProtoCtx;
+use crate::benchkit::Json;
 use crate::glm::GlmKind;
 use crate::mpc::share::Share;
 use crate::net::Transport;
@@ -59,8 +60,10 @@ pub fn protocol2_grad_operator<T: Transport>(
     inputs: &GradOpInputs,
 ) -> GradOpOutputs {
     assert!(ctx.is_cp(), "Protocol 2 runs on computing parties only");
+    let mut span = ctx.tracer.span("proto", ctx.cur_iter);
+    span.field("proto", Json::str("p2"));
     let first = ctx.is_first_cp();
-    match kind {
+    let out = match kind {
         GlmKind::Logistic => {
             // m·d = 0.25·WX − 0.5·Y : public exact binary scalars, local.
             let md = inputs
@@ -94,7 +97,9 @@ pub fn protocol2_grad_operator<T: Transport>(
             let md = e2.sub(&t1);
             GradOpOutputs { md, loss_aux: vec![t1, e2] }
         }
-    }
+    };
+    span.finish();
+    out
 }
 
 #[cfg(test)]

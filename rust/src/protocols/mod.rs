@@ -95,6 +95,13 @@ pub struct ProtoCtx<T: Transport = Endpoint> {
     /// runs pipelined ([`plane::OfflinePlane::spawn`]). `None` outside
     /// training (inference/serving) and in serial mode.
     pub plane: Option<plane::PlaneHandle>,
+    /// Trace sink for per-round spans ([`crate::obs`]). Disabled by
+    /// default — a disabled tracer's spans are inert, so protocol code
+    /// can emit unconditionally without perturbing untraced runs.
+    pub tracer: crate::obs::Tracer,
+    /// The current training iteration (kept in step by
+    /// [`ProtoCtx::begin_iteration`]); tags protocol-round spans.
+    pub cur_iter: usize,
 }
 
 /// The shared per-iteration dealer seed: every party derives the same
@@ -154,6 +161,7 @@ impl<T: Transport> ProtoCtx<T> {
     /// bit-identically through here.
     pub fn begin_iteration(&mut self, t: usize) {
         let me = self.ep.id();
+        self.cur_iter = t;
         self.rng = ChaChaRng::from_seed(iter_rng_seed(self.run_seed, me, t));
         let pack = self.plane.as_ref().and_then(|p| p.take(t));
         self.triples = match pack {

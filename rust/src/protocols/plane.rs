@@ -38,6 +38,7 @@ use crate::crypto::prng::ChaChaRng;
 use crate::glm::GlmKind;
 use crate::mpc::beaver::{Triple, TripleDealer, TripleSource};
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -278,6 +279,11 @@ pub struct PlaneHandle {
     /// side consuming (queue depth covers every remaining iteration) —
     /// the precondition of [`PlaneHandle::wait_ready`].
     can_finish: bool,
+    /// Packs queued but not yet taken (generator increments after each
+    /// send, [`PlaneHandle::take`] decrements) — the telemetry plane's
+    /// queue-depth gauge: 0 means the online side is outrunning
+    /// preprocessing, `depth` means the plane is saturated.
+    depth: Arc<AtomicUsize>,
 }
 
 impl PlaneHandle {
@@ -286,8 +292,14 @@ impl PlaneHandle {
     /// dealing — same bits, just slower).
     pub fn take(&self, t: usize) -> Option<IterationPack> {
         let pack = self.rx.as_ref()?.recv().ok()?;
+        self.depth.fetch_sub(1, Ordering::Relaxed);
         assert_eq!(pack.t, t, "offline plane out of step with the online rounds");
         Some(pack)
+    }
+
+    /// How many pre-generated iteration packs are currently queued.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
     }
 
     /// Block until the generator has produced every iteration's pack
@@ -333,6 +345,8 @@ impl OfflinePlane {
     pub fn spawn(spec: PlaneSpec) -> PlaneHandle {
         let can_finish = spec.depth.max(1) >= spec.iterations.saturating_sub(spec.start_iter);
         let (tx, rx) = mpsc::sync_channel(spec.depth.max(1));
+        let depth = Arc::new(AtomicUsize::new(0));
+        let depth_tx = depth.clone();
         let join = std::thread::Builder::new()
             .name(format!("efmvfl-offline-{}", spec.me))
             .spawn(move || {
@@ -363,13 +377,18 @@ impl OfflinePlane {
                     ) {
                         spec.pks[owner].refill_pool(count, &mut obf_rng);
                     }
+                    // count before sending: the consumer decrements only
+                    // after a successful recv, so the gauge never
+                    // underflows (it may read one high while a send is
+                    // parked on a full queue, which is the right signal)
+                    depth_tx.fetch_add(1, Ordering::Relaxed);
                     if tx.send(IterationPack { t, triples, dealer }).is_err() {
                         return; // online side finished (or stopped early)
                     }
                 }
             })
             .expect("spawn offline plane");
-        PlaneHandle { rx: Some(rx), join: Some(join), can_finish }
+        PlaneHandle { rx: Some(rx), join: Some(join), can_finish, depth }
     }
 }
 
@@ -483,6 +502,31 @@ mod tests {
         let bystander = OfflinePlane::spawn(spec(2));
         let pack = bystander.take(0).unwrap();
         assert!(pack.triples.is_empty());
+    }
+
+    #[test]
+    fn queue_depth_tracks_produced_minus_consumed() {
+        let spec = PlaneSpec {
+            me: 0,
+            n_parties: 2,
+            kind: GlmKind::Logistic,
+            run_seed: 11,
+            cp_selection: CpSelection::Fixed,
+            start_iter: 0,
+            iterations: 3,
+            schedule: BatchSchedule::new(8, Some(4), true, 11),
+            sizing: PoolSizing::Own { features: 2 },
+            pks: Vec::new(),
+            packing: PackingPolicy::Auto,
+            depth: 8, // covers the whole run: generator finishes unaided
+        };
+        let plane = OfflinePlane::spawn(spec);
+        plane.wait_ready();
+        assert_eq!(plane.queue_depth(), 3);
+        for t in 0..3 {
+            let _ = plane.take(t).unwrap();
+            assert_eq!(plane.queue_depth(), 2 - t);
+        }
     }
 
     #[test]

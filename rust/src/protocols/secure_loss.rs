@@ -49,6 +49,8 @@ pub fn protocol4_loss<T: Transport>(
 ) -> Option<f64> {
     let me = ctx.ep.id();
     const C: usize = 0;
+    let mut span = ctx.tracer.span("proto", ctx.cur_iter);
+    span.field("proto", crate::benchkit::Json::str("p4"));
 
     // CP side: build scalar shares [s1, s2] of the two aggregates.
     let my_scalars: Option<Vec<u64>> = if ctx.is_cp() {
@@ -90,6 +92,7 @@ pub fn protocol4_loss<T: Transport>(
     };
 
     if me != C {
+        span.finish();
         return None;
     }
 
@@ -116,6 +119,7 @@ pub fn protocol4_loss<T: Transport>(
             (-s1 / (1.0 - TWEEDIE_P) + s2 / (2.0 - TWEEDIE_P)) / m_f
         }
     };
+    span.finish();
     Some(loss)
 }
 

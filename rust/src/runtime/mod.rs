@@ -119,7 +119,7 @@ pub fn default_compute(use_xla: bool) -> Arc<dyn Compute> {
         match engine::XlaEngine::load_default() {
             Ok(engine) => return Arc::new(engine),
             Err(err) => {
-                eprintln!("[efmvfl] XLA artifacts unavailable ({err}); using native compute");
+                crate::obs::log!(warn, "XLA artifacts unavailable ({err}); using native compute");
             }
         }
     }

@@ -22,6 +22,9 @@ pub struct DaemonReport {
     pub rounds: u64,
     /// Total records scored across all successfully served rounds.
     pub records: u64,
+    /// This daemon's telemetry, also pushed to the gateway at shutdown
+    /// (it lands in [`super::GatewayReport::metrics`] and `/metrics`).
+    pub metrics: crate::obs::MetricsRegistry,
 }
 
 /// Serve micro-batch rounds until the gateway signals shutdown.
@@ -47,7 +50,8 @@ pub fn run_daemon<T: Transport>(
         );
     }
     let n = transport.n_parties();
-    let mut report = DaemonReport { rounds: 0, records: 0 };
+    let mut report =
+        DaemonReport { rounds: 0, records: 0, metrics: crate::obs::MetricsRegistry::new() };
     loop {
         let (round, ids) = match transport.recv(0, "serve:batch") {
             Payload::IdBatch { round, ids } => (round, ids),
@@ -66,17 +70,24 @@ pub fn run_daemon<T: Transport>(
                 masked_partial(&x, w, me, n, round_seed(seed, round))
             }
             Err(e) => {
-                eprintln!("party {me}: cannot serve round {round}: {e}");
+                crate::obs::log!(error, "party {me}: cannot serve round {round}: {e}");
                 Vec::new()
             }
         };
         transport.send(0, "serve:wx", &Payload::Ring(masked));
         report.rounds += 1;
     }
-    // push our outgoing byte-count row to the gateway (uncounted control
-    // plane), mirroring the end-of-run gather in training/inference
+    // push our outgoing byte-count row and telemetry registry to the
+    // gateway (uncounted control plane), mirroring the end-of-run
+    // gathers in training/inference
     let gathered = gather_stats(transport, WireModel::default());
     debug_assert!(gathered.is_none(), "only party 0 assembles totals");
+    report.metrics.inc(&format!("efmvfl_daemon_rounds_total{{party=\"{me}\"}}"), report.rounds);
+    report
+        .metrics
+        .inc(&format!("efmvfl_daemon_records_total{{party=\"{me}\"}}"), report.records);
+    let merged = crate::obs::gather_registry(transport, &report.metrics)?;
+    debug_assert!(merged.is_none(), "only party 0 merges registries");
     Ok(report)
 }
 

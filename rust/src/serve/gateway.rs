@@ -21,9 +21,10 @@ use super::ServeConfig;
 use crate::coordinator::distributed::gather_stats;
 use crate::coordinator::inference::{masked_partial, round_seed};
 use crate::glm::GlmKind;
-use crate::metrics::Histogram;
+use crate::metrics::LogHistogram;
 use crate::mpc::ring;
 use crate::net::{Payload, Transport, WireModel};
+use crate::obs::MetricsRegistry;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -44,8 +45,9 @@ pub struct GatewayReport {
     /// Records scored across all *successful* rounds.
     pub records: u64,
     /// Successful-round sizes in records — the batch-size distribution
-    /// the flush policy produced.
-    pub batch_sizes: Histogram,
+    /// the flush policy produced (log-bucketed: bounded memory however
+    /// long the gateway lives).
+    pub batch_sizes: LogHistogram,
     /// Batches flushed because `max_batch` records were pending.
     pub full_flushes: u64,
     /// Batches flushed because the oldest request hit `max_wait_ms`.
@@ -53,6 +55,10 @@ pub struct GatewayReport {
     /// Serve-plane traffic in MB (every party's sends, gathered at
     /// shutdown like a training run's comm totals).
     pub comm_mb: f64,
+    /// The serve mesh's merged telemetry: the gateway's live counters
+    /// plus every daemon's registry and the gathered link byte counts —
+    /// the final state of the `/metrics` endpoint.
+    pub metrics: MetricsRegistry,
 }
 
 /// A decoded request plus the path back to its client connection.
@@ -125,6 +131,19 @@ pub fn run_gateway<T: Transport>(
     let conns = Arc::new(ClientConns::default());
     let acceptor = spawn_acceptor(listener, req_tx, stop.clone(), conns.clone())?;
 
+    // live telemetry: the registry the /metrics endpoint renders on
+    // every scrape — updated per flushed batch, finalized at shutdown
+    // with the daemons' registries and the mesh byte counts
+    let registry = Arc::new(Mutex::new(MetricsRegistry::new()));
+    let metrics_server = cfg
+        .metrics_addr
+        .as_deref()
+        .map(|addr| crate::obs::MetricsServer::spawn(addr, registry.clone()))
+        .transpose()?;
+    if let Some(server) = &metrics_server {
+        crate::obs::log!(info, "gateway: serving /metrics on {}", server.addr());
+    }
+
     let mut batcher = Batcher::new(
         req_rx,
         cfg.max_batch,
@@ -135,14 +154,26 @@ pub fn run_gateway<T: Transport>(
         rounds: 0,
         requests: 0,
         records: 0,
-        batch_sizes: Histogram::new(),
+        batch_sizes: LogHistogram::new(),
         full_flushes: 0,
         timeout_flushes: 0,
         comm_mb: 0.0,
+        metrics: MetricsRegistry::new(),
     };
     let mut round: u64 = 0;
 
     'serve: while let Some(batch) = batcher.next_batch() {
+        {
+            let mut reg = registry.lock().unwrap();
+            reg.inc("efmvfl_gateway_requests_total", batch.items.len() as u64);
+            match batch.trigger {
+                FlushTrigger::Full => reg.inc("efmvfl_gateway_flushes_total{trigger=\"full\"}", 1),
+                FlushTrigger::Timeout => {
+                    reg.inc("efmvfl_gateway_flushes_total{trigger=\"timeout\"}", 1)
+                }
+                FlushTrigger::Closed => {}
+            }
+        }
         match batch.trigger {
             FlushTrigger::Full => report.full_flushes += 1,
             FlushTrigger::Timeout => report.timeout_flushes += 1,
@@ -174,6 +205,7 @@ pub fn run_gateway<T: Transport>(
         if !ids.is_empty() {
             round += 1;
             report.rounds += 1;
+            registry.lock().unwrap().inc("efmvfl_gateway_rounds_total", 1);
             // a failed round (a daemon could not serve these records —
             // store drift, a deployment bug) fails its requests, not
             // the mesh: the daemons stay connected and the next batch
@@ -182,6 +214,11 @@ pub fn run_gateway<T: Transport>(
                 Ok(scores) => {
                     report.records += ids.len() as u64;
                     report.batch_sizes.add(ids.len() as f64);
+                    {
+                        let mut reg = registry.lock().unwrap();
+                        reg.inc("efmvfl_gateway_records_total", ids.len() as u64);
+                        reg.observe("efmvfl_gateway_batch_records", ids.len() as f64);
+                    }
                     let mut off = 0;
                     for p in &live {
                         let k = p.req.ids.len();
@@ -193,7 +230,8 @@ pub fn run_gateway<T: Transport>(
                     }
                 }
                 Err(e) => {
-                    eprintln!("gateway: round {round} failed: {e}");
+                    crate::obs::log!(error, "gateway: round {round} failed: {e}");
+                    registry.lock().unwrap().inc("efmvfl_gateway_round_failures_total", 1);
                     for p in &live {
                         let _ = p.reply.send(ScoreResponse::Err {
                             req_id: p.req.req_id,
@@ -216,6 +254,15 @@ pub fn run_gateway<T: Transport>(
     let comm = gather_stats(transport, WireModel::default())
         .expect("party 0 assembles the comm totals");
     report.comm_mb = comm.comm_mb;
+    // fold the daemons' registries and the gathered byte counts into the
+    // live registry, so a final scrape (and the report) sees the mesh view
+    let mut merged = registry.lock().unwrap().clone();
+    if let Some(gathered) = crate::obs::gather_registry(transport, &merged)? {
+        merged = gathered;
+        merged.absorb_net(transport.stats(), transport.n_parties());
+    }
+    *registry.lock().unwrap() = merged.clone();
+    report.metrics = merged;
     acceptor.join().expect("acceptor thread panicked");
     // unblock every connection reader and wait for them — after this,
     // nothing new can enter the request queue
@@ -305,7 +352,10 @@ fn spawn_acceptor(
                     let read_half = match stream.try_clone() {
                         Ok(rh) => rh,
                         Err(e) => {
-                            eprintln!("gateway: rejecting client (fd clone failed: {e})");
+                            crate::obs::log!(
+                                warn,
+                                "gateway: rejecting client (fd clone failed: {e})"
+                            );
                             continue;
                         }
                     };
@@ -329,7 +379,7 @@ fn spawn_acceptor(
                     // a client resetting mid-handshake, EMFILE under fd
                     // pressure): keep accepting, never take the gateway
                     // down over one bad connection
-                    eprintln!("gateway: accept failed: {e}");
+                    crate::obs::log!(warn, "gateway: accept failed: {e}");
                     std::thread::sleep(Duration::from_millis(50));
                 }
             }
@@ -349,7 +399,7 @@ fn serve_connection(
     let mut read_half = match stream.try_clone() {
         Ok(s) => s,
         Err(e) => {
-            eprintln!("gateway: cloning client stream: {e}");
+            crate::obs::log!(warn, "gateway: cloning client stream: {e}");
             conns.read_halves.lock().unwrap().remove(&conn_id);
             return;
         }
@@ -377,7 +427,7 @@ fn serve_connection(
             }
             Ok(None) => break, // clean disconnect
             Err(e) => {
-                eprintln!("gateway: dropping client: {e}");
+                crate::obs::log!(warn, "gateway: dropping client: {e}");
                 break;
             }
         }

@@ -10,7 +10,7 @@
 
 use super::wire::{read_response, write_request, ScoreRequest, ScoreResponse};
 use crate::crypto::prng::ChaChaRng;
-use crate::metrics::{Histogram, Throughput};
+use crate::metrics::{LogHistogram, Throughput};
 use anyhow::{bail, Context, Result};
 use std::net::TcpStream;
 use std::time::Instant;
@@ -49,10 +49,12 @@ pub struct LoadgenReport {
     pub wall_secs: f64,
     /// Answered requests per second.
     pub qps: f64,
-    /// Per-request latency in seconds.
-    pub latency: Histogram,
+    /// Per-request latency in seconds (log-bucketed, bounded memory:
+    /// exact nearest-rank percentiles up to 1024 samples, ±half-bucket
+    /// beyond — see [`LogHistogram`]).
+    pub latency: LogHistogram,
     /// Request sizes in record ids (the stream shape actually sent).
-    pub request_sizes: Histogram,
+    pub request_sizes: LogHistogram,
     /// Every `(record id, score)` pair received, across all clients —
     /// the parity oracle for tests.
     pub scored: Vec<(u64, f64)>,
@@ -82,8 +84,8 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         errors: 0,
         wall_secs: 0.0,
         qps: 0.0,
-        latency: Histogram::new(),
-        request_sizes: Histogram::new(),
+        latency: LogHistogram::new(),
+        request_sizes: LogHistogram::new(),
         scored: Vec::new(),
     };
     for h in handles {
@@ -105,8 +107,8 @@ struct ClientResult {
     sent: u64,
     ok: u64,
     errors: u64,
-    latency: Histogram,
-    request_sizes: Histogram,
+    latency: LogHistogram,
+    request_sizes: LogHistogram,
     scored: Vec<(u64, f64)>,
 }
 
@@ -119,8 +121,8 @@ fn client_loop(addr: &str, cfg: &LoadgenConfig, c: usize, share: u64) -> Result<
         sent: 0,
         ok: 0,
         errors: 0,
-        latency: Histogram::new(),
-        request_sizes: Histogram::new(),
+        latency: LogHistogram::new(),
+        request_sizes: LogHistogram::new(),
         scored: Vec::new(),
     };
     for i in 0..share {

@@ -49,6 +49,10 @@ pub struct ServeConfig {
     /// Stop after answering this many client requests (`None`: serve
     /// forever) — the bounded mode tests and smoke runs use.
     pub max_requests: Option<u64>,
+    /// Serve a Prometheus-text `/metrics` endpoint from the gateway on
+    /// this address ([`crate::obs::MetricsServer`]; port 0 for
+    /// ephemeral). `None` disables the endpoint.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -58,6 +62,7 @@ impl Default for ServeConfig {
             max_batch: 64,
             max_wait_ms: 5,
             max_requests: None,
+            metrics_addr: None,
         }
     }
 }

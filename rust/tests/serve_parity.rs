@@ -58,6 +58,9 @@ fn served_scores_match_offline_predict_bit_for_bit() {
         max_batch: MAX_BATCH,
         max_wait_ms: 20,
         max_requests: Some(direct_requests + lg_cfg.requests),
+        // ephemeral port: exercises the /metrics endpoint spawn on the
+        // real gateway path (scrape coverage lives in obs::tests)
+        metrics_addr: Some("127.0.0.1:0".to_string()),
     };
 
     let mut party_threads = Vec::new();
@@ -170,6 +173,14 @@ fn served_scores_match_offline_predict_bit_for_bit() {
     assert!(g.full_flushes >= 1, "max_batch trigger never fired");
     assert!(g.batch_sizes.max() >= MAX_BATCH as f64);
     assert!(g.comm_mb > 0.0, "serve-plane traffic must be accounted");
+    // the live registry counted the same traffic the report did, and the
+    // daemons' registries were merged in at shutdown
+    assert_eq!(g.metrics.counter("efmvfl_gateway_requests_total"), g.requests);
+    assert_eq!(g.metrics.counter("efmvfl_gateway_rounds_total"), g.rounds);
+    let daemon_rounds_total: u64 = (1..PARTIES)
+        .map(|p| g.metrics.counter(&format!("efmvfl_daemon_rounds_total{{party=\"{p}\"}}")))
+        .sum();
+    assert_eq!(daemon_rounds_total, g.rounds * (PARTIES as u64 - 1));
     // every daemon saw every round
     for rounds in daemon_rounds {
         assert_eq!(rounds, g.rounds);
@@ -198,6 +209,7 @@ fn drifted_daemon_store_fails_one_request_not_the_mesh() {
         max_batch: 8,
         max_wait_ms: 10,
         max_requests: Some(2),
+        metrics_addr: None,
     };
 
     let mut threads = Vec::new();

@@ -1,0 +1,136 @@
+//! Telemetry-plane acceptance: a traced 3-party in-process run must
+//! emit schema-valid JSONL spans covering every pipeline stage of every
+//! iteration (plus at least one protocol span per iteration), the
+//! merged metrics registry must agree with the comm report and render
+//! as Prometheus text, and turning tracing off must leave the run
+//! bit-identical — weights, losses, and counted bytes.
+
+use efmvfl::benchkit::Json;
+use efmvfl::coordinator::{train, TrainConfig};
+use efmvfl::data::{split_vertical, synthetic};
+use efmvfl::obs::{parse_flat_record, PIPELINE_STAGES};
+use std::collections::{BTreeSet, HashMap};
+
+const PARTIES: usize = 3;
+const ITERS: usize = 4;
+
+fn cfg() -> TrainConfig {
+    TrainConfig::logistic(PARTIES)
+        .with_key_bits(256)
+        .with_iterations(ITERS)
+        .with_batch(Some(64))
+        .with_seed(21)
+}
+
+fn fresh_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn traced_run_covers_every_stage_of_every_iteration() {
+    let mut data = synthetic::credit_default_like(200, 9, 21);
+    data.standardize();
+    let split = split_vertical(&data, PARTIES);
+    let dir = fresh_dir("efmvfl_trace_obs_coverage");
+    let cfg = cfg().with_trace_dir(dir.to_str().unwrap());
+    let rep = train(&split, &cfg).expect("train");
+    assert!(rep.iterations_run >= 1);
+
+    for party in 0..PARTIES {
+        let path = dir.join(format!("party-{party}.jsonl"));
+        let text = std::fs::read_to_string(&path).expect("per-party trace file");
+        let mut spans: HashMap<(String, u64), u64> = HashMap::new();
+        let mut proto_rounds: BTreeSet<u64> = BTreeSet::new();
+        for line in text.lines() {
+            // every record must parse as a flat JSON object (the schema)
+            let rec = parse_flat_record(line).expect("schema-valid record");
+            let get = |k: &str| rec.iter().find(|(key, _)| key == k).map(|(_, v)| v.clone());
+            assert_eq!(get("party"), Some(Json::Int(party as u64)), "{line}");
+            match get("kind") {
+                Some(Json::Str(kind)) if kind == "span" => {
+                    let Some(Json::Str(stage)) = get("stage") else {
+                        panic!("span without stage: {line}")
+                    };
+                    let Some(Json::Int(t)) = get("t") else { panic!("span without t: {line}") };
+                    assert!(matches!(get("wall_s"), Some(Json::Num(v)) if v >= 0.0), "{line}");
+                    assert!(matches!(get("ct_exps"), Some(Json::Int(_))), "{line}");
+                    if stage == "proto" {
+                        assert!(matches!(get("proto"), Some(Json::Str(_))), "{line}");
+                        proto_rounds.insert(t);
+                    }
+                    *spans.entry((stage, t)).or_default() += 1;
+                }
+                Some(Json::Str(_)) => {} // events (net rows, …) need no stage
+                other => panic!("record without kind: {other:?} in {line}"),
+            }
+        }
+        for t in 0..rep.iterations_run as u64 {
+            for stage in PIPELINE_STAGES {
+                assert!(
+                    spans.contains_key(&(stage.to_string(), t)),
+                    "party {party}: missing {stage} span for iteration {t}"
+                );
+            }
+            assert!(
+                proto_rounds.contains(&t),
+                "party {party}: no protocol span in iteration {t}"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn tracing_off_is_bit_identical_to_tracing_on() {
+    let mut data = synthetic::credit_default_like(150, 7, 5);
+    data.standardize();
+    let split = split_vertical(&data, PARTIES);
+    let dir = fresh_dir("efmvfl_trace_obs_identity");
+    let traced_cfg = cfg().with_trace_dir(dir.to_str().unwrap());
+    let traced = train(&split, &traced_cfg).expect("traced train");
+    let plain = train(&split, &cfg()).expect("untraced train");
+    // the tracer must stay off the RNG streams and the counted planes:
+    // weights, loss curve, and every comm total agree bit-for-bit
+    assert_eq!(traced.weights, plain.weights, "weights must be bit-identical");
+    assert_eq!(traced.losses, plain.losses, "loss curves must be bit-identical");
+    assert_eq!(traced.comm_mb, plain.comm_mb);
+    assert_eq!(traced.offline_mb, plain.offline_mb);
+    assert_eq!(traced.msgs, plain.msgs);
+    assert_eq!(traced.iterations_run, plain.iterations_run);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn merged_registry_matches_the_run_and_renders_as_prometheus() {
+    let mut data = synthetic::credit_default_like(180, 8, 9);
+    data.standardize();
+    let split = split_vertical(&data, PARTIES);
+    let rep = train(&split, &cfg()).expect("train");
+    let m = &rep.metrics;
+    // per-stage wall histograms: one sample per run iteration per party
+    for party in 0..PARTIES {
+        for stage in PIPELINE_STAGES {
+            let key = format!("efmvfl_stage_wall_seconds{{party=\"{party}\",stage=\"{stage}\"}}");
+            let h = m.histogram(&key).unwrap_or_else(|| panic!("missing {key}"));
+            assert_eq!(h.count(), rep.iterations_run, "{key}");
+        }
+        let iters = m.counter(&format!("efmvfl_iterations_total{{party=\"{party}\"}}"));
+        assert_eq!(iters as usize, rep.iterations_run);
+    }
+    // the absorbed NetStats: ciphertexts moved, and some link carried them
+    assert!(m.counter("efmvfl_cipher_bytes_total") > 0, "no cipher bytes absorbed");
+    let link_bytes: u64 = (0..PARTIES)
+        .flat_map(|from| (0..PARTIES).map(move |to| (from, to)))
+        .map(|(from, to)| {
+            m.counter(&format!("efmvfl_link_bytes_total{{from=\"{from}\",to=\"{to}\"}}"))
+        })
+        .sum();
+    assert!(link_bytes > 0, "no per-link traffic absorbed");
+    // and the whole registry renders as Prometheus text exposition
+    let prom = m.to_prometheus();
+    assert!(prom.contains("# TYPE efmvfl_stage_wall_seconds summary"), "{prom}");
+    assert!(prom.contains("efmvfl_cipher_bytes_total"), "{prom}");
+    assert!(prom.lines().all(|l| l.starts_with('#') || l.split_whitespace().count() == 2));
+}

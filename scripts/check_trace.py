@@ -1,0 +1,166 @@
+#!/usr/bin/env python3
+"""Validate efmvfl telemetry: trace JSONL directories and /metrics text.
+
+Trace mode::
+
+    check_trace.py TRACE_DIR --parties N [--iters N]
+
+Checks every ``party-*.jsonl`` file written by ``--trace-dir``:
+
+- every line is a flat JSON object of scalars (the trace schema) with a
+  string ``kind`` and an integer ``party`` matching the file name;
+- span records carry ``stage``/``t``/``wall_s`` plus the HE counter
+  fields (``ct_exps``, ``mont_sqrs``, ``mont_muls``, ``mont_work``);
+- for every iteration a party traced, all four pipeline stages appear,
+  with at least one protocol round span (``stage == "proto"``);
+- with ``--iters N``, the traced iterations are exactly ``0..N-1``.
+
+Metrics mode::
+
+    check_trace.py --metrics URL [--require-samples]
+
+Scrapes the URL once and parses the body as Prometheus text exposition
+(comment lines, or ``name[{labels}] value`` samples);
+``--require-samples`` additionally demands at least one ``efmvfl_``
+sample line.
+"""
+
+import argparse
+import json
+import re
+import sys
+import urllib.request
+
+PIPELINE_STAGES = ["prepare", "mask_encrypt", "exchange", "combine"]
+COUNTER_FIELDS = ["ct_exps", "mont_sqrs", "mont_muls", "mont_work"]
+SAMPLE_RE = re.compile(r"^[A-Za-z_:][A-Za-z0-9_:]*(\{[^{}]*\})?$")
+
+
+def fail(msg):
+    sys.exit(f"check_trace: FAIL: {msg}")
+
+
+def check_record(where, rec):
+    """Schema-check one parsed JSONL record; return (kind, party)."""
+    if not isinstance(rec, dict):
+        fail(f"{where}: record is not a JSON object")
+    for key, value in rec.items():
+        if isinstance(value, (dict, list)):
+            fail(f"{where}: field {key!r} is not a scalar")
+    kind = rec.get("kind")
+    if not isinstance(kind, str) or not kind:
+        fail(f"{where}: missing or non-string 'kind'")
+    party = rec.get("party")
+    if not isinstance(party, int) or party < 0:
+        fail(f"{where}: missing or bad 'party'")
+    if kind == "span":
+        stage = rec.get("stage")
+        if not isinstance(stage, str) or not stage:
+            fail(f"{where}: span without a 'stage'")
+        t = rec.get("t")
+        if not isinstance(t, int) or t < 0:
+            fail(f"{where}: span without an iteration 't'")
+        wall = rec.get("wall_s")
+        if not isinstance(wall, (int, float)) or wall < 0:
+            fail(f"{where}: span without a non-negative 'wall_s'")
+        for field in COUNTER_FIELDS:
+            v = rec.get(field)
+            if not isinstance(v, int) or v < 0:
+                fail(f"{where}: span without counter {field!r}")
+        if stage == "proto" and not isinstance(rec.get("proto"), str):
+            fail(f"{where}: protocol span without a 'proto' tag")
+    elif kind == "net":
+        for field in ("from", "to", "bytes", "msgs"):
+            v = rec.get(field)
+            if not isinstance(v, int) or v < 0:
+                fail(f"{where}: net event without {field!r}")
+    return kind, party
+
+
+def check_trace_dir(trace_dir, parties, iters):
+    import pathlib
+
+    root = pathlib.Path(trace_dir)
+    records = 0
+    for party in range(parties):
+        path = root / f"party-{party}.jsonl"
+        if not path.is_file():
+            fail(f"missing trace file {path}")
+        # (stage, t) pairs and the iterations with a protocol round
+        stage_cover = set()
+        proto_rounds = set()
+        iterations = set()
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            where = f"{path}:{lineno}"
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(f"{where}: not JSON: {e}")
+            kind, rec_party = check_record(where, rec)
+            if rec_party != party:
+                fail(f"{where}: party {rec_party} record in party {party}'s file")
+            records += 1
+            if kind == "span":
+                t = rec["t"]
+                stage_cover.add((rec["stage"], t))
+                iterations.add(t)
+                if rec["stage"] == "proto":
+                    proto_rounds.add(t)
+        if not iterations:
+            fail(f"{path}: no spans at all")
+        if iters is not None and iterations != set(range(iters)):
+            fail(f"{path}: traced iterations {sorted(iterations)}, expected 0..{iters - 1}")
+        for t in sorted(iterations):
+            for stage in PIPELINE_STAGES:
+                if (stage, t) not in stage_cover:
+                    fail(f"{path}: no {stage!r} span for iteration {t}")
+            if t not in proto_rounds:
+                fail(f"{path}: no protocol round span for iteration {t}")
+    print(f"check_trace: OK: {records} records, {parties} parties, "
+          f"all {len(PIPELINE_STAGES)} stages covered")
+
+
+def check_metrics(url, require_samples):
+    with urllib.request.urlopen(url, timeout=10) as resp:
+        body = resp.read().decode("utf-8")
+    samples = 0
+    for lineno, line in enumerate(body.splitlines(), 1):
+        if not line.strip() or line.startswith("#"):
+            continue
+        parts = line.rsplit(None, 1)
+        if len(parts) != 2:
+            fail(f"metrics line {lineno}: not 'name value': {line!r}")
+        name, value = parts
+        if not SAMPLE_RE.match(name):
+            fail(f"metrics line {lineno}: bad metric name {name!r}")
+        try:
+            float(value)
+        except ValueError:
+            fail(f"metrics line {lineno}: bad sample value {value!r}")
+        samples += 1
+    if require_samples and not any(
+        l.startswith("efmvfl_") for l in body.splitlines()
+    ):
+        fail(f"no efmvfl_ samples scraped from {url}")
+    print(f"check_trace: OK: {samples} Prometheus samples from {url}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace_dir", nargs="?", help="directory written by --trace-dir")
+    ap.add_argument("--parties", type=int, default=3)
+    ap.add_argument("--iters", type=int, help="require iterations 0..N-1 exactly")
+    ap.add_argument("--metrics", help="scrape and parse this /metrics URL")
+    ap.add_argument("--require-samples", action="store_true",
+                    help="with --metrics: demand at least one efmvfl_ sample")
+    args = ap.parse_args()
+    if not args.trace_dir and not args.metrics:
+        ap.error("give a TRACE_DIR, --metrics URL, or both")
+    if args.trace_dir:
+        check_trace_dir(args.trace_dir, args.parties, args.iters)
+    if args.metrics:
+        check_metrics(args.metrics, args.require_samples)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Telemetry smoke: a traced 3-party training run validated record by
+# record, then a 3-party serve mesh exposing a live Prometheus /metrics
+# endpoint that is scraped mid-run. Used by CI (tier-1 job) and runnable
+# locally: scripts/ci_obs_smoke.sh [path/to/efmvfl]
+set -euo pipefail
+
+BIN="${1:-target/release/efmvfl}"
+OUT="$(mktemp -d)"
+trap 'rm -rf "$OUT"' EXIT
+
+echo "== traced 3-party training run =="
+"$BIN" train --parties 3 --samples 400 --features 8 --iters 3 --key-bits 256 \
+    --batch 128 --trace-dir "$OUT/trace" --save "$OUT/model.efmv"
+python3 scripts/check_trace.py "$OUT/trace" --parties 3 --iters 3
+"$BIN" report --trace-dir "$OUT/trace"
+
+echo "== serve mesh with a live /metrics endpoint =="
+cat > "$OUT/serve.toml" <<'EOF'
+model = "lr"
+seed = 7
+[roster]
+0 = "127.0.0.1:7300"
+1 = "127.0.0.1:7301"
+2 = "127.0.0.1:7302"
+[serve]
+gateway = "127.0.0.1:8300"
+max_batch = 8
+max_wait_ms = 5
+max_requests = 60
+[obs]
+metrics_addr = "127.0.0.1:9300"
+EOF
+
+PIDS=()
+for id in 0 1 2; do
+    "$BIN" serve --config "$OUT/serve.toml" --id "$id" --load "$OUT/model.efmv" \
+        --samples 200 &
+    PIDS+=("$!")
+done
+
+# wait for the gateway's client port to come up
+python3 - <<'EOF'
+import socket, sys, time
+for _ in range(150):
+    try:
+        socket.create_connection(("127.0.0.1", 8300), timeout=0.5).close()
+        sys.exit(0)
+    except OSError:
+        time.sleep(0.2)
+sys.exit("gateway never came up on 127.0.0.1:8300")
+EOF
+
+# first load wave populates the live registry, then scrape /metrics
+# while the mesh is still serving, then drain the request budget
+"$BIN" loadgen --gateway 127.0.0.1:8300 --requests 50 --clients 3 --max-id 200
+python3 scripts/check_trace.py --metrics http://127.0.0.1:9300/metrics --require-samples
+"$BIN" loadgen --gateway 127.0.0.1:8300 --requests 10 --clients 2 --max-id 200
+
+for pid in "${PIDS[@]}"; do
+    wait "$pid"
+done
+echo "== telemetry smoke passed =="
