@@ -46,6 +46,9 @@ pub struct CommReport {
     /// The Beaver-triple slice of `offline_mb` (the offline plane's
     /// triple dealing, counted at consumption time).
     pub triple_mb: f64,
+    /// Trace-context envelope MB (a subset of `comm_mb`; 0 with tracing
+    /// off — the observability plane's exact wire overhead).
+    pub trace_mb: f64,
     /// Total online messages.
     pub msgs: u64,
     /// What the [`WireModel`] *would* charge for this traffic — reported
@@ -335,6 +338,7 @@ pub(crate) fn gather_stats<T: Transport>(transport: &mut T, wire: WireModel) -> 
             comm_mb: stats.total_mb(),
             offline_mb: stats.offline_bytes() as f64 / 1e6,
             triple_mb: stats.triple_bytes() as f64 / 1e6,
+            trace_mb: stats.trace_bytes() as f64 / 1e6,
             msgs: stats.total_msgs(),
             net_secs: wire.transfer_secs(stats.total_bytes(), stats.total_msgs()),
         })

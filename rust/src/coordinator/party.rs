@@ -48,6 +48,10 @@ use std::sync::Arc;
 /// 2²⁰ ⇒ products stay far below 2⁶³).
 const Z_CLAMP: f64 = 15.0;
 
+/// Traced runs re-measure per-link clock offset/RTT every this many
+/// iterations (the first pass runs before iteration `start`'s round).
+const CLOCK_ALIGN_EVERY: usize = 16;
+
 /// Restart state recovered from a [`TrainCheckpoint`]: the loop resumes
 /// at `next_iter` as if it had never stopped.
 pub struct ResumeState {
@@ -264,10 +268,15 @@ pub fn run_party<T: Transport>(
     // telemetry plane: the tracer (inert unless cfg.trace_dir is set —
     // protocol code emits spans unconditionally through ctx) and this
     // party's metrics registry. Neither touches an RNG stream or a
-    // counted byte, so instrumented runs stay bit-identical.
+    // counted byte, so instrumented runs stay bit-identical. Attaching
+    // the tracer to the transport turns on wire trace envelopes (their
+    // bytes are accounted separately in `NetStats::trace_bytes`); the
+    // run id stamped on every envelope is the shared training seed.
     ctx.tracer =
         crate::obs::Tracer::from_config(cfg.trace_dir.as_deref(), me).expect("open trace dir");
+    ctx.tracer.set_run_id(cfg.seed);
     let tracer = ctx.tracer.clone();
+    ctx.ep.set_tracer(tracer.clone());
     let mut metrics = MetricsRegistry::new();
     // one preformatted key per pipeline stage: no per-iteration format!
     let stage_keys: Vec<String> = crate::obs::PIPELINE_STAGES
@@ -327,6 +336,14 @@ pub fn run_party<T: Transport>(
         }
 
         for t in start..cfg.iterations {
+            // periodic clock alignment over the uncounted control plane:
+            // per-link offset/RTT estimates land in the trace (for
+            // fusion) and in `efmvfl_link_rtt_seconds` gauges. Traced
+            // runs only — every party walks the same schedule.
+            if tracer.enabled() && (t - start) % CLOCK_ALIGN_EVERY == 0 {
+                crate::obs::clock_align(&mut ctx.ep, &tracer, &mut metrics, t);
+            }
+
             // stage 1: prepare-batch (from the worker when pipelined)
             let mut span = tracer.span("prepare", t);
             let clock = std::time::Instant::now();

@@ -52,7 +52,7 @@ const FLAGS: &[&'static str] = &[
     "save", "load", "config", "id", "connect-timeout", "shard", "gateway", "max-batch",
     "max-wait-ms", "max-requests", "clients", "requests", "max-ids", "max-id",
     "no-shuffle", "no-pipeline", "offline-depth", "checkpoint-dir", "checkpoint-every",
-    "resume", "trace-dir", "metrics-addr",
+    "resume", "trace-dir", "metrics-addr", "critical-path", "perfetto",
 ];
 
 /// Every subcommand the dispatcher accepts — `help` must list each one
@@ -130,6 +130,10 @@ fn help_text() -> String {
     s.push_str("      closed-loop load; reports QPS + p50/p95/p99 latency\n");
     s.push_str("  --max-ids K --max-id M   request shape: 1..=K ids from 0..M\n\n");
     s.push_str("report: efmvfl report --trace-dir DIR (per-stage/per-link tables)\n");
+    s.push_str("  --critical-path          fuse the parties' traces, print each\n");
+    s.push_str("      iteration's causal critical path + straggler table\n");
+    s.push_str("  --perfetto OUT.json      export the fused timeline as Chrome\n");
+    s.push_str("      trace-event JSON (open at ui.perfetto.dev)\n");
     s.push_str("keygen: efmvfl keygen --key-bits N\n");
     s.push_str("info:   efmvfl info\n");
     s.push_str("help:   efmvfl help\n");
@@ -771,6 +775,60 @@ fn cmd_report(args: &Args) -> Result<()> {
             })
             .collect();
         print_table(&["link", "MB", "msgs"], &rows);
+    }
+
+    // causal analysis: fuse the per-party streams (clock-aligned, wire
+    // events linked) for the critical path and/or the Perfetto export
+    let want_critical = args.has("critical-path");
+    let perfetto_out = args.get("perfetto");
+    if want_critical || perfetto_out.is_some() {
+        let fused = efmvfl::obs::fuse::load(dir)?;
+        if fused.unlinked_recvs > 0 {
+            bail!(
+                "{} recv events have no matching send — trace is causally incomplete",
+                fused.unlinked_recvs
+            );
+        }
+        if want_critical {
+            println!(
+                "\ncritical path per iteration (fused across {} parties, 0 unlinked recvs):",
+                fused.n_parties
+            );
+            for t in fused.iterations() {
+                let path = fused.critical_path(t);
+                if path.is_empty() {
+                    continue;
+                }
+                let total: f64 = path.iter().map(|s| s.dur()).sum();
+                let bottleneck = fused.bottleneck(t).expect("non-empty path");
+                println!(
+                    "iteration {t}: {} segments, {:.3} ms on the path",
+                    path.len(),
+                    total * 1e3
+                );
+                for seg in &path {
+                    println!("    {}", seg.describe());
+                }
+                println!("  bottleneck: {}", bottleneck.describe());
+                let rows: Vec<Vec<String>> = fused
+                    .stragglers(t)
+                    .iter()
+                    .map(|a| {
+                        vec![
+                            a.party.to_string(),
+                            format!("{:.3}", a.busy * 1e3),
+                            format!("{:.3}", a.blocked * 1e3),
+                        ]
+                    })
+                    .collect();
+                print_table(&["party", "busy ms", "blocked ms"], &rows);
+            }
+        }
+        if let Some(out) = perfetto_out {
+            std::fs::write(out, fused.chrome_trace().render_compact())
+                .with_context(|| format!("writing Perfetto trace {out}"))?;
+            println!("\nwrote Chrome trace-event JSON to {out} (open at ui.perfetto.dev)");
+        }
     }
     Ok(())
 }

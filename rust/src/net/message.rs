@@ -7,6 +7,30 @@
 use crate::bignum::BigUint;
 use crate::crypto::paillier::Ciphertext;
 
+/// Wire size of the trace-context envelope: envelope tag (7) + run id
+/// `u64` + iteration `u32` + stage code `u8` + sender span id `u64` +
+/// per-link sequence number `u32`. Exactly this many extra bytes ride on
+/// every counted frame of a traced run — and zero when tracing is off.
+pub const TRACE_ENVELOPE_BYTES: usize = 1 + 8 + 4 + 1 + 8 + 4;
+
+/// Trace context carried on a mesh frame: which run, which iteration,
+/// which pipeline/protocol stage, which sender span emitted it, and the
+/// per-`(from, to)`-link sequence number that pairs the receiver's recv
+/// event with the sender's send event during trace fusion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireTrace {
+    /// Run identity (the training seed): all parties of one run agree.
+    pub run_id: u64,
+    /// Iteration of the sender's innermost open span.
+    pub t: u32,
+    /// Stage code (`obs::wire_stage_name` decodes it).
+    pub stage: u8,
+    /// Sender-local id of the span that emitted the frame.
+    pub span_id: u64,
+    /// Per-destination send counter on the sender (pairs send↔recv).
+    pub seq: u32,
+}
+
 /// A transportable value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Payload {
@@ -214,6 +238,39 @@ impl Payload {
             t => panic!("unknown payload tag {t}"),
         }
     }
+
+    /// Serialize with a trace-context envelope (wire tag 7) prepended:
+    /// `7 | run_id u64 | t u32 | stage u8 | span_id u64 | seq u32 | payload`.
+    pub fn encode_traced(&self, tr: &WireTrace) -> Vec<u8> {
+        let inner = self.encode();
+        let mut out = Vec::with_capacity(TRACE_ENVELOPE_BYTES + inner.len());
+        out.push(7);
+        out.extend(tr.run_id.to_le_bytes());
+        out.extend(tr.t.to_le_bytes());
+        out.push(tr.stage);
+        out.extend(tr.span_id.to_le_bytes());
+        out.extend(tr.seq.to_le_bytes());
+        debug_assert_eq!(out.len(), TRACE_ENVELOPE_BYTES);
+        out.extend_from_slice(&inner);
+        out
+    }
+
+    /// Deserialize, stripping a trace-context envelope when one is
+    /// present. Un-enveloped frames (tracing off, control-plane traffic,
+    /// untraced peers) decode exactly as [`Payload::decode`].
+    pub fn decode_traced(bytes: &[u8]) -> (Option<WireTrace>, Payload) {
+        if bytes[0] != 7 {
+            return (None, Payload::decode(bytes));
+        }
+        let tr = WireTrace {
+            run_id: u64::from_le_bytes(bytes[1..9].try_into().unwrap()),
+            t: u32::from_le_bytes(bytes[9..13].try_into().unwrap()),
+            stage: bytes[13],
+            span_id: u64::from_le_bytes(bytes[14..22].try_into().unwrap()),
+            seq: u32::from_le_bytes(bytes[22..26].try_into().unwrap()),
+        };
+        (Some(tr), Payload::decode(&bytes[TRACE_ENVELOPE_BYTES..]))
+    }
 }
 
 #[cfg(test)]
@@ -318,6 +375,32 @@ mod tests {
         }
         // decrypts still work after the wire trip
         assert_eq!(kp.sk.decrypt_i128(&back[1], &kp.pk), -5);
+    }
+
+    #[test]
+    fn trace_envelope_roundtrips_and_costs_exactly_its_header() {
+        let tr = WireTrace { run_id: 21, t: 37, stage: 6, span_id: u64::MAX, seq: 9001 };
+        for p in [
+            Payload::Ring(vec![1, 2, u64::MAX]),
+            Payload::Cipher { width: 4, data: vec![0xde, 0xad, 0xbe, 0xef] },
+            Payload::Flag(true),
+        ] {
+            let enveloped = p.encode_traced(&tr);
+            assert_eq!(enveloped.len(), p.encode().len() + TRACE_ENVELOPE_BYTES);
+            let (got_tr, got_p) = Payload::decode_traced(&enveloped);
+            assert_eq!(got_tr, Some(tr));
+            assert_eq!(got_p, p);
+        }
+    }
+
+    #[test]
+    fn decode_traced_passes_plain_frames_through() {
+        // every un-enveloped variant must come back with no context and
+        // byte-identical semantics to the plain decoder
+        let p = Payload::RingPair(vec![5], vec![6, 7]);
+        let (tr, got) = Payload::decode_traced(&p.encode());
+        assert_eq!(tr, None);
+        assert_eq!(got, p);
     }
 
     #[test]

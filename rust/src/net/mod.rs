@@ -28,6 +28,6 @@ mod stats;
 pub mod tcp;
 mod transport;
 
-pub use message::Payload;
+pub use message::{Payload, WireTrace, TRACE_ENVELOPE_BYTES};
 pub use stats::{NetStats, WireModel};
 pub use transport::{full_mesh, Endpoint, Transport};

@@ -47,6 +47,9 @@ pub struct NetStats {
     /// Ciphertext payload bytes (the HE share of the online traffic —
     /// what ciphertext packing shrinks; also counted in `bytes`).
     cipher_bytes: AtomicU64,
+    /// Trace-context envelope bytes (the observability share of the
+    /// online traffic — zero with tracing off; also counted in `bytes`).
+    trace_bytes: AtomicU64,
 }
 
 impl NetStats {
@@ -59,6 +62,7 @@ impl NetStats {
             offline_bytes: AtomicU64::new(0),
             triple_bytes: AtomicU64::new(0),
             cipher_bytes: AtomicU64::new(0),
+            trace_bytes: AtomicU64::new(0),
         }
     }
 
@@ -88,6 +92,13 @@ impl NetStats {
         self.cipher_bytes.fetch_add(len as u64, Ordering::Relaxed);
     }
 
+    /// Record the trace-envelope share of a message already counted via
+    /// [`NetStats::record`] (a breakdown, not additional traffic): the
+    /// exact observability cost on the wire when tracing is on.
+    pub fn record_trace(&self, len: usize) {
+        self.trace_bytes.fetch_add(len as u64, Ordering::Relaxed);
+    }
+
     /// Total online bytes over all links.
     pub fn total_bytes(&self) -> u64 {
         self.bytes.iter().map(|b| b.load(Ordering::Relaxed)).sum()
@@ -113,6 +124,11 @@ impl NetStats {
         self.cipher_bytes.load(Ordering::Relaxed)
     }
 
+    /// Trace-envelope bytes (subset of [`NetStats::total_bytes`]).
+    pub fn trace_bytes(&self) -> u64 {
+        self.trace_bytes.load(Ordering::Relaxed)
+    }
+
     /// Bytes sent from `from` to `to`.
     pub fn link_bytes(&self, from: usize, to: usize) -> u64 {
         self.bytes[from * self.n + to].load(Ordering::Relaxed)
@@ -131,11 +147,11 @@ impl NetStats {
     /// Flatten party `from`'s outgoing row for the end-of-run gather in
     /// distributed mode:
     /// `[bytes to 0.., msgs to 0.., offline_bytes, triple_bytes,
-    /// cipher_bytes]`. A socket transport counts only its own sends, so
-    /// the union of all parties' rows equals what the in-process shared
-    /// sink records.
+    /// cipher_bytes, trace_bytes]`. A socket transport counts only its
+    /// own sends, so the union of all parties' rows equals what the
+    /// in-process shared sink records.
     pub fn export_row(&self, from: usize) -> Vec<u64> {
-        let mut row = Vec::with_capacity(2 * self.n + 3);
+        let mut row = Vec::with_capacity(2 * self.n + 4);
         for to in 0..self.n {
             row.push(self.bytes[from * self.n + to].load(Ordering::Relaxed));
         }
@@ -145,13 +161,14 @@ impl NetStats {
         row.push(self.offline_bytes.load(Ordering::Relaxed));
         row.push(self.triple_bytes.load(Ordering::Relaxed));
         row.push(self.cipher_bytes.load(Ordering::Relaxed));
+        row.push(self.trace_bytes.load(Ordering::Relaxed));
         row
     }
 
     /// Merge a row produced by [`NetStats::export_row`] on party `from`'s
     /// side into this sink (adds, so local counts are preserved).
     pub fn merge_row(&self, from: usize, row: &[u64]) {
-        assert_eq!(row.len(), 2 * self.n + 3, "malformed stats row");
+        assert_eq!(row.len(), 2 * self.n + 4, "malformed stats row");
         for to in 0..self.n {
             self.bytes[from * self.n + to].fetch_add(row[to], Ordering::Relaxed);
             self.msgs[from * self.n + to].fetch_add(row[self.n + to], Ordering::Relaxed);
@@ -159,6 +176,7 @@ impl NetStats {
         self.offline_bytes.fetch_add(row[2 * self.n], Ordering::Relaxed);
         self.triple_bytes.fetch_add(row[2 * self.n + 1], Ordering::Relaxed);
         self.cipher_bytes.fetch_add(row[2 * self.n + 2], Ordering::Relaxed);
+        self.trace_bytes.fetch_add(row[2 * self.n + 3], Ordering::Relaxed);
     }
 
     /// Reset all counters (between bench repetitions).
@@ -169,6 +187,7 @@ impl NetStats {
         self.offline_bytes.store(0, Ordering::Relaxed);
         self.triple_bytes.store(0, Ordering::Relaxed);
         self.cipher_bytes.store(0, Ordering::Relaxed);
+        self.trace_bytes.store(0, Ordering::Relaxed);
     }
 }
 
@@ -193,11 +212,14 @@ mod tests {
         assert_eq!(s.triple_bytes(), 24);
         s.record_cipher(128);
         assert_eq!(s.cipher_bytes(), 128);
+        s.record_trace(26);
+        assert_eq!(s.trace_bytes(), 26);
         s.reset();
         assert_eq!(s.total_bytes(), 0);
         assert_eq!(s.offline_bytes(), 0);
         assert_eq!(s.triple_bytes(), 0);
         assert_eq!(s.cipher_bytes(), 0);
+        assert_eq!(s.trace_bytes(), 0);
     }
 
     #[test]
@@ -209,6 +231,7 @@ mod tests {
         local.record_offline(8);
         local.record_offline_triples(16);
         local.record_cipher(64);
+        local.record_trace(52);
         // party 0's sink after merging the gathered row
         let sink = NetStats::new(3);
         sink.record(0, 1, 7);
@@ -220,6 +243,7 @@ mod tests {
         assert_eq!(sink.offline_bytes(), 24);
         assert_eq!(sink.triple_bytes(), 16);
         assert_eq!(sink.cipher_bytes(), 64);
+        assert_eq!(sink.trace_bytes(), 52);
     }
 
     #[test]
@@ -238,11 +262,12 @@ mod tests {
             local.record_offline(1000 + me);
             local.record_offline_triples(50 * (me + 1));
             local.record_cipher(7 * (me + 1));
+            local.record_trace(26 * (me + 1));
         }
         let sink = NetStats::new(n);
         for (me, local) in locals.iter().enumerate() {
             let row = local.export_row(me);
-            assert_eq!(row.len(), 2 * n + 3);
+            assert_eq!(row.len(), 2 * n + 4);
             sink.merge_row(me, &row);
         }
         for (me, local) in locals.iter().enumerate() {
@@ -259,6 +284,7 @@ mod tests {
         assert_eq!(sink.offline_bytes(), (1000 + 1001 + 1002) + (50 + 100 + 150));
         assert_eq!(sink.triple_bytes(), 50 + 100 + 150);
         assert_eq!(sink.cipher_bytes(), 7 + 14 + 21);
+        assert_eq!(sink.trace_bytes(), 26 + 52 + 78);
     }
 
     #[test]

@@ -29,7 +29,8 @@
 
 use super::message::Payload;
 use super::stats::NetStats;
-use super::transport::{take_pending, Frame, Transport};
+use super::transport::{decode_frame, take_pending, Frame, Transport};
+use crate::obs::Tracer;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::VecDeque;
 use std::io::{Read, Write};
@@ -127,6 +128,7 @@ pub struct TcpTransport {
     /// `recv` fail loudly on a dead peer even while other links keep
     /// the inbox channel open (a 3+-party mesh would otherwise hang).
     dead: Arc<Vec<AtomicBool>>,
+    tracer: Tracer,
 }
 
 /// Bootstrap the mesh for party `me`: bind `0.0.0.0:<roster port>`, dial
@@ -274,6 +276,7 @@ pub fn connect_mesh_with_listener(
         stats: Arc::new(NetStats::new(n)),
         readers,
         dead,
+        tracer: Tracer::disabled(),
     })
 }
 
@@ -393,8 +396,8 @@ impl Transport for TcpTransport {
     }
 
     fn recv(&mut self, from: usize, tag: &str) -> Payload {
-        if let Some(p) = take_pending(&mut self.pending, from, tag) {
-            return p;
+        if let Some(f) = take_pending(&mut self.pending, from, tag) {
+            return decode_frame(f, &self.tracer);
         }
         // Poll with a short timeout: unlike the in-process mesh, a dead
         // peer here does not close the inbox (other links keep it open),
@@ -403,7 +406,7 @@ impl Transport for TcpTransport {
             match self.inbox.recv_timeout(Duration::from_millis(100)) {
                 Ok(f) => {
                     if f.from == from && f.tag == tag {
-                        return Payload::decode(&f.bytes);
+                        return decode_frame(f, &self.tracer);
                     }
                     self.pending.push_back(f);
                 }
@@ -417,7 +420,7 @@ impl Transport for TcpTransport {
                             self.pending.push_back(f);
                         }
                         match take_pending(&mut self.pending, from, tag) {
-                            Some(p) => return p,
+                            Some(f) => return decode_frame(f, &self.tracer),
                             None => panic!(
                                 "party {from} disconnected while party {} waited for {tag:?}",
                                 self.id
@@ -433,6 +436,14 @@ impl Transport for TcpTransport {
                 }
             }
         }
+    }
+
+    fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 }
 

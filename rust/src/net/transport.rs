@@ -9,8 +9,9 @@
 //! ([`Endpoint`], mpsc channels) or other OS processes across real TCP
 //! sockets ([`super::tcp::TcpTransport`]).
 
-use super::message::Payload;
+use super::message::{Payload, TRACE_ENVELOPE_BYTES};
 use super::stats::NetStats;
+use crate::obs::Tracer;
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -57,16 +58,42 @@ pub trait Transport: Send {
     /// (out-of-order frames are buffered, not lost).
     fn recv(&mut self, from: usize, tag: &str) -> Payload;
 
+    /// The tracer whose wire context [`Transport::send`] stamps onto
+    /// outgoing frames (and which records send/recv events). Defaults to
+    /// the shared disabled tracer: no envelope, zero extra wire bytes.
+    fn tracer(&self) -> &Tracer {
+        Tracer::disabled_static()
+    }
+
+    /// Attach a tracer so subsequent sends carry trace-context
+    /// envelopes. The default is a no-op for transports without tracer
+    /// storage; [`Endpoint`] and [`super::tcp::TcpTransport`] store it.
+    fn set_tracer(&mut self, tracer: Tracer) {
+        let _ = tracer;
+    }
+
     /// Serialize and send `payload` to party `to`, recording its exact
     /// wire size (framing overhead: 2 ids + tag length, like a slim TCP
     /// app header). Ciphertext frames additionally feed the
     /// [`NetStats::cipher_bytes`] breakdown — the component the packing
-    /// benches track.
+    /// benches track. With a tracer attached, the frame carries a
+    /// trace-context envelope whose bytes are counted both on the link
+    /// (honest wire totals) and in the [`NetStats::trace_bytes`] class
+    /// (so the overhead is exactly attributable); with tracing off the
+    /// wire is byte-identical to an uninstrumented build.
     fn send(&mut self, to: usize, tag: &str, payload: &Payload) {
-        let bytes = payload.encode();
+        let wire = self.tracer().wire_send_context(to);
+        let bytes = match &wire {
+            Some(tr) => payload.encode_traced(tr),
+            None => payload.encode(),
+        };
         self.stats().record(self.id(), to, bytes.len() + 8 + tag.len());
         if let Payload::Cipher { data, .. } = payload {
             self.stats().record_cipher(data.len());
+        }
+        if let Some(tr) = &wire {
+            self.stats().record_trace(TRACE_ENVELOPE_BYTES);
+            self.tracer().trace_sent(to, tag, tr, bytes.len());
         }
         self.deliver(to, tag, bytes);
     }
@@ -90,6 +117,7 @@ pub struct Endpoint {
     /// Arrived-but-not-yet-requested frames.
     pending: VecDeque<Frame>,
     stats: Arc<NetStats>,
+    tracer: Tracer,
 }
 
 /// Build a fully connected in-process mesh of `n` endpoints sharing one
@@ -116,6 +144,7 @@ pub fn full_mesh(n: usize) -> (Vec<Endpoint>, Arc<NetStats>) {
             inbox,
             pending: VecDeque::new(),
             stats: stats.clone(),
+            tracer: Tracer::disabled(),
         });
     }
     (endpoints, stats)
@@ -127,10 +156,21 @@ pub(crate) fn take_pending(
     pending: &mut VecDeque<Frame>,
     from: usize,
     tag: &str,
-) -> Option<Payload> {
+) -> Option<Frame> {
     let pos = pending.iter().position(|f| f.from == from && f.tag == tag)?;
-    let f = pending.remove(pos).unwrap();
-    Some(Payload::decode(&f.bytes))
+    pending.remove(pos)
+}
+
+/// Decode a frame's bytes, stripping the trace-context envelope when one
+/// is present and recording the recv event against the receiver's tracer
+/// — the single decode point shared by every transport's receive path.
+pub(crate) fn decode_frame(f: Frame, tracer: &Tracer) -> Payload {
+    let wire_len = f.bytes.len();
+    let (wire, payload) = Payload::decode_traced(&f.bytes);
+    if let Some(tr) = wire {
+        tracer.trace_received(f.from, &f.tag, &tr, wire_len);
+    }
+    payload
 }
 
 /// Pull the next `(from, tag)` frame out of `pending`/`inbox`, blocking
@@ -141,16 +181,16 @@ pub(crate) fn recv_matching(
     inbox: &Receiver<Frame>,
     from: usize,
     tag: &str,
-) -> Payload {
-    if let Some(p) = take_pending(pending, from, tag) {
-        return p;
+) -> Frame {
+    if let Some(f) = take_pending(pending, from, tag) {
+        return f;
     }
     loop {
         let f = inbox
             .recv()
             .expect("all peers disconnected while waiting");
         if f.from == from && f.tag == tag {
-            return Payload::decode(&f.bytes);
+            return f;
         }
         pending.push_back(f);
     }
@@ -178,7 +218,16 @@ impl Transport for Endpoint {
     }
 
     fn recv(&mut self, from: usize, tag: &str) -> Payload {
-        recv_matching(&mut self.pending, &self.inbox, from, tag)
+        let f = recv_matching(&mut self.pending, &self.inbox, from, tag);
+        decode_frame(f, &self.tracer)
+    }
+
+    fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 }
 
@@ -281,6 +330,30 @@ mod tests {
         for i in 0..5u64 {
             assert_eq!(b.recv(0, "seq"), Payload::Ring(vec![i]));
         }
+    }
+
+    #[test]
+    fn traced_sends_cost_exactly_one_envelope_each() {
+        let dir = std::env::temp_dir().join("efmvfl_transport_trace_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (mut eps, stats) = full_mesh(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        // untraced baseline: zero trace bytes on the wire
+        a.send(1, "x", &Payload::Ring(vec![7]));
+        assert_eq!(b.recv(0, "x"), Payload::Ring(vec![7]));
+        let base = stats.total_bytes();
+        assert_eq!(stats.trace_bytes(), 0);
+        // a traced sender: same payload, envelope stripped on receive
+        // even though the receiver has no tracer of its own
+        let tracer = Tracer::to_dir(dir.to_str().unwrap(), 0).unwrap();
+        a.set_tracer(tracer);
+        a.send(1, "x", &Payload::Ring(vec![7]));
+        assert_eq!(b.recv(0, "x"), Payload::Ring(vec![7]));
+        assert_eq!(stats.total_bytes(), 2 * base + TRACE_ENVELOPE_BYTES as u64);
+        assert_eq!(stats.trace_bytes(), TRACE_ENVELOPE_BYTES as u64);
+        drop(a);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,0 +1,658 @@
+//! Trace fusion and critical-path analysis.
+//!
+//! Each party of a traced run writes its own `party-<id>.jsonl` stream
+//! against its own monotonic clock. This module merges those streams
+//! into one causal picture:
+//!
+//! 1. **align** — every file's leading `clock` record anchors its
+//!    monotonic epoch to wall time; all timestamps are shifted onto a
+//!    common timeline (earliest epoch = 0).
+//! 2. **link** — every `recv` event is paired with the `send` event that
+//!    produced it via the `(from, to, seq)` key carried in the wire
+//!    envelope, and through the sender's `span_id` back to the span that
+//!    was open when the frame left.
+//! 3. **walk** — per iteration, the critical path is reconstructed by
+//!    walking backwards from the latest span end: inside a span, the
+//!    latest inbound frame is the causal predecessor; the link jumps to
+//!    the sender's span; repeat until a span has no inbound dependency.
+//!
+//! The result answers "*what was the slowest causal chain of this
+//! iteration, and which stage / party / link was it sitting in?*" — the
+//! question per-party wall clocks cannot answer alone. [`chrome_trace`]
+//! exports the fused timeline as Chrome trace-event JSON loadable in
+//! Perfetto (<https://ui.perfetto.dev>), with message flows drawn as
+//! arrows between party tracks.
+
+use super::{parse_flat_record, PIPELINE_STAGES};
+use crate::benchkit::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// One span on the fused (aligned) timeline.
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    /// Party that executed the span.
+    pub party: usize,
+    /// Training iteration.
+    pub t: usize,
+    /// Stage name — a pipeline stage, or the protocol tag (`p1`…`p4`)
+    /// for protocol-round spans.
+    pub stage: String,
+    /// Span identity (unique per party, referenced by wire envelopes).
+    pub span_id: u64,
+    /// Aligned start, seconds on the fused timeline.
+    pub start: f64,
+    /// Aligned end, seconds on the fused timeline.
+    pub end: f64,
+}
+
+/// One send→recv pair on the fused timeline.
+#[derive(Clone, Debug)]
+pub struct LinkRec {
+    /// Sender party.
+    pub from: usize,
+    /// Receiver party.
+    pub to: usize,
+    /// Per-(from, to) sequence number (the pairing key).
+    pub seq: u64,
+    /// Message tag.
+    pub tag: String,
+    /// Iteration stamped on the envelope.
+    pub t: usize,
+    /// The sender span the frame left from (0 = no open span).
+    pub send_span: u64,
+    /// Aligned send timestamp.
+    pub send_ts: f64,
+    /// Aligned receive timestamp.
+    pub recv_ts: f64,
+    /// Frame length on the wire (envelope included).
+    pub bytes: u64,
+}
+
+/// A segment of an iteration's critical path, in causal order.
+#[derive(Clone, Debug)]
+pub enum Segment {
+    /// Time spent computing inside one party's span.
+    Stage {
+        /// Executing party.
+        party: usize,
+        /// Stage name.
+        stage: String,
+        /// Aligned start.
+        start: f64,
+        /// Aligned end.
+        end: f64,
+    },
+    /// Time a frame spent in flight between two parties.
+    Link {
+        /// Sender.
+        from: usize,
+        /// Receiver.
+        to: usize,
+        /// Message tag.
+        tag: String,
+        /// Aligned send time.
+        start: f64,
+        /// Aligned receive time.
+        end: f64,
+    },
+}
+
+impl Segment {
+    /// Segment duration in seconds (clamped at 0 for clock jitter).
+    pub fn dur(&self) -> f64 {
+        match self {
+            Segment::Stage { start, end, .. } | Segment::Link { start, end, .. } => {
+                (end - start).max(0.0)
+            }
+        }
+    }
+
+    /// One-line human description (`stage party=1 exchange 1.2ms`).
+    pub fn describe(&self) -> String {
+        match self {
+            Segment::Stage { party, stage, .. } => {
+                format!("stage party={party} {stage} {:.3}ms", self.dur() * 1e3)
+            }
+            Segment::Link { from, to, tag, .. } => {
+                format!("link {from}->{to} {tag} {:.3}ms", self.dur() * 1e3)
+            }
+        }
+    }
+}
+
+/// Per-party activity summary for one iteration.
+#[derive(Clone, Debug)]
+pub struct PartyActivity {
+    /// Party id.
+    pub party: usize,
+    /// Seconds spent inside pipeline-stage spans.
+    pub busy: f64,
+    /// Seconds of the iteration window not covered by busy time
+    /// (waiting on peers, clamped at 0).
+    pub blocked: f64,
+}
+
+/// The merged, aligned, linked view of one run's trace directory.
+pub struct FusedTrace {
+    /// Number of parties seen across the files.
+    pub n_parties: usize,
+    /// All spans, aligned onto the common timeline.
+    pub spans: Vec<SpanRec>,
+    /// All paired send→recv events.
+    pub links: Vec<LinkRec>,
+    /// `recv` events whose `(from, to, seq)` matched no `send` — a
+    /// causality hole; 0 on any complete trace.
+    pub unlinked_recvs: usize,
+    span_index: HashMap<(usize, u64), usize>,
+}
+
+fn num(v: &Json) -> Option<f64> {
+    match v {
+        Json::Num(x) => Some(*x),
+        Json::Int(x) => Some(*x as f64),
+        _ => None,
+    }
+}
+
+fn int(v: &Json) -> Option<u64> {
+    match v {
+        Json::Int(x) => Some(*x),
+        Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
+        _ => None,
+    }
+}
+
+struct Record(Vec<(String, Json)>);
+
+impl Record {
+    fn get(&self, key: &str) -> Option<&Json> {
+        self.0.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+    fn num(&self, key: &str) -> Result<f64> {
+        self.get(key).and_then(num).ok_or_else(|| anyhow!("missing number field {key:?}"))
+    }
+    fn int(&self, key: &str) -> Result<u64> {
+        self.get(key).and_then(int).ok_or_else(|| anyhow!("missing int field {key:?}"))
+    }
+    fn str(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(Json::Str(s)) => Ok(s),
+            _ => bail!("missing string field {key:?}"),
+        }
+    }
+}
+
+/// Read every `party-*.jsonl` under `dir`, align the clocks, link the
+/// wire events, and index the spans. Fails on unreadable files, records
+/// the flat parser rejects, or a file with no leading `clock` anchor.
+pub fn load(dir: &str) -> Result<FusedTrace> {
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow!("reading trace dir {dir}: {e}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("party-") && n.ends_with(".jsonl"))
+        })
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        bail!("no party-*.jsonl files in {dir}");
+    }
+
+    // pass 1: parse everything, collect per-party clock anchors
+    struct PartyFile {
+        party: usize,
+        epoch_unix: f64,
+        records: Vec<Record>,
+    }
+    let mut parsed = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let mut records = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let rec = parse_flat_record(line)
+                .map_err(|e| anyhow!("{} line {}: {e}", path.display(), i + 1))?;
+            records.push(Record(rec));
+        }
+        let clock = records
+            .iter()
+            .find(|r| r.get("kind") == Some(&Json::str("clock")))
+            .ok_or_else(|| anyhow!("{}: no clock anchor record", path.display()))?;
+        let party = clock.int("party")? as usize;
+        let epoch_unix = clock.num("epoch_unix_s")?;
+        parsed.push(PartyFile { party, epoch_unix, records });
+    }
+    let min_epoch = parsed.iter().map(|p| p.epoch_unix).fold(f64::INFINITY, f64::min);
+    let n_parties = parsed.iter().map(|p| p.party + 1).max().unwrap_or(0);
+
+    // pass 2: aligned spans and wire events
+    struct SendEv {
+        ts: f64,
+        span_id: u64,
+        tag: String,
+        t: usize,
+        bytes: u64,
+    }
+    let mut spans = Vec::new();
+    let mut sends: HashMap<(usize, usize, u64), SendEv> = HashMap::new();
+    let mut recvs: Vec<(usize, usize, u64, f64)> = Vec::new(); // (from, to, seq, ts)
+    for pf in &parsed {
+        let shift = pf.epoch_unix - min_epoch;
+        for rec in &pf.records {
+            let Some(Json::Str(kind)) = rec.get("kind") else { continue };
+            match kind.as_str() {
+                "span" => {
+                    let stage = match rec.get("proto") {
+                        Some(Json::Str(p)) => p.clone(),
+                        _ => rec.str("stage")?.to_string(),
+                    };
+                    let start = rec.num("start_s")? + shift;
+                    spans.push(SpanRec {
+                        party: rec.int("party")? as usize,
+                        t: rec.int("t")? as usize,
+                        stage,
+                        span_id: rec.int("span_id")?,
+                        start,
+                        end: start + rec.num("wall_s")?,
+                    });
+                }
+                "send" => {
+                    let from = rec.int("party")? as usize;
+                    let to = rec.int("to")? as usize;
+                    let ev = SendEv {
+                        ts: rec.num("ts_s")? + shift,
+                        span_id: rec.int("span_id")?,
+                        tag: rec.str("tag")?.to_string(),
+                        t: rec.int("t")? as usize,
+                        bytes: rec.int("bytes")?,
+                    };
+                    sends.insert((from, to, rec.int("seq")?), ev);
+                }
+                "recv" => {
+                    let to = rec.int("party")? as usize;
+                    let from = rec.int("from")? as usize;
+                    recvs.push((from, to, rec.int("seq")?, rec.num("ts_s")? + shift));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let mut links = Vec::new();
+    let mut unlinked = 0usize;
+    for (from, to, seq, recv_ts) in recvs {
+        match sends.get(&(from, to, seq)) {
+            Some(ev) => links.push(LinkRec {
+                from,
+                to,
+                seq,
+                tag: ev.tag.clone(),
+                t: ev.t,
+                send_span: ev.span_id,
+                send_ts: ev.ts,
+                recv_ts,
+                bytes: ev.bytes,
+            }),
+            None => unlinked += 1,
+        }
+    }
+    links.sort_by(|a, b| a.recv_ts.total_cmp(&b.recv_ts));
+
+    let span_index = spans
+        .iter()
+        .enumerate()
+        .map(|(i, s)| ((s.party, s.span_id), i))
+        .collect();
+    Ok(FusedTrace {
+        n_parties,
+        spans,
+        links,
+        unlinked_recvs: unlinked,
+        span_index,
+    })
+}
+
+/// Walk-back step budget — far above any real iteration's causal depth;
+/// a backstop against pathological traces.
+const MAX_PATH_STEPS: usize = 200;
+
+impl FusedTrace {
+    /// Sorted distinct iterations that have at least one span.
+    pub fn iterations(&self) -> Vec<usize> {
+        let mut ts: Vec<usize> = self.spans.iter().map(|s| s.t).collect();
+        ts.sort_unstable();
+        ts.dedup();
+        ts
+    }
+
+    fn span_by_id(&self, party: usize, span_id: u64) -> Option<&SpanRec> {
+        self.span_index.get(&(party, span_id)).map(|&i| &self.spans[i])
+    }
+
+    /// Reconstruct iteration `t`'s critical path, chronological order.
+    /// Empty when the iteration has no spans.
+    pub fn critical_path(&self, t: usize) -> Vec<Segment> {
+        let Some(anchor) = self
+            .spans
+            .iter()
+            .filter(|s| s.t == t)
+            .max_by(|a, b| a.end.total_cmp(&b.end))
+        else {
+            return Vec::new();
+        };
+        let mut path = Vec::new();
+        let mut span = anchor;
+        let mut cursor = anchor.end;
+        for _ in 0..MAX_PATH_STEPS {
+            // latest inbound frame this span was causally waiting on
+            let dep = self
+                .links
+                .iter()
+                .filter(|l| {
+                    l.to == span.party
+                        && l.recv_ts < cursor
+                        && l.recv_ts >= span.start
+                        && l.send_ts < l.recv_ts
+                })
+                .max_by(|a, b| a.recv_ts.total_cmp(&b.recv_ts));
+            match dep {
+                None => {
+                    path.push(Segment::Stage {
+                        party: span.party,
+                        stage: span.stage.clone(),
+                        start: span.start.min(cursor),
+                        end: cursor,
+                    });
+                    break;
+                }
+                Some(l) => {
+                    path.push(Segment::Stage {
+                        party: span.party,
+                        stage: span.stage.clone(),
+                        start: l.recv_ts,
+                        end: cursor,
+                    });
+                    path.push(Segment::Link {
+                        from: l.from,
+                        to: l.to,
+                        tag: l.tag.clone(),
+                        start: l.send_ts,
+                        end: l.recv_ts,
+                    });
+                    match self.span_by_id(l.from, l.send_span) {
+                        Some(s) if s.t == t => {
+                            span = s;
+                            cursor = l.send_ts.min(s.end);
+                        }
+                        // frame left outside any span of this iteration
+                        // (setup traffic, previous iteration): stop here
+                        _ => break,
+                    }
+                }
+            }
+        }
+        path.reverse();
+        path
+    }
+
+    /// The slowest segment of iteration `t`'s critical path.
+    pub fn bottleneck(&self, t: usize) -> Option<Segment> {
+        self.critical_path(t)
+            .into_iter()
+            .max_by(|a, b| a.dur().total_cmp(&b.dur()))
+    }
+
+    /// Per-party busy/blocked split across iteration `t`'s window. Busy
+    /// counts pipeline-stage spans only (protocol spans nest inside them
+    /// and would double-count).
+    pub fn stragglers(&self, t: usize) -> Vec<PartyActivity> {
+        let iter_spans: Vec<&SpanRec> = self.spans.iter().filter(|s| s.t == t).collect();
+        if iter_spans.is_empty() {
+            return Vec::new();
+        }
+        let lo = iter_spans.iter().map(|s| s.start).fold(f64::INFINITY, f64::min);
+        let hi = iter_spans.iter().map(|s| s.end).fold(f64::NEG_INFINITY, f64::max);
+        let window = (hi - lo).max(0.0);
+        (0..self.n_parties)
+            .map(|party| {
+                let busy: f64 = iter_spans
+                    .iter()
+                    .filter(|s| s.party == party && PIPELINE_STAGES.contains(&s.stage.as_str()))
+                    .map(|s| (s.end - s.start).max(0.0))
+                    .sum();
+                PartyActivity { party, busy, blocked: (window - busy).max(0.0) }
+            })
+            .collect()
+    }
+
+    /// Export the fused timeline as Chrome trace-event JSON (the
+    /// `{"traceEvents": [...]}` object form), loadable in Perfetto.
+    /// Spans become `X` duration slices (pid = party); every linked
+    /// send→recv pair becomes an `s`→`f` flow arrow.
+    pub fn chrome_trace(&self) -> Json {
+        let base = self
+            .spans
+            .iter()
+            .map(|s| s.start)
+            .chain(self.links.iter().map(|l| l.send_ts))
+            .fold(f64::INFINITY, f64::min);
+        let base = if base.is_finite() { base } else { 0.0 };
+        let us = |x: f64| Json::Num(((x - base) * 1e6).max(0.0));
+
+        let mut events = Vec::new();
+        for party in 0..self.n_parties {
+            events.push(Json::obj(vec![
+                ("name", Json::str("process_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::Int(party as u64)),
+                ("tid", Json::Int(0)),
+                ("args", Json::obj(vec![("name", Json::str(format!("party {party}")))])),
+            ]));
+        }
+        for s in &self.spans {
+            events.push(Json::obj(vec![
+                ("name", Json::str(s.stage.clone())),
+                ("cat", Json::str("stage")),
+                ("ph", Json::str("X")),
+                ("pid", Json::Int(s.party as u64)),
+                ("tid", Json::Int(0)),
+                ("ts", us(s.start)),
+                ("dur", Json::Num(((s.end - s.start) * 1e6).max(0.0))),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("t", Json::Int(s.t as u64)),
+                        ("span_id", Json::Int(s.span_id)),
+                    ]),
+                ),
+            ]));
+        }
+        for l in &self.links {
+            // flow ids: (from, to, seq) packed into one integer, unique
+            // per pair and well under 2^53
+            let id = ((l.from as u64) << 40) | ((l.to as u64) << 32) | l.seq;
+            events.push(Json::obj(vec![
+                ("name", Json::str(l.tag.clone())),
+                ("cat", Json::str("net")),
+                ("ph", Json::str("s")),
+                ("id", Json::Int(id)),
+                ("pid", Json::Int(l.from as u64)),
+                ("tid", Json::Int(0)),
+                ("ts", us(l.send_ts)),
+            ]));
+            events.push(Json::obj(vec![
+                ("name", Json::str(l.tag.clone())),
+                ("cat", Json::str("net")),
+                ("ph", Json::str("f")),
+                ("bp", Json::str("e")),
+                ("id", Json::Int(id)),
+                ("pid", Json::Int(l.to as u64)),
+                ("tid", Json::Int(0)),
+                ("ts", us(l.recv_ts)),
+            ]));
+        }
+        Json::obj(vec![("traceEvents", Json::Arr(events))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_trace(dir: &std::path::Path, party: usize, lines: &[String]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join(format!("party-{party}.jsonl")), lines.join("\n") + "\n")
+            .unwrap();
+    }
+
+    fn clock(party: usize, epoch: f64) -> String {
+        format!(r#"{{"kind":"clock","party":{party},"epoch_unix_s":{epoch}}}"#)
+    }
+
+    fn span(party: usize, t: usize, stage: &str, id: u64, start: f64, wall: f64) -> String {
+        format!(
+            r#"{{"kind":"span","party":{party},"t":{t},"stage":{stage:?},"span_id":{id},"start_s":{start},"wall_s":{wall}}}"#
+        )
+    }
+
+    fn send(party: usize, to: usize, tag: &str, t: usize, id: u64, seq: u64, ts: f64) -> String {
+        format!(
+            r#"{{"kind":"send","party":{party},"to":{to},"tag":{tag:?},"t":{t},"stage":"exchange","span_id":{id},"seq":{seq},"bytes":64,"ts_s":{ts}}}"#
+        )
+    }
+
+    fn recv(party: usize, from: usize, tag: &str, t: usize, id: u64, seq: u64, ts: f64) -> String {
+        format!(
+            r#"{{"kind":"recv","party":{party},"from":{from},"tag":{tag:?},"t":{t},"stage":"exchange","span_id":{id},"seq":{seq},"bytes":64,"ts_s":{ts}}}"#
+        )
+    }
+
+    /// Two parties with epochs half a second apart: party 1's exchange
+    /// feeds party 0's combine over one frame. The walk-back must align
+    /// the clocks, link the frame, and produce stage→link→stage.
+    #[test]
+    fn fuses_aligns_and_walks_the_critical_path() {
+        let dir = std::env::temp_dir().join("efmvfl_fuse_walk_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_trace(
+            &dir,
+            0,
+            &[
+                clock(0, 1000.0),
+                span(0, 0, "combine", 9, 0.5, 0.3),
+                recv(0, 1, "z", 0, 5, 0, 0.6),
+            ],
+        );
+        write_trace(
+            &dir,
+            1,
+            &[
+                clock(1, 1000.5),
+                span(1, 0, "exchange", 5, 0.0, 0.1),
+                send(1, 0, "z", 0, 5, 0, 0.05),
+            ],
+        );
+        let fused = load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(fused.n_parties, 2);
+        assert_eq!(fused.unlinked_recvs, 0);
+        assert_eq!(fused.iterations(), vec![0]);
+        // party 1's timestamps shift by +0.5 on the fused timeline
+        let link = &fused.links[0];
+        assert!((link.send_ts - 0.55).abs() < 1e-9, "send_ts {}", link.send_ts);
+        assert!((link.recv_ts - 0.6).abs() < 1e-9);
+
+        let path = fused.critical_path(0);
+        assert_eq!(path.len(), 3, "{path:?}");
+        match &path[0] {
+            Segment::Stage { party: 1, stage, .. } => assert_eq!(stage, "exchange"),
+            other => panic!("expected party-1 stage first, got {other:?}"),
+        }
+        match &path[1] {
+            Segment::Link { from: 1, to: 0, .. } => {}
+            other => panic!("expected 1->0 link, got {other:?}"),
+        }
+        match &path[2] {
+            Segment::Stage { party: 0, stage, start, end } => {
+                assert_eq!(stage, "combine");
+                assert!((start - 0.6).abs() < 1e-9 && (end - 0.8).abs() < 1e-9);
+            }
+            other => panic!("expected party-0 combine last, got {other:?}"),
+        }
+        // the 200ms combine tail dominates
+        match fused.bottleneck(0).unwrap() {
+            Segment::Stage { party: 0, .. } => {}
+            other => panic!("wrong bottleneck {other:?}"),
+        }
+        let acts = fused.stragglers(0);
+        assert!((acts[0].busy - 0.3).abs() < 1e-9);
+        assert!((acts[1].busy - 0.1).abs() < 1e-9);
+        assert!((acts[1].blocked - 0.2).abs() < 1e-9); // window 0.3 − busy 0.1
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn recv_without_matching_send_is_counted_unlinked() {
+        let dir = std::env::temp_dir().join("efmvfl_fuse_unlinked_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_trace(
+            &dir,
+            0,
+            &[clock(0, 1000.0), recv(0, 1, "ghost", 0, 5, 3, 0.1)],
+        );
+        write_trace(&dir, 1, &[clock(1, 1000.0)]);
+        let fused = load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(fused.unlinked_recvs, 1);
+        assert!(fused.links.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn chrome_trace_exports_slices_and_flow_pairs() {
+        let dir = std::env::temp_dir().join("efmvfl_fuse_chrome_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_trace(
+            &dir,
+            0,
+            &[
+                clock(0, 1000.0),
+                span(0, 0, "combine", 9, 0.5, 0.3),
+                recv(0, 1, "z", 0, 5, 0, 0.6),
+            ],
+        );
+        write_trace(
+            &dir,
+            1,
+            &[
+                clock(1, 1000.0),
+                span(1, 0, "exchange", 5, 0.0, 0.1),
+                send(1, 0, "z", 0, 5, 0, 0.05),
+            ],
+        );
+        let fused = load(dir.to_str().unwrap()).unwrap();
+        let Json::Obj(top) = fused.chrome_trace() else { panic!("not an object") };
+        let Json::Arr(events) = &top[0].1 else { panic!("traceEvents not an array") };
+        let ph = |e: &Json, want: &str| {
+            matches!(e, Json::Obj(p) if p.iter().any(|(k, v)| k == "ph" && *v == Json::str(want)))
+        };
+        assert_eq!(events.iter().filter(|e| ph(e, "M")).count(), 2);
+        assert_eq!(events.iter().filter(|e| ph(e, "X")).count(), 2);
+        assert_eq!(events.iter().filter(|e| ph(e, "s")).count(), 1);
+        assert_eq!(events.iter().filter(|e| ph(e, "f")).count(), 1);
+        // timestamps land non-negative on the rebased µs timeline
+        for e in events {
+            if let Json::Obj(pairs) = e {
+                if let Some((_, Json::Num(ts))) = pairs.iter().find(|(k, _)| k == "ts") {
+                    assert!(*ts >= 0.0);
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -33,13 +33,15 @@
 
 use crate::benchkit::Json;
 use crate::metrics::LogHistogram;
-use crate::net::Transport;
+use crate::net::{Transport, WireTrace};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::io::Write as _;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
+
+pub mod fuse;
 
 /// The `[obs]` section of a run configuration: where traces go and where
 /// the live metrics endpoint listens. Both default to off.
@@ -100,11 +102,18 @@ pub fn max_level() -> Level {
     *MAX_LEVEL.get_or_init(|| parse_level(std::env::var("EFMVFL_LOG").ok().as_deref()))
 }
 
+/// The pure gating rule: is a message at `level` emitted under
+/// `threshold`? (Split out from [`log_enabled`] so the filter matrix is
+/// testable without touching the process-wide `EFMVFL_LOG` latch.)
+pub fn enabled_at(level: Level, threshold: Level) -> bool {
+    level <= threshold
+}
+
 /// True when messages at `level` should be emitted. The `log!` macro
 /// checks this *before* formatting, so suppressed messages cost one
 /// atomic load and no allocation.
 pub fn log_enabled(level: Level) -> bool {
-    level <= max_level()
+    enabled_at(level, max_level())
 }
 
 /// Emit one formatted log line to stderr (the macro's backend).
@@ -139,9 +148,61 @@ pub use crate::obs_log as log;
 /// trace covers all four.
 pub const PIPELINE_STAGES: [&str; 4] = ["prepare", "mask_encrypt", "exchange", "combine"];
 
+/// Stage names encodable into the one-byte `stage` field of a
+/// [`WireTrace`] envelope: the four pipeline stages, the four protocol
+/// rounds, and the serve plane.
+pub const WIRE_STAGES: [&str; 9] =
+    ["prepare", "mask_encrypt", "exchange", "combine", "p1", "p2", "p3", "p4", "serve"];
+
+/// Stage code for no open span (setup traffic, untracked contexts).
+pub const WIRE_STAGE_NONE: u8 = 255;
+
+/// Encode a stage name into its wire code (`WIRE_STAGE_NONE` if unknown).
+pub fn wire_stage_code(name: &str) -> u8 {
+    WIRE_STAGES.iter().position(|s| *s == name).map_or(WIRE_STAGE_NONE, |i| i as u8)
+}
+
+/// Decode a wire stage code back to its name (`"-"` for none/unknown).
+pub fn wire_stage_name(code: u8) -> &'static str {
+    WIRE_STAGES.get(code as usize).copied().unwrap_or("-")
+}
+
+/// Wall-clock seconds since the Unix epoch (0.0 if the clock is broken).
+pub fn unix_time_s() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+/// The innermost open traced span's identity, stamped onto every frame
+/// the transport sends while it is open.
+#[derive(Clone, Copy)]
+struct WireCtx {
+    t: u32,
+    stage: u8,
+    span_id: u64,
+}
+
+impl WireCtx {
+    fn none() -> WireCtx {
+        WireCtx { t: 0, stage: WIRE_STAGE_NONE, span_id: 0 }
+    }
+}
+
 struct TraceInner {
     party: usize,
     out: Mutex<std::io::BufWriter<std::fs::File>>,
+    /// Monotonic epoch every `ts_s`/`start_s` in this file is relative to.
+    epoch: Instant,
+    /// Run identity shared by all parties (the training seed).
+    run_id: AtomicU64,
+    /// Next span id (starts at 1; 0 means "no span").
+    next_span: AtomicU64,
+    /// Innermost open span (what send envelopes carry).
+    wire: Mutex<WireCtx>,
+    /// Per-destination send counters (pairs send↔recv during fusion).
+    seqs: Mutex<Vec<u32>>,
 }
 
 impl TraceInner {
@@ -166,19 +227,35 @@ impl Tracer {
         Tracer { inner: None }
     }
 
-    /// Open `dir/party-<party>.jsonl` for writing (creating `dir`).
+    /// The shared no-op tracer (for trait-default accessors that must
+    /// hand out a reference without owning storage).
+    pub fn disabled_static() -> &'static Tracer {
+        static DISABLED: OnceLock<Tracer> = OnceLock::new();
+        DISABLED.get_or_init(Tracer::disabled)
+    }
+
+    /// Open `dir/party-<party>.jsonl` for writing (creating `dir`). The
+    /// first record is a `clock` anchor mapping this file's monotonic
+    /// epoch to wall time, so fusion can align parties' timelines.
     pub fn to_dir(dir: &str, party: usize) -> Result<Tracer> {
         std::fs::create_dir_all(dir)
             .map_err(|e| anyhow!("creating trace dir {dir}: {e}"))?;
         let path = std::path::Path::new(dir).join(format!("party-{party}.jsonl"));
         let file = std::fs::File::create(&path)
             .map_err(|e| anyhow!("creating trace file {}: {e}", path.display()))?;
-        Ok(Tracer {
+        let tracer = Tracer {
             inner: Some(Arc::new(TraceInner {
                 party,
                 out: Mutex::new(std::io::BufWriter::new(file)),
+                epoch: Instant::now(),
+                run_id: AtomicU64::new(0),
+                next_span: AtomicU64::new(1),
+                wire: Mutex::new(WireCtx::none()),
+                seqs: Mutex::new(Vec::new()),
             })),
-        })
+        };
+        tracer.event("clock", vec![("epoch_unix_s", Json::Num(unix_time_s()))]);
+        Ok(tracer)
     }
 
     /// [`Tracer::to_dir`] when a directory is configured, else disabled.
@@ -196,22 +273,121 @@ impl Tracer {
 
     /// Open a span for `stage` of iteration `t`. On an enabled tracer
     /// this samples the clock and the HE op counters; on a disabled one
-    /// it returns an inert span (no work at all).
+    /// it returns an inert span (no work at all). While the span is
+    /// open, frames sent through a transport carrying this tracer are
+    /// stamped with its identity (see [`Tracer::wire_send_context`]).
     pub fn span(&self, stage: &'static str, t: usize) -> Span {
+        self.span_with_code(stage, t, wire_stage_code(stage))
+    }
+
+    /// Open a protocol-round span (`stage == "proto"`, a `proto` field,
+    /// and the protocol's own wire stage code on outgoing envelopes).
+    pub fn proto_span(&self, proto: &'static str, t: usize) -> Span {
+        let mut span = self.span_with_code("proto", t, wire_stage_code(proto));
+        span.field("proto", Json::str(proto));
+        span
+    }
+
+    fn span_with_code(&self, stage: &'static str, t: usize, code: u8) -> Span {
         match &self.inner {
             None => Span { state: None },
-            Some(inner) => Span {
-                state: Some(Box::new(SpanState {
-                    tracer: inner.clone(),
-                    stage,
-                    t,
-                    started: Instant::now(),
-                    ct_exps0: crate::crypto::he_ops::perf::ct_exps(),
-                    mont0: crate::bignum::modular::perf::snapshot(),
-                    fields: Vec::new(),
-                })),
-            },
+            Some(inner) => {
+                let span_id = inner.next_span.fetch_add(1, Ordering::Relaxed);
+                let prev_wire = {
+                    let mut wire = inner.wire.lock().unwrap();
+                    std::mem::replace(
+                        &mut *wire,
+                        WireCtx { t: t as u32, stage: code, span_id },
+                    )
+                };
+                Span {
+                    state: Some(Box::new(SpanState {
+                        tracer: inner.clone(),
+                        stage,
+                        t,
+                        span_id,
+                        prev_wire,
+                        start_s: inner.epoch.elapsed().as_secs_f64(),
+                        started: Instant::now(),
+                        ct_exps0: crate::crypto::he_ops::perf::ct_exps(),
+                        mont0: crate::bignum::modular::perf::snapshot(),
+                        fields: Vec::new(),
+                    })),
+                }
+            }
         }
+    }
+
+    /// Set the run identity stamped onto wire envelopes (all parties of
+    /// one run must agree; the training seed serves). No-op when disabled.
+    pub fn set_run_id(&self, run_id: u64) {
+        if let Some(inner) = &self.inner {
+            inner.run_id.store(run_id, Ordering::Relaxed);
+        }
+    }
+
+    /// Seconds since this tracer's monotonic epoch (0.0 when disabled).
+    pub fn elapsed_s(&self) -> f64 {
+        self.inner.as_ref().map_or(0.0, |i| i.epoch.elapsed().as_secs_f64())
+    }
+
+    /// The trace context to stamp onto a frame bound for `to`, bumping
+    /// the per-destination sequence number. `None` when tracing is off —
+    /// the caller must then send the plain (un-enveloped) encoding, which
+    /// keeps the disabled wire byte-identical.
+    pub fn wire_send_context(&self, to: usize) -> Option<WireTrace> {
+        let inner = self.inner.as_ref()?;
+        let ctx = *inner.wire.lock().unwrap();
+        let mut seqs = inner.seqs.lock().unwrap();
+        if seqs.len() <= to {
+            seqs.resize(to + 1, 0);
+        }
+        let seq = seqs[to];
+        seqs[to] += 1;
+        Some(WireTrace {
+            run_id: inner.run_id.load(Ordering::Relaxed),
+            t: ctx.t,
+            stage: ctx.stage,
+            span_id: ctx.span_id,
+            seq,
+        })
+    }
+
+    /// Record the send side of an enveloped frame.
+    pub fn trace_sent(&self, to: usize, tag: &str, tr: &WireTrace, wire_len: usize) {
+        let ts = self.elapsed_s();
+        self.event(
+            "send",
+            vec![
+                ("to", Json::Int(to as u64)),
+                ("tag", Json::str(tag)),
+                ("t", Json::Int(tr.t as u64)),
+                ("stage", Json::str(wire_stage_name(tr.stage))),
+                ("span_id", Json::Int(tr.span_id)),
+                ("seq", Json::Int(tr.seq as u64)),
+                ("bytes", Json::Int(wire_len as u64)),
+                ("ts_s", Json::Num(ts)),
+            ],
+        );
+    }
+
+    /// Record the recv side of an enveloped frame: `span_id`/`stage`/`t`
+    /// are the *sender's*, linking this event to the sender's span.
+    pub fn trace_received(&self, from: usize, tag: &str, tr: &WireTrace, wire_len: usize) {
+        let ts = self.elapsed_s();
+        self.event(
+            "recv",
+            vec![
+                ("from", Json::Int(from as u64)),
+                ("tag", Json::str(tag)),
+                ("t", Json::Int(tr.t as u64)),
+                ("stage", Json::str(wire_stage_name(tr.stage))),
+                ("span_id", Json::Int(tr.span_id)),
+                ("seq", Json::Int(tr.seq as u64)),
+                ("bytes", Json::Int(wire_len as u64)),
+                ("ts_s", Json::Num(ts)),
+            ],
+        );
     }
 
     /// Write a free-form record `{"kind": <kind>, "party": N, ...fields}`.
@@ -231,6 +407,9 @@ struct SpanState {
     tracer: Arc<TraceInner>,
     stage: &'static str,
     t: usize,
+    span_id: u64,
+    prev_wire: WireCtx,
+    start_s: f64,
     started: Instant,
     ct_exps0: u64,
     mont0: crate::bignum::modular::perf::Snapshot,
@@ -261,11 +440,16 @@ impl Span {
         let wall = state.started.elapsed().as_secs_f64();
         let ct_exps = crate::crypto::he_ops::perf::ct_exps() - state.ct_exps0;
         let mont = crate::bignum::modular::perf::snapshot().delta_since(&state.mont0);
+        // pop this span off the wire-context stack (spans close in
+        // strict nesting order: proto rounds inside pipeline stages)
+        *state.tracer.wire.lock().unwrap() = state.prev_wire;
         let mut pairs = vec![
             ("kind", Json::str("span")),
             ("party", Json::Int(state.tracer.party as u64)),
             ("t", Json::Int(state.t as u64)),
             ("stage", Json::str(state.stage)),
+            ("span_id", Json::Int(state.span_id)),
+            ("start_s", Json::Num(state.start_s)),
             ("wall_s", Json::Num(wall)),
             ("ct_exps", Json::Int(ct_exps)),
             ("mont_sqrs", Json::Int(mont.sqrs)),
@@ -530,6 +714,7 @@ impl MetricsRegistry {
         self.inc("efmvfl_offline_bytes_total", stats.offline_bytes());
         self.inc("efmvfl_triple_bytes_total", stats.triple_bytes());
         self.inc("efmvfl_cipher_bytes_total", stats.cipher_bytes());
+        self.inc("efmvfl_trace_bytes_total", stats.trace_bytes());
     }
 
     /// Serialize for the control plane (line-based text; f64 as exact
@@ -672,6 +857,84 @@ pub fn gather_registry<T: Transport>(
 }
 
 // ---------------------------------------------------------------------
+// Clock alignment (per-link offset/RTT over the control plane)
+// ---------------------------------------------------------------------
+
+/// Ping round trips per ordered link during one [`clock_align`] pass.
+/// The minimum-RTT sample wins (standard NTP practice): queueing noise
+/// only ever *adds* latency.
+const PING_ROUNDS: usize = 3;
+
+/// Estimate every ordered link's clock offset and RTT with NTP-style
+/// ping exchanges over the **uncounted** control plane (`deliver`, like
+/// `gather_registry`) — zero wire bytes land in `NetStats`. Ordered
+/// pairs run strictly serialized in a globally agreed order, so every
+/// party walks the same schedule and nobody deadlocks. For each pair
+/// `(a, b)`, party `a` writes a `clock_align` trace record (`peer`,
+/// `offset_s` = peer epoch-clock minus ours, `rtt_s`) and sets the
+/// `efmvfl_link_rtt_seconds{from,to}` gauge. `epoch_tag` makes message
+/// tags unique across repeated passes (use the iteration number).
+pub fn clock_align<T: Transport>(
+    transport: &mut T,
+    tracer: &Tracer,
+    metrics: &mut MetricsRegistry,
+    epoch_tag: usize,
+) {
+    use crate::net::Payload;
+    let me = transport.id();
+    let n = transport.n_parties();
+    for a in 0..n {
+        for b in 0..n {
+            if a == b {
+                continue;
+            }
+            let ping = format!("obs:ping:{epoch_tag}:{a}:{b}");
+            let pong = format!("obs:pong:{epoch_tag}:{a}:{b}");
+            if me == a {
+                let (mut best_rtt, mut best_off) = (f64::INFINITY, 0.0);
+                for _ in 0..PING_ROUNDS {
+                    let t0 = tracer.elapsed_s();
+                    transport.deliver(b, &ping, Payload::Ring(vec![t0.to_bits()]).encode());
+                    let (t1, t2) = match transport.recv(b, &pong) {
+                        Payload::Ring(v) if v.len() == 2 => {
+                            (f64::from_bits(v[0]), f64::from_bits(v[1]))
+                        }
+                        other => panic!("clock pong from {b}: unexpected {other:?}"),
+                    };
+                    let t3 = tracer.elapsed_s();
+                    let rtt = ((t3 - t0) - (t2 - t1)).max(0.0);
+                    if rtt < best_rtt {
+                        best_rtt = rtt;
+                        best_off = ((t1 - t0) + (t2 - t3)) / 2.0;
+                    }
+                }
+                tracer.event(
+                    "clock_align",
+                    vec![
+                        ("peer", Json::Int(b as u64)),
+                        ("offset_s", Json::Num(best_off)),
+                        ("rtt_s", Json::Num(best_rtt)),
+                        ("epoch_tag", Json::Int(epoch_tag as u64)),
+                    ],
+                );
+                metrics.set_gauge(
+                    &format!("efmvfl_link_rtt_seconds{{from=\"{a}\",to=\"{b}\"}}"),
+                    best_rtt,
+                );
+            } else if me == b {
+                for _ in 0..PING_ROUNDS {
+                    let _ = transport.recv(a, &ping);
+                    let t1 = tracer.elapsed_s();
+                    let t2 = tracer.elapsed_s();
+                    transport
+                        .deliver(a, &pong, Payload::Ring(vec![t1.to_bits(), t2.to_bits()]).encode());
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Prometheus /metrics endpoint
 // ---------------------------------------------------------------------
 
@@ -703,8 +966,13 @@ impl MetricsServer {
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            // render under the lock, respond off-thread:
+                            // a slow scraper must not block the next
+                            // accept (two concurrent scrapes both finish)
                             let body = registry.lock().unwrap().to_prometheus();
-                            respond(stream, &body);
+                            let _ = std::thread::Builder::new()
+                                .name("efmvfl-metrics-conn".into())
+                                .spawn(move || respond(stream, &body));
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(std::time::Duration::from_millis(2));
@@ -775,6 +1043,54 @@ mod tests {
     }
 
     #[test]
+    fn bad_or_missing_log_levels_fall_back_to_warn() {
+        // every way EFMVFL_LOG can be wrong keeps the default threshold
+        for bad in ["", "  ", "WARN", "Info", "trace", "2", "warn,info"] {
+            assert_eq!(parse_level(Some(bad)), Level::Warn, "{bad:?}");
+        }
+        // exact lowercase names (with surrounding whitespace) parse
+        for (s, want) in [
+            ("error", Level::Error),
+            ("warn", Level::Warn),
+            ("info", Level::Info),
+            ("debug", Level::Debug),
+            ("\tdebug ", Level::Debug),
+        ] {
+            assert_eq!(parse_level(Some(s)), want, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn log_filter_matrix_matches_severity_order() {
+        use Level::*;
+        // the full 4×4 gating matrix the log! macro applies: a message
+        // passes iff it is at least as severe as the threshold
+        for (threshold, passing) in [
+            (Error, vec![Error]),
+            (Warn, vec![Error, Warn]),
+            (Info, vec![Error, Warn, Info]),
+            (Debug, vec![Error, Warn, Info, Debug]),
+        ] {
+            for msg in [Error, Warn, Info, Debug] {
+                assert_eq!(
+                    enabled_at(msg, threshold),
+                    passing.contains(&msg),
+                    "msg {msg:?} under threshold {threshold:?}"
+                );
+            }
+        }
+        // the process-wide latch agrees with the pure rule
+        for msg in [Error, Warn, Info, Debug] {
+            assert_eq!(log_enabled(msg), enabled_at(msg, max_level()));
+        }
+        // and the macro itself compiles/runs at every level
+        crate::obs::log!(error, "matrix test {}", 1);
+        crate::obs::log!(warn, "matrix test {}", 2);
+        crate::obs::log!(info, "matrix test {}", 3);
+        crate::obs::log!(debug, "matrix test {}", 4);
+    }
+
+    #[test]
     fn disabled_tracer_is_inert() {
         let tr = Tracer::disabled();
         assert!(!tr.enabled());
@@ -799,8 +1115,14 @@ mod tests {
         drop(tr);
         let text = std::fs::read_to_string(dir.join("party-2.jsonl")).unwrap();
         let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines.len(), 2);
-        let rec = parse_flat_record(lines[0]).unwrap();
+        assert_eq!(lines.len(), 3);
+        // record 0: the clock anchor written at open
+        let clock = parse_flat_record(lines[0]).unwrap();
+        assert!(clock.iter().any(|(k, v)| k == "kind" && *v == Json::str("clock")));
+        assert!(clock
+            .iter()
+            .any(|(k, v)| k == "epoch_unix_s" && matches!(v, Json::Num(s) if *s > 0.0)));
+        let rec = parse_flat_record(lines[1]).unwrap();
         let get = |k: &str| rec.iter().find(|(key, _)| key == k).map(|(_, v)| v.clone());
         assert_eq!(get("kind"), Some(Json::str("span")));
         assert_eq!(get("party"), Some(Json::Int(2)));
@@ -808,9 +1130,112 @@ mod tests {
         assert_eq!(get("stage"), Some(Json::str("exchange")));
         assert_eq!(get("queue_depth"), Some(Json::Int(3)));
         assert!(matches!(get("wall_s"), Some(Json::Num(v)) if v >= 0.0));
-        let net = parse_flat_record(lines[1]).unwrap();
+        assert!(matches!(get("span_id"), Some(Json::Int(id)) if id >= 1));
+        assert!(matches!(get("start_s"), Some(Json::Num(v)) if v >= 0.0));
+        let net = parse_flat_record(lines[2]).unwrap();
         assert!(net.iter().any(|(k, v)| k == "kind" && *v == Json::str("net")));
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn wire_context_tracks_span_nesting_and_sequences() {
+        let dir = std::env::temp_dir().join("efmvfl_obs_wire_ctx_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let tr = Tracer::to_dir(dir.to_str().unwrap(), 0).unwrap();
+        tr.set_run_id(99);
+        // no open span: envelopes still flow, stage is the none code
+        let c0 = tr.wire_send_context(1).unwrap();
+        assert_eq!((c0.run_id, c0.stage, c0.span_id, c0.seq), (99, WIRE_STAGE_NONE, 0, 0));
+        let outer = tr.span("exchange", 4);
+        let c1 = tr.wire_send_context(1).unwrap();
+        assert_eq!(c1.t, 4);
+        assert_eq!(wire_stage_name(c1.stage), "exchange");
+        assert_eq!(c1.seq, 1, "per-destination seq increments");
+        assert_eq!(tr.wire_send_context(2).unwrap().seq, 0, "seq is per destination");
+        {
+            let inner = tr.proto_span("p3", 4);
+            let c2 = tr.wire_send_context(1).unwrap();
+            assert_eq!(wire_stage_name(c2.stage), "p3", "innermost span wins");
+            assert_ne!(c2.span_id, c1.span_id);
+            inner.finish();
+        }
+        let c3 = tr.wire_send_context(1).unwrap();
+        assert_eq!(c3.span_id, c1.span_id, "context restored after nested finish");
+        outer.finish();
+        assert_eq!(tr.wire_send_context(1).unwrap().span_id, 0, "stack empty again");
+        // disabled tracers produce no context at all (zero wire bytes)
+        assert!(Tracer::disabled().wire_send_context(1).is_none());
+        assert!(Tracer::disabled_static().wire_send_context(0).is_none());
+        drop(tr);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn wire_stage_codes_roundtrip() {
+        for name in WIRE_STAGES {
+            assert_eq!(wire_stage_name(wire_stage_code(name)), name);
+        }
+        assert_eq!(wire_stage_code("no-such-stage"), WIRE_STAGE_NONE);
+        assert_eq!(wire_stage_name(WIRE_STAGE_NONE), "-");
+    }
+
+    #[test]
+    fn clock_align_measures_every_ordered_link() {
+        let (eps, _stats) = crate::net::full_mesh(3);
+        let mut handles = Vec::new();
+        for (me, mut ep) in eps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let mut metrics = MetricsRegistry::new();
+                clock_align(&mut ep, &Tracer::disabled(), &mut metrics, 0);
+                (me, metrics, ep)
+            }));
+        }
+        for h in handles {
+            let (me, metrics, ep) = h.join().unwrap();
+            for peer in 0..3 {
+                if peer == me {
+                    continue;
+                }
+                let g = metrics
+                    .gauge(&format!("efmvfl_link_rtt_seconds{{from=\"{me}\",to=\"{peer}\"}}"));
+                assert!(g.is_finite() && g >= 0.0, "party {me} -> {peer}: rtt {g}");
+            }
+            // the pings ride the uncounted control plane: no bytes recorded
+            for to in 0..3 {
+                assert_eq!(ep.stats().link_bytes(me, to), 0, "clock pings must be uncounted");
+            }
+        }
+    }
+
+    #[test]
+    fn metrics_server_answers_two_concurrent_scrapes() {
+        use std::io::{Read, Write};
+        let registry = Arc::new(Mutex::new(MetricsRegistry::new()));
+        registry.lock().unwrap().inc("efmvfl_up_total", 1);
+        let server = MetricsServer::spawn("127.0.0.1:0", registry).unwrap();
+        let addr = server.addr();
+        // open both connections before either sends its request: a
+        // serial accept loop would stall the second behind the first's
+        // read timeout, a dropped connection would fail the read
+        let mut s1 = std::net::TcpStream::connect(addr).unwrap();
+        let mut s2 = std::net::TcpStream::connect(addr).unwrap();
+        let mut workers = Vec::new();
+        for mut s in [s2.try_clone().unwrap(), s1.try_clone().unwrap()] {
+            workers.push(std::thread::spawn(move || {
+                s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+                let mut out = String::new();
+                s.read_to_string(&mut out).unwrap();
+                out
+            }));
+        }
+        for w in workers {
+            let resp = w.join().unwrap();
+            assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+            assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+            assert!(resp.contains("efmvfl_up_total 1\n"), "{resp}");
+        }
+        let _ = s1.shutdown(std::net::Shutdown::Both);
+        let _ = s2.shutdown(std::net::Shutdown::Both);
     }
 
     #[test]

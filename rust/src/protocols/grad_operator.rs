@@ -15,7 +15,6 @@
 
 use super::mpc_online::mpc_mul;
 use super::ProtoCtx;
-use crate::benchkit::Json;
 use crate::glm::GlmKind;
 use crate::mpc::share::Share;
 use crate::net::Transport;
@@ -60,8 +59,7 @@ pub fn protocol2_grad_operator<T: Transport>(
     inputs: &GradOpInputs,
 ) -> GradOpOutputs {
     assert!(ctx.is_cp(), "Protocol 2 runs on computing parties only");
-    let mut span = ctx.tracer.span("proto", ctx.cur_iter);
-    span.field("proto", Json::str("p2"));
+    let span = ctx.tracer.proto_span("p2", ctx.cur_iter);
     let first = ctx.is_first_cp();
     let out = match kind {
         GlmKind::Logistic => {

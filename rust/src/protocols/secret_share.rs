@@ -53,6 +53,7 @@ pub fn share_and_sum<T: Transport>(
     own_vals: &[Elem],
 ) -> Option<Share> {
     let n = ctx.ep.n_parties();
+    let span = ctx.tracer.proto_span("p1", ctx.cur_iter);
     let mut acc: Option<Share> = None;
     for p in 0..n {
         let tag = format!("{tag_prefix}:{p}");
@@ -64,6 +65,7 @@ pub fn share_and_sum<T: Transport>(
             });
         }
     }
+    span.finish();
     acc
 }
 

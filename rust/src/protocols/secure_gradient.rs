@@ -111,8 +111,7 @@ pub fn protocol3_gradients<T: Transport>(
     let m = x_own.rows;
     let (cp_a, cp_b) = ctx.cp;
     let cps = [cp_a, cp_b];
-    let mut span = ctx.tracer.span("proto", ctx.cur_iter);
-    span.field("proto", crate::benchkit::Json::str("p3"));
+    let span = ctx.tracer.proto_span("p3", ctx.cur_iter);
 
     // Protocol entry guard: every ciphertext this round decrypts to a
     // double-scale gradient value, so both CP keys must be wide enough

@@ -49,8 +49,7 @@ pub fn protocol4_loss<T: Transport>(
 ) -> Option<f64> {
     let me = ctx.ep.id();
     const C: usize = 0;
-    let mut span = ctx.tracer.span("proto", ctx.cur_iter);
-    span.field("proto", crate::benchkit::Json::str("p4"));
+    let span = ctx.tracer.proto_span("p4", ctx.cur_iter);
 
     // CP side: build scalar shares [s1, s2] of the two aggregates.
     let my_scalars: Option<Vec<u64>> = if ctx.is_cp() {

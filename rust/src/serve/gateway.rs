@@ -210,7 +210,8 @@ pub fn run_gateway<T: Transport>(
             // store drift, a deployment bug) fails its requests, not
             // the mesh: the daemons stay connected and the next batch
             // is served normally
-            match drive_round(transport, store, w, kind, seed, round, &ids) {
+            let params = RoundParams { w, kind, seed, round };
+            match drive_round(transport, store, &params, &ids, &registry) {
                 Ok(scores) => {
                     report.records += ids.len() as u64;
                     report.batch_sizes.add(ids.len() as f64);
@@ -291,27 +292,56 @@ pub fn run_gateway<T: Transport>(
     Ok(report)
 }
 
+/// One round's scoring parameters (bundled so [`drive_round`] stays
+/// readable as its telemetry arguments grow).
+struct RoundParams<'a> {
+    /// Party 0's weight shard.
+    w: &'a [f64],
+    /// The GLM whose inverse link maps `WX` to scores.
+    kind: GlmKind,
+    /// Mesh-wide agreed mask seed.
+    seed: u64,
+    /// This round's number (mask domain separation).
+    round: u64,
+}
+
 /// One federated micro-batch round: broadcast the id list, fold every
 /// party's masked partial into the local one, reveal `WX`, apply the
 /// inverse link. Bit-identical to the offline round over the same rows.
+/// Each daemon's reply updates the live mesh-health gauges: its
+/// broadcast→reply round trip (`efmvfl_link_rtt_seconds`) and the wall
+/// time it was last heard from (`efmvfl_daemon_last_heartbeat_unix_seconds`).
 fn drive_round<T: Transport>(
     transport: &mut T,
     store: &FeatureStore,
-    w: &[f64],
-    kind: GlmKind,
-    seed: u64,
-    round: u64,
+    params: &RoundParams<'_>,
     ids: &[u64],
+    registry: &Mutex<MetricsRegistry>,
 ) -> Result<Vec<f64>> {
+    let &RoundParams { w, kind, seed, round } = params;
     let n = transport.n_parties();
+    let sent = std::time::Instant::now();
     transport.broadcast("serve:batch", &Payload::IdBatch { round, ids: ids.to_vec() });
     let x = store.gather(ids)?;
     let mut total = masked_partial(&x, w, 0, n, round_seed(seed, round));
     // consume every party's reply before validating any of them — each
     // round must drain exactly one `serve:wx` per daemon, or a bad
     // round would leave stale frames that desync every later round
-    let partials: Vec<Vec<u64>> =
-        (1..n).map(|q| transport.recv(q, "serve:wx").into_ring()).collect();
+    let partials: Vec<Vec<u64>> = (1..n)
+        .map(|q| {
+            let p = transport.recv(q, "serve:wx").into_ring();
+            let mut reg = registry.lock().unwrap();
+            reg.set_gauge(
+                &format!("efmvfl_link_rtt_seconds{{from=\"0\",to=\"{q}\"}}"),
+                sent.elapsed().as_secs_f64(),
+            );
+            reg.set_gauge(
+                &format!("efmvfl_daemon_last_heartbeat_unix_seconds{{party=\"{q}\"}}"),
+                crate::obs::unix_time_s(),
+            );
+            p
+        })
+        .collect();
     let mut bad = Vec::new();
     for (q, theirs) in partials.iter().enumerate() {
         if theirs.len() == total.len() {

@@ -2,8 +2,10 @@
 //! emit schema-valid JSONL spans covering every pipeline stage of every
 //! iteration (plus at least one protocol span per iteration), the
 //! merged metrics registry must agree with the comm report and render
-//! as Prometheus text, and turning tracing off must leave the run
-//! bit-identical — weights, losses, and counted bytes.
+//! as Prometheus text, and turning tracing off must leave the model
+//! plane bit-identical — weights, losses, message counts — while a
+//! traced run's extra wire bytes are exactly the trace-context
+//! envelopes it carried.
 
 use efmvfl::benchkit::Json;
 use efmvfl::coordinator::{train, TrainConfig};
@@ -91,14 +93,39 @@ fn tracing_off_is_bit_identical_to_tracing_on() {
     let traced_cfg = cfg().with_trace_dir(dir.to_str().unwrap());
     let traced = train(&split, &traced_cfg).expect("traced train");
     let plain = train(&split, &cfg()).expect("untraced train");
-    // the tracer must stay off the RNG streams and the counted planes:
-    // weights, loss curve, and every comm total agree bit-for-bit
+    // the tracer must stay off the RNG streams and the model plane:
+    // weights, loss curve, message counts, and offline bytes agree
+    // bit-for-bit
     assert_eq!(traced.weights, plain.weights, "weights must be bit-identical");
     assert_eq!(traced.losses, plain.losses, "loss curves must be bit-identical");
-    assert_eq!(traced.comm_mb, plain.comm_mb);
     assert_eq!(traced.offline_mb, plain.offline_mb);
     assert_eq!(traced.msgs, plain.msgs);
     assert_eq!(traced.iterations_run, plain.iterations_run);
+    // wire bytes: a traced run carries one fixed-size trace-context
+    // envelope per counted send, and those bytes are accounted exactly —
+    // the link totals differ from the plain run by precisely the trace
+    // class, which the plain run must not have at all
+    let link_total = |m: &efmvfl::obs::MetricsRegistry| -> u64 {
+        (0..PARTIES)
+            .flat_map(|from| (0..PARTIES).map(move |to| (from, to)))
+            .map(|(from, to)| {
+                m.counter(&format!("efmvfl_link_bytes_total{{from=\"{from}\",to=\"{to}\"}}"))
+            })
+            .sum()
+    };
+    assert_eq!(plain.metrics.counter("efmvfl_trace_bytes_total"), 0);
+    let trace_bytes = traced.metrics.counter("efmvfl_trace_bytes_total");
+    assert!(trace_bytes > 0, "traced run recorded no envelope bytes");
+    assert_eq!(
+        trace_bytes % efmvfl::net::TRACE_ENVELOPE_BYTES as u64,
+        0,
+        "trace bytes must be a whole number of envelopes"
+    );
+    assert_eq!(
+        link_total(&traced.metrics),
+        link_total(&plain.metrics) + trace_bytes,
+        "traced wire bytes must exceed plain by exactly the envelope bytes"
+    );
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -1,0 +1,96 @@
+//! Wire-honesty acceptance for trace-context propagation: on a real
+//! 3-party loopback-TCP mesh, a run with tracing disabled must put
+//! **zero** trace bytes on the wire (byte-identical totals to an
+//! uninstrumented build), and a traced run's extra wire bytes must be
+//! *exactly* the fixed-size trace-context envelopes it sent — no more,
+//! no less — while the model plane (weights, losses, message counts)
+//! stays bit-identical either way.
+
+use efmvfl::coordinator::{distributed, TrainConfig};
+use efmvfl::data::{split_vertical, synthetic};
+use efmvfl::net::tcp::{bind_ephemeral_roster, connect_mesh_with_listener};
+use efmvfl::net::TRACE_ENVELOPE_BYTES;
+use std::time::Duration;
+
+const PARTIES: usize = 3;
+
+fn cfg() -> TrainConfig {
+    TrainConfig::logistic(PARTIES)
+        .with_key_bits(256)
+        .with_iterations(3)
+        .with_batch(Some(64))
+        .with_seed(13)
+}
+
+/// Run a full distributed training over real loopback sockets and
+/// return every party's report (party 0 carries the gathered totals).
+fn tcp_run(cfg: &TrainConfig) -> Vec<distributed::PartyReport> {
+    let mut data = synthetic::credit_default_like(150, 7, 13);
+    data.standardize();
+    let split = split_vertical(&data, PARTIES);
+    let (roster, listeners) = bind_ephemeral_roster(PARTIES).expect("ephemeral roster");
+    let mut handles = Vec::with_capacity(PARTIES);
+    for (p, listener) in listeners.into_iter().enumerate() {
+        let roster = roster.clone();
+        let cfg = cfg.clone();
+        let x = split.party_block(p).clone();
+        let y = (p == 0).then(|| split.y.clone());
+        handles.push(std::thread::spawn(move || {
+            let transport =
+                connect_mesh_with_listener(&roster, p, listener, Duration::from_secs(30))
+                    .expect("mesh bootstrap");
+            distributed::train_party(transport, x, y, &cfg).expect("distributed train")
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+#[test]
+fn trace_envelopes_are_exactly_accounted_on_a_tcp_mesh() {
+    let dir = std::env::temp_dir().join("efmvfl_trace_wire_parity");
+    let _ = std::fs::remove_dir_all(&dir);
+    let plain = tcp_run(&cfg());
+    let traced = tcp_run(&cfg().with_trace_dir(dir.to_str().unwrap()));
+
+    // the model plane is untouched by tracing: every party's weights,
+    // C's loss curve, and the message totals agree bit-for-bit
+    for (p, (tr, pl)) in traced.iter().zip(&plain).enumerate() {
+        assert_eq!(tr.party_id, p);
+        assert_eq!(tr.weights, pl.weights, "party {p}: weights diverged under tracing");
+    }
+    assert_eq!(traced[0].losses, plain[0].losses, "loss curves diverged under tracing");
+    assert_eq!(traced[0].iterations_run, plain[0].iterations_run);
+
+    let plain_comm = plain[0].comm.as_ref().expect("party 0 gathers comm totals");
+    let traced_comm = traced[0].comm.as_ref().expect("party 0 gathers comm totals");
+    assert_eq!(traced_comm.msgs, plain_comm.msgs, "message totals diverged under tracing");
+
+    // tracing off ⇒ zero trace bytes anywhere: neither the gathered
+    // comm report nor the merged registry carries a trace class
+    assert_eq!(plain_comm.trace_mb, 0.0, "untraced run put trace bytes on the wire");
+    assert_eq!(plain[0].metrics.counter("efmvfl_trace_bytes_total"), 0);
+
+    // tracing on ⇒ the overhead is a whole number of fixed-size
+    // envelopes, and the wire totals differ by exactly that class
+    let trace_bytes = traced[0].metrics.counter("efmvfl_trace_bytes_total");
+    assert!(trace_bytes > 0, "traced run recorded no envelope bytes");
+    assert_eq!(
+        trace_bytes % TRACE_ENVELOPE_BYTES as u64,
+        0,
+        "trace bytes must be a whole number of {TRACE_ENVELOPE_BYTES}-byte envelopes"
+    );
+    assert_eq!(traced_comm.trace_mb, trace_bytes as f64 / 1e6);
+    assert_eq!(
+        traced_comm.total_bytes,
+        plain_comm.total_bytes + trace_bytes,
+        "traced wire bytes must exceed plain by exactly the envelope bytes"
+    );
+
+    // and the traced run actually left a causal trail: one JSONL file
+    // per party in the shared trace dir
+    for p in 0..PARTIES {
+        let path = dir.join(format!("party-{p}.jsonl"));
+        assert!(path.exists(), "missing trace file {}", path.display());
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -3,14 +3,29 @@
 
 Trace mode::
 
-    check_trace.py TRACE_DIR --parties N [--iters N]
+    check_trace.py TRACE_DIR --parties N [--iters N] [--require-wire]
 
 Checks every ``party-*.jsonl`` file written by ``--trace-dir``:
 
 - every line is a flat JSON object of scalars (the trace schema) with a
   string ``kind`` and an integer ``party`` matching the file name;
+- the first thing each party logs is its ``clock`` anchor record
+  (``epoch_unix_s``), which maps the party's monotonic timestamps onto
+  the shared wall clock;
 - span records carry ``stage``/``t``/``wall_s`` plus the HE counter
   fields (``ct_exps``, ``mont_sqrs``, ``mont_muls``, ``mont_work``);
+- ``send``/``recv`` wire events carry the trace-context envelope fields
+  (``tag``, ``t``, ``stage``, ``span_id``, ``seq``, ``bytes``,
+  ``ts_s``) and each party's event timestamps are monotonic;
+- **cross-party causality**: every ``recv`` links to a ``send`` in the
+  sender's file with the same ``(from, to, seq)``, matching tag and
+  ``span_id``, the linked span exists in the sender's file (span id 0
+  means the frame left outside any open span), and after
+  clock alignment no message arrives before it was sent (within
+  ``--skew-tolerance`` seconds);
+- ``clock_align`` records (per-peer ``offset_s``/``rtt_s`` from the
+  control-plane ping exchange) are schema-checked; ``--require-wire``
+  demands at least one send, one recv and one clock_align per party;
 - for every iteration a party traced, all four pipeline stages appear,
   with at least one protocol round span (``stage == "proto"``);
 - with ``--iters N``, the traced iterations are exactly ``0..N-1``.
@@ -23,6 +38,15 @@ Scrapes the URL once and parses the body as Prometheus text exposition
 (comment lines, or ``name[{labels}] value`` samples);
 ``--require-samples`` additionally demands at least one ``efmvfl_``
 sample line.
+
+Perfetto mode::
+
+    check_trace.py --perfetto FILE
+
+Validates a Chrome trace-event JSON file exported by
+``report --perfetto`` (what ui.perfetto.dev opens): a ``traceEvents``
+array of ``M``/``X``/``s``/``f`` events with sane pids/timestamps and
+every flow-begin (``s``) paired with a flow-end (``f``).
 """
 
 import argparse
@@ -33,6 +57,7 @@ import urllib.request
 
 PIPELINE_STAGES = ["prepare", "mask_encrypt", "exchange", "combine"]
 COUNTER_FIELDS = ["ct_exps", "mont_sqrs", "mont_muls", "mont_work"]
+WIRE_FIELDS = ["tag", "t", "stage", "span_id", "seq", "bytes", "ts_s"]
 SAMPLE_RE = re.compile(r"^[A-Za-z_:][A-Za-z0-9_:]*(\{[^{}]*\})?$")
 
 
@@ -74,50 +99,161 @@ def check_record(where, rec):
             v = rec.get(field)
             if not isinstance(v, int) or v < 0:
                 fail(f"{where}: net event without {field!r}")
+    elif kind in ("send", "recv"):
+        peer = rec.get("to" if kind == "send" else "from")
+        if not isinstance(peer, int) or peer < 0:
+            fail(f"{where}: {kind} event without its peer party")
+        for field in WIRE_FIELDS:
+            v = rec.get(field)
+            if field in ("tag", "stage"):
+                if not isinstance(v, str) or not v:
+                    fail(f"{where}: {kind} event without string {field!r}")
+            elif field == "ts_s":
+                if not isinstance(v, (int, float)) or v < 0:
+                    fail(f"{where}: {kind} event without timestamp 'ts_s'")
+            elif not isinstance(v, int) or v < 0:
+                fail(f"{where}: {kind} event without {field!r}")
+    elif kind == "clock":
+        epoch = rec.get("epoch_unix_s")
+        if not isinstance(epoch, (int, float)) or epoch <= 0:
+            fail(f"{where}: clock record without 'epoch_unix_s'")
+    elif kind == "clock_align":
+        peer = rec.get("peer")
+        if not isinstance(peer, int) or peer < 0:
+            fail(f"{where}: clock_align without 'peer'")
+        if not isinstance(rec.get("offset_s"), (int, float)):
+            fail(f"{where}: clock_align without 'offset_s'")
+        rtt = rec.get("rtt_s")
+        if not isinstance(rtt, (int, float)) or rtt < 0:
+            fail(f"{where}: clock_align without non-negative 'rtt_s'")
     return kind, party
 
 
-def check_trace_dir(trace_dir, parties, iters):
+def check_party_file(path, party):
+    """Per-file checks; return this party's parsed view for linkage."""
+    view = {
+        "epoch": None,
+        "span_ids": set(),
+        "sends": {},   # (from, to, seq) -> send record
+        "recvs": [],   # recv records (with file position for messages)
+        "counts": {"send": 0, "recv": 0, "clock_align": 0},
+        "stage_cover": set(),
+        "proto_rounds": set(),
+        "iterations": set(),
+        "records": 0,
+    }
+    last_ts = 0.0
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        where = f"{path}:{lineno}"
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"{where}: not JSON: {e}")
+        kind, rec_party = check_record(where, rec)
+        if rec_party != party:
+            fail(f"{where}: party {rec_party} record in party {party}'s file")
+        view["records"] += 1
+        if kind == "clock":
+            if view["epoch"] is None:
+                view["epoch"] = rec["epoch_unix_s"]
+        elif kind == "span":
+            t = rec["t"]
+            view["span_ids"].add(rec["span_id"])
+            view["stage_cover"].add((rec["stage"], t))
+            view["iterations"].add(t)
+            if rec["stage"] == "proto":
+                view["proto_rounds"].add(t)
+        elif kind in ("send", "recv"):
+            view["counts"][kind] += 1
+            # a party's wire events are written in the order they happen
+            # on its own monotonic clock
+            if rec["ts_s"] < last_ts:
+                fail(f"{where}: {kind} timestamp went backwards "
+                     f"({rec['ts_s']} after {last_ts})")
+            last_ts = rec["ts_s"]
+            if kind == "send":
+                key = (party, rec["to"], rec["seq"])
+                if key in view["sends"]:
+                    fail(f"{where}: duplicate send seq {rec['seq']} to "
+                         f"party {rec['to']}")
+                view["sends"][key] = rec
+            else:
+                view["recvs"].append((where, rec))
+        elif kind == "clock_align":
+            view["counts"]["clock_align"] += 1
+    if view["epoch"] is None:
+        fail(f"{path}: no clock anchor record (epoch_unix_s)")
+    if not view["iterations"]:
+        fail(f"{path}: no spans at all")
+    return view
+
+
+def check_linkage(views, skew_tolerance):
+    """Cross-party pass: every recv pairs with its send, causally."""
+    epochs = {p: v["epoch"] for p, v in views.items()}
+    base = min(epochs.values())
+    linked = 0
+    for party, view in views.items():
+        shift_recv = epochs[party] - base
+        for where, rec in view["recvs"]:
+            sender = rec["from"]
+            if sender not in views:
+                fail(f"{where}: recv from unknown party {sender}")
+            key = (sender, party, rec["seq"])
+            send = views[sender]["sends"].get(key)
+            if send is None:
+                fail(f"{where}: recv seq {rec['seq']} from party {sender} "
+                     f"has no matching send in the sender's trace")
+            if send["tag"] != rec["tag"]:
+                fail(f"{where}: recv tag {rec['tag']!r} but the linked "
+                     f"send carried {send['tag']!r}")
+            if send["span_id"] != rec["span_id"]:
+                fail(f"{where}: recv span_id {rec['span_id']} but the "
+                     f"linked send carried {send['span_id']}")
+            # span_id 0 = the frame left outside any open span (setup
+            # traffic); anything else must name a span the sender logged
+            if rec["span_id"] != 0 and rec["span_id"] not in views[sender]["span_ids"]:
+                fail(f"{where}: linked span_id {rec['span_id']} never "
+                     f"finished in party {sender}'s trace")
+            sent_at = send["ts_s"] + (epochs[sender] - base)
+            recv_at = rec["ts_s"] + shift_recv
+            if recv_at + skew_tolerance < sent_at:
+                fail(f"{where}: message received {sent_at - recv_at:.6f}s "
+                     f"before it was sent (aligned clocks, tolerance "
+                     f"{skew_tolerance}s)")
+            linked += 1
+    return linked
+
+
+def check_trace_dir(trace_dir, parties, iters, require_wire, skew_tolerance):
     import pathlib
 
     root = pathlib.Path(trace_dir)
-    records = 0
+    views = {}
     for party in range(parties):
         path = root / f"party-{party}.jsonl"
         if not path.is_file():
             fail(f"missing trace file {path}")
-        # (stage, t) pairs and the iterations with a protocol round
-        stage_cover = set()
-        proto_rounds = set()
-        iterations = set()
-        for lineno, line in enumerate(path.read_text().splitlines(), 1):
-            where = f"{path}:{lineno}"
-            try:
-                rec = json.loads(line)
-            except json.JSONDecodeError as e:
-                fail(f"{where}: not JSON: {e}")
-            kind, rec_party = check_record(where, rec)
-            if rec_party != party:
-                fail(f"{where}: party {rec_party} record in party {party}'s file")
-            records += 1
-            if kind == "span":
-                t = rec["t"]
-                stage_cover.add((rec["stage"], t))
-                iterations.add(t)
-                if rec["stage"] == "proto":
-                    proto_rounds.add(t)
-        if not iterations:
-            fail(f"{path}: no spans at all")
-        if iters is not None and iterations != set(range(iters)):
-            fail(f"{path}: traced iterations {sorted(iterations)}, expected 0..{iters - 1}")
-        for t in sorted(iterations):
+        view = check_party_file(path, party)
+        if iters is not None and view["iterations"] != set(range(iters)):
+            fail(f"{path}: traced iterations {sorted(view['iterations'])}, "
+                 f"expected 0..{iters - 1}")
+        for t in sorted(view["iterations"]):
             for stage in PIPELINE_STAGES:
-                if (stage, t) not in stage_cover:
+                if (stage, t) not in view["stage_cover"]:
                     fail(f"{path}: no {stage!r} span for iteration {t}")
-            if t not in proto_rounds:
+            if t not in view["proto_rounds"]:
                 fail(f"{path}: no protocol round span for iteration {t}")
+        if require_wire:
+            for kind in ("send", "recv", "clock_align"):
+                if view["counts"][kind] == 0:
+                    fail(f"{path}: --require-wire but no {kind} records")
+        views[party] = view
+    linked = check_linkage(views, skew_tolerance)
+    records = sum(v["records"] for v in views.values())
     print(f"check_trace: OK: {records} records, {parties} parties, "
-          f"all {len(PIPELINE_STAGES)} stages covered")
+          f"all {len(PIPELINE_STAGES)} stages covered, "
+          f"{linked} recv events causally linked")
 
 
 def check_metrics(url, require_samples):
@@ -145,21 +281,83 @@ def check_metrics(url, require_samples):
     print(f"check_trace: OK: {samples} Prometheus samples from {url}")
 
 
+def check_perfetto(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: not readable JSON: {e}")
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        fail(f"{path}: no 'traceEvents' array (not Chrome trace-event JSON)")
+    events = doc["traceEvents"]
+    slices = 0
+    flow_begin = set()
+    flow_end = set()
+    for i, ev in enumerate(events):
+        where = f"{path}: traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            fail(f"{where}: event is not an object")
+        ph = ev.get("ph")
+        if ph not in ("M", "X", "s", "f"):
+            fail(f"{where}: unexpected phase {ph!r}")
+        pid = ev.get("pid")
+        if not isinstance(pid, int) or pid < 0:
+            fail(f"{where}: missing or bad 'pid'")
+        if ph == "M":
+            if ev.get("name") != "process_name":
+                fail(f"{where}: metadata event is not a process_name")
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            fail(f"{where}: missing or negative 'ts'")
+        if ph == "X":
+            if not isinstance(ev.get("name"), str) or not ev["name"]:
+                fail(f"{where}: slice without a 'name'")
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                fail(f"{where}: slice without non-negative 'dur'")
+            slices += 1
+        else:
+            fid = ev.get("id")
+            if not isinstance(fid, int) or fid < 0:
+                fail(f"{where}: flow event without an integer 'id'")
+            (flow_begin if ph == "s" else flow_end).add(fid)
+            if ph == "f" and ev.get("bp") != "e":
+                fail(f"{where}: flow end without bp='e' (Perfetto drops it)")
+    if slices == 0:
+        fail(f"{path}: no 'X' slices at all")
+    if flow_begin != flow_end:
+        odd = sorted(flow_begin ^ flow_end)[:5]
+        fail(f"{path}: unpaired flow ids (e.g. {odd})")
+    print(f"check_trace: OK: {path}: {slices} slices, "
+          f"{len(flow_begin)} flow pairs, {len(events)} events")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("trace_dir", nargs="?", help="directory written by --trace-dir")
     ap.add_argument("--parties", type=int, default=3)
     ap.add_argument("--iters", type=int, help="require iterations 0..N-1 exactly")
+    ap.add_argument("--require-wire", action="store_true",
+                    help="demand send/recv/clock_align records per party")
+    ap.add_argument("--skew-tolerance", type=float, default=0.02,
+                    help="max allowed recv-before-send after clock "
+                         "alignment, seconds (default 0.02)")
     ap.add_argument("--metrics", help="scrape and parse this /metrics URL")
     ap.add_argument("--require-samples", action="store_true",
                     help="with --metrics: demand at least one efmvfl_ sample")
+    ap.add_argument("--perfetto", metavar="FILE",
+                    help="validate a Chrome trace-event JSON export")
     args = ap.parse_args()
-    if not args.trace_dir and not args.metrics:
-        ap.error("give a TRACE_DIR, --metrics URL, or both")
+    if not args.trace_dir and not args.metrics and not args.perfetto:
+        ap.error("give a TRACE_DIR, --metrics URL, --perfetto FILE, or several")
     if args.trace_dir:
-        check_trace_dir(args.trace_dir, args.parties, args.iters)
+        check_trace_dir(args.trace_dir, args.parties, args.iters,
+                        args.require_wire, args.skew_tolerance)
     if args.metrics:
         check_metrics(args.metrics, args.require_samples)
+    if args.perfetto:
+        check_perfetto(args.perfetto)
 
 
 if __name__ == "__main__":

@@ -12,8 +12,31 @@ trap 'rm -rf "$OUT"' EXIT
 echo "== traced 3-party training run =="
 "$BIN" train --parties 3 --samples 400 --features 8 --iters 3 --key-bits 256 \
     --batch 128 --trace-dir "$OUT/trace" --save "$OUT/model.efmv"
-python3 scripts/check_trace.py "$OUT/trace" --parties 3 --iters 3
+python3 scripts/check_trace.py "$OUT/trace" --parties 3 --iters 3 --require-wire
 "$BIN" report --trace-dir "$OUT/trace"
+
+echo "== traced 3-party distributed run (real TCP) + fused critical path =="
+cat > "$OUT/dist.toml" <<'EOF'
+model = "lr"
+seed = 11
+iterations = 3
+key_bits = 256
+batch_size = 64
+[roster]
+0 = "127.0.0.1:7310"
+1 = "127.0.0.1:7311"
+2 = "127.0.0.1:7312"
+EOF
+"$BIN" run-distributed --config "$OUT/dist.toml" --samples 300 --features 6 \
+    --trace-dir "$OUT/dtrace"
+# every recv must link to its sender's span, clocks aligned, wire events present
+python3 scripts/check_trace.py "$OUT/dtrace" --parties 3 --iters 3 --require-wire
+# fused causal DAG: the report must name a bottleneck for each iteration
+"$BIN" report --trace-dir "$OUT/dtrace" --critical-path | tee "$OUT/critical.txt"
+grep -q "bottleneck:" "$OUT/critical.txt"
+# Perfetto export: valid Chrome trace-event JSON with paired flows
+"$BIN" report --trace-dir "$OUT/dtrace" --perfetto "$OUT/dtrace.json"
+python3 scripts/check_trace.py --perfetto "$OUT/dtrace.json"
 
 echo "== serve mesh with a live /metrics endpoint =="
 cat > "$OUT/serve.toml" <<'EOF'
